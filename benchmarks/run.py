@@ -1,0 +1,207 @@
+"""Benchmark harness: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.  Empirical timings are the
+XLA-compiled jnp path on the host CPU (this container); `derived` carries
+the model prediction(s) — paper-CPU / paper-GPU / TPU-v5e — so every row
+pairs a measurement with the bandwidth-saturation model the paper uses.
+
+  PYTHONPATH=src python -m benchmarks.run             # all tables
+  PYTHONPATH=src python -m benchmarks.run fig12 fig16 # subset
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.cost import model as M
+from repro.kernels import ref
+from repro.sql import engine, ssb
+
+ROWS = []
+
+
+def emit(name: str, us: float, derived: str = ""):
+    ROWS.append((name, us, derived))
+    print(f"{name},{us:.2f},{derived}")
+
+
+def timeit(fn, *args, warmup=2, iters=5) -> float:
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+# ---------------------------------------------------------------------------
+
+
+def fig3_coprocessor():
+    """Fig. 3: coprocessor model vs CPU — model-based, SF20 Q1.1."""
+    n = 120_000_000
+    cop = M.coprocessor_time(4 * 4 * n) * 1e6
+    cpu = M.q1_time(n, M.PAPER_CPU) * 1e6
+    gpu = M.q1_time(n, M.PAPER_GPU) * 1e6
+    emit("fig3.q1_coprocessor_model", cop, "PCIe-bound")
+    emit("fig3.q1_cpu_model", cpu,
+         f"coprocessor_loses={cop > cpu}")
+    emit("fig3.q1_gpu_resident_model", gpu,
+         f"resident_speedup_vs_cpu={cpu / gpu:.1f}x")
+
+
+def fig9_tile_sweep():
+    """Fig. 9: tile-size sweep.  Without hardware, report the structural
+    quantities that drive the figure: VMEM working set per tile and the
+    grid-step count (DMA efficiency), plus the paper's best config."""
+    n = 1 << 20
+    for tile in (256, 512, 1024, 2048, 4096, 8192):
+        vmem = 2 * tile * 4  # x + compacted tile double-buffered
+        steps = n // tile
+        emit(f"fig9.tile_{tile}", 0.0,
+             f"vmem_bytes={vmem};grid_steps={steps};"
+             f"items_per_lane={tile // 128};paper_best=2048")
+
+
+def fig10_project():
+    """Fig. 10: Q1/Q2 projection, measured + models."""
+    n = 1 << 24
+    k = jax.random.PRNGKey(0)
+    x1 = jax.random.normal(k, (n,), jnp.float32)
+    x2 = jax.random.normal(jax.random.fold_in(k, 1), (n,), jnp.float32)
+    f_q1 = jax.jit(lambda a, b: ref.project(a, b, 2.0, 3.0, False))
+    f_q2 = jax.jit(lambda a, b: ref.project(a, b, 2.0, 3.0, True))
+    for name, fn in (("q1_linear", f_q1), ("q2_sigmoid", f_q2)):
+        us = timeit(fn, x1, x2)
+        mc = M.project_time(n, M.PAPER_CPU) * 1e6
+        mg = M.project_time(n, M.PAPER_GPU) * 1e6
+        mt = M.project_time(n, M.TPU_V5E) * 1e6
+        emit(f"fig10.{name}", us,
+             f"model_cpu={mc:.0f};model_gpu={mg:.0f};model_tpu={mt:.0f};"
+             f"gpu_speedup={mc / mg:.1f}x")
+
+
+def fig12_select():
+    """Fig. 12: selection scan over selectivity 0..1."""
+    n = 1 << 24
+    k = jax.random.PRNGKey(0)
+    x = jax.random.uniform(k, (n,), jnp.float32)
+    y = jax.random.normal(jax.random.fold_in(k, 1), (n,), jnp.float32)
+    fn = jax.jit(lambda x, y, v: ref.select_scan(x, y, -1.0, v)[0])
+    for sel in (0.1, 0.5, 0.9):
+        us = timeit(fn, x, y, jnp.float32(sel))
+        mc = M.select_time(n, sel, M.PAPER_CPU) * 1e6
+        mg = M.select_time(n, sel, M.PAPER_GPU) * 1e6
+        mt = M.select_time(n, sel, M.TPU_V5E) * 1e6
+        emit(f"fig12.select_sel{sel}", us,
+             f"model_cpu={mc:.0f};model_gpu={mg:.0f};model_tpu={mt:.0f};"
+             f"gpu_speedup={mc / mg:.1f}x")
+
+
+def fig13_join():
+    """Fig. 13: probe vs hash-table size (cache step function)."""
+    n_probe = 1 << 22
+    k = jax.random.PRNGKey(0)
+    vals = jax.random.randint(jax.random.fold_in(k, 1), (n_probe,), 0, 100,
+                              jnp.int32)
+    fn = jax.jit(ref.probe_agg)
+    for ht_kb in (8, 256, 4096, 65536):
+        n_build = max(16, ht_kb * 1024 // 8 // 2)  # 50% fill
+        n_slots = engine.next_pow2(n_build)
+        htk, htv = engine.np_build(np.arange(n_build, dtype=np.int32),
+                                   np.arange(n_build, dtype=np.int32),
+                                   n_slots)
+        probe = jax.random.randint(k, (n_probe,), 0, n_build, jnp.int32)
+        us = timeit(fn, probe, vals, jnp.asarray(htk), jnp.asarray(htv),
+                    iters=3)
+        ht_bytes = ht_kb * 1024.0
+        mc = M.join_probe_time(n_probe, ht_bytes, M.PAPER_CPU) * 1e6
+        mg = M.join_probe_time(n_probe, ht_bytes, M.PAPER_GPU) * 1e6
+        mt = M.join_probe_time(n_probe, ht_bytes, M.TPU_V5E) * 1e6
+        emit(f"fig13.join_ht{ht_kb}kb", us,
+             f"model_cpu={mc:.0f};model_gpu={mg:.0f};model_tpu={mt:.0f};"
+             f"gpu_speedup={mc / mg:.1f}x")
+
+
+def fig14_radix():
+    """Fig. 14: radix partition passes (stable oracle measured + model)."""
+    n = 1 << 22
+    k = jax.random.PRNGKey(0)
+    keys = jax.random.randint(k, (n,), 0, 2**31 - 1, jnp.int32)
+    vals = jnp.arange(n, dtype=jnp.int32)
+    for r in (4, 6, 8):
+        fn = jax.jit(lambda kk, vv, r=r: ref.partition(kk, vv, 0, r))
+        us = timeit(fn, keys, vals, iters=3)
+        mc = M.radix_pass_time(n, M.PAPER_CPU) * 1e6
+        mg = M.radix_pass_time(n, M.PAPER_GPU) * 1e6
+        mt = M.radix_pass_time(n, M.TPU_V5E) * 1e6
+        emit(f"fig14.partition_r{r}", us,
+             f"model_cpu={mc:.0f};model_gpu={mg:.0f};model_tpu={mt:.0f}")
+    mc32 = M.sort_time(1 << 28, M.PAPER_CPU) * 1e6
+    mg32 = M.sort_time(1 << 28, M.PAPER_GPU) * 1e6
+    emit("fig14.sort_2e28_model", 0.0,
+         f"model_cpu={mc32:.0f};model_gpu={mg32:.0f};"
+         f"speedup={mc32 / mg32:.1f}x;paper_measured=17.13x")
+
+
+def fig16_ssb(sf: float = 0.05):
+    """Fig. 16: full SSB, crystal pipeline (ref path) measured + models."""
+    db = ssb.generate(sf=sf, seed=7)
+    n_lo = db.lineorder.n_rows
+    qs = engine.ssb_queries()
+    for name, spec in qs.items():
+        us = timeit(lambda spec=spec: engine.run_query(db, spec, mode="ref"),
+                    warmup=1, iters=3)
+        if name.startswith("q1"):
+            mg = M.q1_time(n_lo, M.PAPER_GPU) * 1e6
+            mt = M.q1_time(n_lo, M.TPU_V5E) * 1e6
+            mc = M.q1_time(n_lo, M.PAPER_CPU) * 1e6
+        else:
+            part_ht = 2 * 4 * db.part.n_rows / 25 * 2.0
+            mg = M.q21_time(n_lo, db.supplier.n_rows, 2556, part_ht,
+                            M.PAPER_GPU) * 1e6
+            mt = M.q21_time(n_lo, db.supplier.n_rows, 2556, part_ht,
+                            M.TPU_V5E) * 1e6
+            mc = M.q21_time(n_lo, db.supplier.n_rows, 2556, part_ht,
+                            M.PAPER_CPU) * 1e6
+        emit(f"fig16.{name}", us,
+             f"model_cpu={mc:.0f};model_gpu={mg:.0f};model_tpu={mt:.0f};"
+             f"gpu_speedup={mc / mg:.1f}x")
+
+
+def table3_cost():
+    """Table 3: cost effectiveness (renting)."""
+    cpu_hr, gpu_hr = 0.504, 3.06
+    speedup = 25.0  # paper's measured SSB average
+    eff = speedup / (gpu_hr / cpu_hr)
+    emit("table3.cost_ratio", 0.0, f"gpu_vs_cpu_rent={gpu_hr / cpu_hr:.2f}x")
+    emit("table3.cost_effectiveness", 0.0,
+         f"speedup=25x;cost_eff={eff:.1f}x;paper_claim=4x")
+
+
+ALL = {
+    "fig3": fig3_coprocessor,
+    "fig9": fig9_tile_sweep,
+    "fig10": fig10_project,
+    "fig12": fig12_select,
+    "fig13": fig13_join,
+    "fig14": fig14_radix,
+    "fig16": fig16_ssb,
+    "table3": table3_cost,
+}
+
+
+def main() -> None:
+    which = sys.argv[1:] or list(ALL)
+    print("name,us_per_call,derived")
+    for w in which:
+        ALL[w]()
+
+
+if __name__ == "__main__":
+    main()

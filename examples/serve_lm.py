@@ -1,0 +1,17 @@
+"""Serve a small model with batched requests: prefill + decode loop with a
+KV/state cache, across architecture families (dense KV cache, Mamba2 O(1)
+state, whisper enc-dec cross-KV).
+
+    PYTHONPATH=src python examples/serve_lm.py
+"""
+import subprocess
+import sys
+
+for arch in ("qwen2-0.5b", "mamba2-2.7b", "whisper-medium"):
+    print(f"\n=== {arch} ===")
+    rc = subprocess.call([
+        sys.executable, "-m", "repro.launch.serve", "--arch", arch,
+        "--smoke", "--batch", "4", "--prompt-len", "16", "--gen", "24",
+    ])
+    if rc:
+        raise SystemExit(rc)

@@ -1,0 +1,54 @@
+"""End-to-end analytics driver (the paper's kind of workload): generate a
+Star Schema Benchmark database and serve all 13 queries through the
+Crystal fused-SPJA pipeline, verifying each against the numpy oracle and
+reporting throughput + the paper's bandwidth model predictions.
+
+    PYTHONPATH=src python examples/ssb_analytics.py --sf 0.05
+"""
+import argparse
+import time
+
+import numpy as np
+
+from repro.cost import model as M
+from repro.sql import engine, ssb
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--sf", type=float, default=0.05)
+    ap.add_argument("--mode", default="ref", choices=["ref", "kernel"])
+    args = ap.parse_args()
+
+    db = ssb.generate(sf=args.sf, seed=1)
+    n = db.lineorder.n_rows
+    print(f"SSB SF={args.sf}: lineorder={n:,} rows, "
+          f"part={db.part.n_rows:,}, supplier={db.supplier.n_rows:,}, "
+          f"customer={db.customer.n_rows:,}")
+    qs = engine.ssb_queries()
+    print(f"{'query':<6} {'ms':>9} {'Mrows/s':>9} {'model_tpu_ms':>13} "
+          f"{'check':>6}")
+    total_ms = 0.0
+    for name, spec in qs.items():
+        # warm
+        engine.run_query(db, spec, mode=args.mode)
+        t0 = time.perf_counter()
+        out = engine.run_query(db, spec, mode=args.mode)
+        dt = (time.perf_counter() - t0) * 1e3
+        total_ms += dt
+        oracle = engine.run_query_oracle(db, spec)
+        ok = np.allclose(out, oracle, rtol=1e-5, atol=1e-3)
+        if name.startswith("q1"):
+            model = M.q1_time(n, M.TPU_V5E) * 1e3
+        else:
+            model = M.q21_time(n, db.supplier.n_rows, 2556,
+                               2 * 4 * db.part.n_rows / 25 * 2,
+                               M.TPU_V5E) * 1e3
+        print(f"{name:<6} {dt:>9.2f} {n / dt / 1e3:>9.1f} {model:>13.3f} "
+              f"{'OK' if ok else 'FAIL':>6}")
+    print(f"total: {total_ms:.1f} ms for 13 queries "
+          f"(host CPU; model column = TPU-v5e bandwidth bound)")
+
+
+if __name__ == "__main__":
+    main()

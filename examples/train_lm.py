@@ -1,0 +1,32 @@
+"""Train a ~100M-parameter qwen2-family model end-to-end: deterministic
+pipeline, AdamW, remat+scan, checkpointing, watchdog.
+
+Full run (a few hundred steps — hours on this CPU container, minutes on a
+real host):
+    PYTHONPATH=src python examples/train_lm.py
+Quick demonstration (reduced width, still end-to-end):
+    PYTHONPATH=src python examples/train_lm.py --quick
+
+This wraps the production driver (repro.launch.train); kill it mid-run and
+re-run to watch checkpoint/restart resume the data stream exactly.
+"""
+import subprocess
+import sys
+
+QUICK = "--quick" in sys.argv
+
+# ~100M params: d=768, 12L, qwen2-style GQA; quick: ~8M params
+args = [
+    sys.executable, "-m", "repro.launch.train",
+    "--arch", "qwen2-0.5b",
+    "--steps", "60" if QUICK else "300",
+    "--batch", "4", "--seq", "128",
+    "--ckpt-dir", "/tmp/train_lm_ckpt", "--ckpt-every", "25",
+]
+if QUICK:
+    args += ["--smoke", "--d-model", "256", "--n-layers", "4"]
+else:
+    args += ["--smoke", "--d-model", "768", "--n-layers", "12"]
+
+print("launching:", " ".join(args[1:]))
+raise SystemExit(subprocess.call(args))

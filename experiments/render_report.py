@@ -1,0 +1,55 @@
+"""Render the §Roofline markdown table from a dryrun jsonl.
+
+  python experiments/render_report.py experiments/dryrun_v2.jsonl single
+"""
+import json
+import sys
+
+LEVERS = {
+    "compute": "raise arithmetic intensity (larger microbatch / less remat)",
+    "memory": "fuse/shrink activation traffic; int8 KV on decode",
+    "collective": "reduce TP collective volume (SP, fewer microbatches, "
+                  "comm overlap)",
+}
+
+
+def main(path: str, mesh: str = "single", tag: str = "v2"):
+    rows = []
+    skips = []
+    for line in open(path):
+        r = json.loads(line)
+        if r.get("mesh") != mesh or r.get("tag", "baseline") != tag:
+            continue
+        if r["status"] == "skip":
+            skips.append(r)
+            continue
+        if r["status"] != "ok":
+            continue
+        t = r["roofline"]
+        mem = t.get("memory_per_chip") or {}
+        rows.append({
+            "arch": r["arch"], "shape": r["shape"],
+            "Tc": t["t_compute"], "Tm": t["t_memory"],
+            "Tx": t["t_collective"], "dom": t["dominant"],
+            "useful": t["useful_flops_ratio"], "frac": t["peak_fraction"],
+            "model_flops": t["model_flops"],
+            "peak": (mem.get("peak_bytes") or 0) / 1e9,
+        })
+    print(f"| arch | shape | T_comp | T_mem | T_coll | dominant | "
+          f"MODEL_FLOPS | useful | frac | peak GB/chip | next lever |")
+    print("|---|---|---|---|---|---|---|---|---|---|---|")
+    for r in rows:
+        print(f"| {r['arch']} | {r['shape']} | {r['Tc']*1e3:.1f} ms | "
+              f"{r['Tm']*1e3:.1f} ms | {r['Tx']*1e3:.1f} ms | {r['dom']} | "
+              f"{r['model_flops']:.2e} | {r['useful']:.2f} | "
+              f"{r['frac']:.3f} | {r['peak']:.1f} | "
+              f"{LEVERS[r['dom']]} |")
+    for s in skips:
+        print(f"| {s['arch']} | {s['shape']} | — | — | — | — | — | — | — | "
+              f"— | {s['reason']} |")
+
+
+if __name__ == "__main__":
+    main(sys.argv[1] if len(sys.argv) > 1 else "experiments/dryrun_v2.jsonl",
+         sys.argv[2] if len(sys.argv) > 2 else "single",
+         sys.argv[3] if len(sys.argv) > 3 else "v2")

@@ -1,0 +1,209 @@
+"""Crystal block-wide functions (Table 1 of the paper), TPU-native.
+
+Each function operates on a *tile* — a fixed-size block of items that lives
+in VMEM inside a Pallas kernel (or is an ordinary jnp array in the pure-jnp
+execution path; the same code serves both because Pallas kernel bodies are
+jnp programs).
+
+Paper -> TPU mapping (DESIGN.md §2):
+  BlockLoad      pl.BlockSpec pipelined HBM->VMEM DMA (done by pallas_call);
+                 in the jnp path, a dynamic_slice
+  BlockPred      vectorized predicate -> bitmap (VPU)
+  BlockScan      prefix sum over the tile (jnp.cumsum; no warp tricks needed
+                 because the whole tile is resident)
+  BlockShuffle   compaction: scatter into cumsum-derived positions
+  BlockStore     masked / offset store back to HBM
+  BlockLookup    vectorized linear-probe of an open-addressing hash table
+  BlockAggregate tile-local reduction (+ group-by via one-hot matmul on MXU)
+
+The atomic-counter idiom of the paper is replaced by a *sequential-grid
+carry*: TPU Pallas grids execute in order on a core, so a scalar running
+offset lives in SMEM scratch — deterministic, contention-free, and it makes
+the compacted output STABLE (the paper's GPU output order is not).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+
+EMPTY = -2147483648  # open-addressing empty slot marker (python int: pallas
+                     # kernel bodies may not capture traced constants)
+
+
+# ---------------------------------------------------------------------------
+# predicates / scan / shuffle
+# ---------------------------------------------------------------------------
+
+
+def block_pred(tile: jax.Array, op: str, val) -> jax.Array:
+    """BlockPred: elementwise predicate -> int32 bitmap (1/0)."""
+    fns = {
+        "lt": lambda t: t < val,
+        "le": lambda t: t <= val,
+        "gt": lambda t: t > val,
+        "ge": lambda t: t >= val,
+        "eq": lambda t: t == val,
+        "ne": lambda t: t != val,
+    }
+    return fns[op](tile).astype(jnp.int32)
+
+
+def block_pred_range(tile: jax.Array, lo, hi) -> jax.Array:
+    """lo <= tile <= hi."""
+    return ((tile >= lo) & (tile <= hi)).astype(jnp.int32)
+
+
+def block_scan(bitmap: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """BlockScan: exclusive prefix sum + total over the tile."""
+    inc = jnp.cumsum(bitmap, dtype=jnp.int32)
+    return inc - bitmap, inc[-1]
+
+
+def block_shuffle(tile: jax.Array, bitmap: jax.Array,
+                  offsets: jax.Array) -> jax.Array:
+    """BlockShuffle: compact matched entries to the front of the tile.
+
+    Unmatched slots keep an arbitrary (last) value — callers only consume
+    the first `total` entries.  Scatter stays inside the VMEM-resident tile.
+    """
+    n = tile.shape[0]
+    idx = jnp.where(bitmap > 0, offsets, n - 1)
+    out = jnp.zeros_like(tile).at[idx].set(tile, mode="drop")
+    return out
+
+
+def block_compact(tile: jax.Array, bitmap: jax.Array
+                  ) -> Tuple[jax.Array, jax.Array]:
+    """pred+scan+shuffle in one call: (compacted tile, count)."""
+    offsets, total = block_scan(bitmap)
+    return block_shuffle(tile, bitmap, offsets), total
+
+
+def block_load_sel(tile: jax.Array, bitmap: jax.Array,
+                   offsets: jax.Array) -> jax.Array:
+    """BlockLoadSel: gather only matched entries of a loaded tile into a
+    compacted prefix (the per-tile half of selective loading).
+
+    The *cross-tile* half — not reading unmatched tiles from HBM at all
+    (the paper's skip-cache-lines term, §5.3 r1) — is done at the kernel
+    level with scalar-prefetch tile indirection: see
+    kernels/select_scan.py:select_scan_sparse."""
+    return block_shuffle(tile, bitmap, offsets)
+
+
+# ---------------------------------------------------------------------------
+# hash table (open addressing, linear probing — paper §4.3)
+# ---------------------------------------------------------------------------
+
+
+def hash_fn(keys: jax.Array, n_slots: int) -> jax.Array:
+    """Multiplicative hash into [0, n_slots). n_slots is a power of two."""
+    h = keys.astype(jnp.uint32) * jnp.uint32(2654435761)
+    return (h & jnp.uint32(n_slots - 1)).astype(jnp.int32)
+
+
+def block_lookup(keys: jax.Array, ht_keys: jax.Array, ht_vals: jax.Array
+                 ) -> Tuple[jax.Array, jax.Array]:
+    """BlockLookup: find each key's payload by vectorized linear probing.
+
+    Returns (payload, found_bitmap).  All lanes probe in lock-step; the
+    while_loop runs until every lane hit its key or an empty slot (the
+    TPU analogue of the paper's per-thread probe loop — probes are gathers
+    against the table, whose residency (VMEM vs HBM) is the TPU version of
+    the paper's L2-cache step function).
+    """
+    n_slots = ht_keys.shape[0]
+    slot = hash_fn(keys, n_slots)
+
+    def cond(state):
+        _, _, done, _ = state
+        return ~jnp.all(done)
+
+    def body(state):
+        slot, payload, done, found = state
+        k_at = ht_keys[slot]
+        hit = k_at == keys
+        empty = k_at == EMPTY
+        payload = jnp.where(hit & ~done, ht_vals[slot], payload)
+        found = found | (hit & ~done)
+        done = done | hit | empty
+        slot = jnp.where(done, slot, (slot + 1) & (n_slots - 1))
+        return slot, payload, done, found
+
+    payload0 = jnp.zeros_like(ht_vals, shape=keys.shape)
+    done0 = jnp.zeros(keys.shape, bool)
+    _, payload, _, found = jax.lax.while_loop(
+        cond, body, (slot, payload0, done0, done0))
+    return payload, found.astype(jnp.int32)
+
+
+def build_hash_table(keys: jax.Array, vals: jax.Array, n_slots: int,
+                     valid: jax.Array | None = None
+                     ) -> Tuple[jax.Array, jax.Array]:
+    """Sequential-insert open-addressing build (jnp path).
+
+    The paper's parallel build uses CAS; the TPU-native build exploits the
+    sequential grid instead (kernels/hash_join.py).  This jnp version is the
+    oracle and the host-side path for small dimension tables.
+    """
+    ht_keys = jnp.full((n_slots,), EMPTY, keys.dtype)
+    ht_vals = jnp.zeros((n_slots,), vals.dtype)
+
+    def insert(i, state):
+        hk, hv = state
+        k, v = keys[i], vals[i]
+        ok = jnp.bool_(True) if valid is None else valid[i] > 0
+
+        def do_insert(hk_hv):
+            hk, hv = hk_hv
+            slot0 = hash_fn(k[None], n_slots)[0]
+
+            def cond(s):
+                return hk[s] != EMPTY
+
+            def body(s):
+                return (s + 1) & (n_slots - 1)
+
+            s = jax.lax.while_loop(cond, body, slot0)
+            return hk.at[s].set(k), hv.at[s].set(v)
+
+        return jax.lax.cond(ok, do_insert, lambda t: t, (hk, hv))
+
+    return jax.lax.fori_loop(0, keys.shape[0], insert, (ht_keys, ht_vals))
+
+
+# ---------------------------------------------------------------------------
+# aggregation
+# ---------------------------------------------------------------------------
+
+
+def block_aggregate(vals: jax.Array, bitmap: jax.Array | None = None,
+                    op: str = "sum") -> jax.Array:
+    """BlockAggregate: tile-local reduction (fp64-free, int64-free)."""
+    if bitmap is not None:
+        vals = jnp.where(bitmap > 0, vals, 0 if op == "sum" else vals)
+    if op == "sum":
+        return jnp.sum(vals)
+    if op == "min":
+        return jnp.min(vals)
+    if op == "max":
+        return jnp.max(vals)
+    if op == "count":
+        return jnp.sum(bitmap)
+    raise ValueError(op)
+
+
+def block_group_aggregate(group_ids: jax.Array, vals: jax.Array,
+                          bitmap: jax.Array, n_groups: int) -> jax.Array:
+    """Group-by-sum over a tile via scatter-add (TPU: one-hot matmul on MXU
+    in the Pallas kernel; here the jnp scatter is equivalent).
+
+    group_ids: (T,) int32 in [0, n_groups); returns (n_groups,) partial sums.
+    """
+    contrib = jnp.where(bitmap > 0, vals, 0)
+    safe = jnp.where(bitmap > 0, group_ids, 0)
+    return jnp.zeros((n_groups,), vals.dtype).at[safe].add(
+        jnp.where(bitmap > 0, contrib, 0))

@@ -1,0 +1,46 @@
+"""Mesh-aware sharding constraints usable from model code.
+
+Model code never imports a concrete mesh; it states *intent*
+(``constrain(x, "batch", None, "model")``) and the helper resolves intent
+against the ambient abstract mesh (set by ``jax.sharding.set_mesh`` in the
+launchers).  Outside any mesh context this is a no-op, so unit tests on a
+single CPU device run the exact same model code.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import jax
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+
+def _ambient_axes():
+    try:
+        am = jax.sharding.get_abstract_mesh()
+    except Exception:  # noqa: BLE001
+        return None
+    if am is None or getattr(am, "empty", False) or not am.axis_names:
+        return None
+    return am
+
+
+def constrain(x: jax.Array, *dims: Optional[str]) -> jax.Array:
+    """dims per array axis: "batch" (all non-model axes), "model", or None."""
+    am = _ambient_axes()
+    if am is None:
+        return x
+    names = am.axis_names
+    sizes = dict(am.shape)
+    spec = []
+    for d, n in zip(dims, x.shape):
+        if d == "batch":
+            axes = tuple(a for a in names if a != "model")
+            tot = int(np.prod([sizes[a] for a in axes])) if axes else 0
+            spec.append(axes if axes and tot and n % tot == 0 else None)
+        elif d == "model":
+            ok = "model" in names and n % sizes["model"] == 0
+            spec.append("model" if ok else None)
+        else:
+            spec.append(None)
+    return jax.lax.with_sharding_constraint(x, P(*spec))

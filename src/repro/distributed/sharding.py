@@ -1,0 +1,227 @@
+"""Sharding rules: DP / TP / EP / SP over the production mesh.
+
+Axis convention (see launch/mesh.py):
+  * "model"             — tensor/expert parallel axis (16-way)
+  * "data" (+ "pod")    — data-parallel axes; batch shards over all of them
+
+Rules are path-based over the params pytree so one rule set covers all 10
+architectures.  KV caches are sequence-sharded over "model" (the only layout
+that scales to the 524k-token cells); heads-sharding is explored as a perf
+hillclimb (EXPERIMENTS.md §Perf).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def dp_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in mesh.axis_names if a != "model")
+
+
+def dp_size(mesh: Mesh) -> int:
+    return int(np.prod([mesh.shape[a] for a in dp_axes(mesh)]))
+
+
+def _batch_axis(mesh: Mesh, b: int):
+    """Shard batch over all dp axes when divisible, else leave replicated."""
+    return dp_axes(mesh) if b % dp_size(mesh) == 0 else None
+
+
+# ---------------------------------------------------------------------------
+# parameter rules
+# ---------------------------------------------------------------------------
+
+_STACKED_ROOTS = ("layers", "enc_layers", "dec_layers")
+
+
+def _param_rule(names: Sequence[str], q_ok: bool, kv_ok: bool,
+                ssm_ok: bool) -> Tuple[Optional[str], ...]:
+    """Base partition spec (without the stacked-layer axis).
+
+    Attention is sharded by *heads* only when the head count divides the
+    model axis (q_ok / kv_ok); otherwise the projection shards its d_model
+    input dim (Megatron fallback: local partial matmul + psum, activations
+    replicated over "model").  Flat-dim sharding that crosses head
+    boundaries is never produced — GSPMD responds to that with full
+    replication plus giant reshard collectives (measured: 50x byte blowup).
+    """
+    name = names[-1]
+    in_moe = any(n == "moe" for n in names)
+    in_mamba = any(n == "mamba" for n in names)
+    if name == "embed":
+        return ("model", None)
+    if name == "unembed":
+        return (None, "model")
+    if name == "wq":
+        return (None, "model") if q_ok else ("model", None)
+    if name in ("wk", "wv"):
+        return (None, "model") if kv_ok else ("model", None)
+    if name == "wo":
+        return ("model", None)
+    if name == "bq":
+        return ("model",) if q_ok else (None,)
+    if name in ("bk", "bv"):
+        return ("model",) if kv_ok else (None,)
+    if name in ("q_norm", "k_norm"):
+        return (None,)
+    if name == "router":
+        return (None, None)
+    if name in ("w_gate", "w_up"):
+        return ("model", None, None) if in_moe else (None, "model")
+    if name == "w_down":
+        return ("model", None, None) if in_moe else ("model", None)
+    if name in ("z_proj", "x_proj"):
+        return (None, "model") if ssm_ok else ("model", None)
+    if name in ("b_proj", "c_proj"):
+        return (None, None)
+    if name == "dt_proj":
+        return (None, "model") if ssm_ok else (None, None)
+    if name == "conv_x":
+        return (None, "model") if ssm_ok else (None, None)
+    if name == "conv_x_b":
+        return ("model",) if ssm_ok else (None,)
+    if name in ("conv_bc", "conv_bc_b"):
+        return (None,) * (2 if name == "conv_bc" else 1)
+    if name in ("A_log", "dt_bias", "D"):
+        return ("model",) if ssm_ok else (None,)
+    if name == "norm" and in_mamba:
+        return ("model",) if ssm_ok else (None,)
+    if name == "out_proj":
+        return ("model", None) if ssm_ok else (None, None)
+    # norms / scalars / anything else: replicated
+    return None
+
+
+def _path_names(path) -> Tuple[str, ...]:
+    names = []
+    for e in path:
+        if hasattr(e, "key"):
+            names.append(str(e.key))
+        elif hasattr(e, "name"):
+            names.append(str(e.name))
+    return tuple(names)
+
+
+def param_pspecs(params_tree, cfg=None, tp: int = 16) -> Any:
+    """PartitionSpec pytree matching ``params_tree`` (arrays or SDS)."""
+    q_ok = bool(cfg and cfg.n_heads % tp == 0)
+    kv_ok = bool(cfg and cfg.n_kv_heads % tp == 0)
+    ssm_ok = bool(cfg and cfg.family in ("ssm", "hybrid")
+                  and cfg.ssm_heads % tp == 0 and cfg.d_inner % tp == 0)
+
+    def rule(path, leaf):
+        names = _path_names(path)
+        base = _param_rule(names, q_ok, kv_ok, ssm_ok)
+        ndim = len(leaf.shape)
+        if base is None:
+            base = (None,) * ndim
+        base = tuple(base)
+        if names and names[0] in _STACKED_ROOTS:
+            base = (None,) + base
+        # pad/trim defensively to leaf rank
+        if len(base) < ndim:
+            base = base + (None,) * (ndim - len(base))
+        base = base[:ndim]
+        return P(*base)
+
+    return jax.tree_util.tree_map_with_path(rule, params_tree)
+
+
+def zero1_pspecs(param_specs, params_tree, mesh: Mesh) -> Any:
+    """ZeRO-1: additionally shard optimizer-state leaves over the dp axes.
+
+    Picks the first unsharded axis divisible by dp_size; falls back to the
+    param spec when nothing divides.
+    """
+    dsize = dp_size(mesh)
+    daxes = dp_axes(mesh)
+
+    def rule(spec, leaf):
+        dims = list(spec)
+        dims += [None] * (len(leaf.shape) - len(dims))
+        flat_axes = set()
+        for d in dims:
+            for a in (d if isinstance(d, tuple) else (d,)):
+                flat_axes.add(a)
+        if flat_axes & set(daxes):
+            return P(*dims)  # already dp-sharded (e.g. fsdp param spec)
+        for i, (d, n) in enumerate(zip(dims, leaf.shape)):
+            if d is None and n % dsize == 0 and n > 0:
+                dims[i] = daxes if len(daxes) > 1 else daxes[0]
+                return P(*dims)
+        return P(*dims)
+
+    return jax.tree.map(rule, param_specs, params_tree)
+
+
+def opt_pspecs(param_specs, params_tree, mesh: Mesh, zero1: bool = False):
+    """Specs for the AdamW state {m, v, (master), step}."""
+    base = zero1_pspecs(param_specs, params_tree, mesh) if zero1 \
+        else param_specs
+    out = {"m": base, "v": base, "step": P()}
+    leaves = jax.tree.leaves(params_tree)
+    if any(jax.numpy.dtype(l.dtype) != jax.numpy.dtype("float32")
+           for l in leaves):
+        out["master"] = base
+    return out
+
+
+# ---------------------------------------------------------------------------
+# batch / cache rules
+# ---------------------------------------------------------------------------
+
+
+def batch_pspecs(batch_tree, mesh: Mesh) -> Any:
+    def rule(leaf):
+        b = leaf.shape[0] if leaf.shape else 1
+        ax = _batch_axis(mesh, b)
+        rest = (None,) * (len(leaf.shape) - 1)
+        return P(ax, *rest) if leaf.shape else P()
+    return jax.tree.map(rule, batch_tree)
+
+
+def cache_pspecs(cache_tree, mesh: Mesh, seq_axis_name: str = "model") -> Any:
+    """KV caches: (L,B,S,H,D) -> shard B over dp, S over model.
+    SSM states:  ssm (L,B,H,N,P) -> shard H over model.
+                 conv_x (L,B,W-1,di) -> shard di over model.
+    Hybrid attn caches (slots,B,S,H,D) handled like KV.
+    """
+    msize = mesh.shape["model"]
+
+    def rule(path, leaf):
+        names = _path_names(path)
+        name = names[-1] if names else ""
+        shp = leaf.shape
+        b = shp[1] if len(shp) > 1 else 1
+        bax = _batch_axis(mesh, b)
+        if name in ("k", "v", "attn_k", "attn_v", "cross_k", "cross_v"):
+            # layout (L, B, Hkv, S, D): shard the sequence dim over "model"
+            seq = shp[3]
+            sax = "model" if seq % msize == 0 else None
+            return P(None, bax, None, sax, None)
+        if name in ("k_scale", "v_scale"):
+            seq = shp[3]
+            sax = "model" if seq % msize == 0 else None
+            return P(None, bax, None, sax)
+        if name == "ssm":
+            h = shp[2]
+            hax = "model" if h % msize == 0 else None
+            return P(None, bax, hax, None, None)
+        if name == "conv_x":
+            c = shp[3]
+            cax = "model" if c % msize == 0 else None
+            return P(None, bax, None, cax)
+        if name == "conv_bc":
+            return P(None, bax, None, None)
+        return P(*([None] * len(shp)))
+
+    return jax.tree_util.tree_map_with_path(rule, cache_tree)
+
+
+def to_named(tree_specs, mesh: Mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree_specs,
+                        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,101 @@
+"""Aggregation kernels: global reduce + group-by (paper Table 1:
+BlockAggregate; group-by used by every SSB query flight).
+
+Group-by: the group-id domain in SSB is small and dense after dictionary
+encoding (paper §5.2), so the accumulator (n_groups,) lives in VMEM scratch
+and persists across the sequential grid; each tile scatter-adds its
+contributions and the final step stores the result.  On the MXU this
+scatter is a one-hot matmul; the jnp scatter the interpreter runs is
+bit-identical.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core import blocks as B
+from repro.kernels.common import DEFAULT_TILE, INTERPRET, pad_to_tile, \
+    valid_mask
+
+
+def _sum_kernel(n_ref, x_ref, out_ref, acc_ref, *, tile: int):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        acc_ref[0] = jnp.zeros((), acc_ref.dtype)
+
+    bitmap = valid_mask(tile, n_ref[0])
+    acc_ref[0] = acc_ref[0] + B.block_aggregate(
+        x_ref[...].astype(acc_ref.dtype), bitmap, "sum")
+
+    @pl.when(i == pl.num_programs(0) - 1)
+    def _fin():
+        out_ref[0] = acc_ref[0]
+
+
+@functools.partial(jax.jit, static_argnames=("tile", "interpret"))
+def reduce_sum(x: jax.Array, tile: int = DEFAULT_TILE,
+               interpret: bool | None = None) -> jax.Array:
+    interpret = INTERPRET if interpret is None else interpret
+    n = x.shape[0]
+    xp = pad_to_tile(x, tile, 0)
+    acc_dt = jnp.float32 if jnp.issubdtype(x.dtype, jnp.floating) \
+        else jnp.int32
+    out = pl.pallas_call(
+        functools.partial(_sum_kernel, tile=tile),
+        grid=(xp.shape[0] // tile,),
+        in_specs=[pl.BlockSpec(memory_space=pltpu.SMEM),
+                  pl.BlockSpec((tile,), lambda i: (i,))],
+        out_specs=pl.BlockSpec(memory_space=pltpu.SMEM),
+        out_shape=jax.ShapeDtypeStruct((1,), acc_dt),
+        scratch_shapes=[pltpu.SMEM((1,), acc_dt)],
+        interpret=interpret,
+    )(jnp.array([n], jnp.int32), xp)
+    return out[0]
+
+
+def _group_kernel(n_ref, g_ref, v_ref, out_ref, acc_ref, *, tile: int,
+                  n_groups: int):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros((n_groups,), acc_ref.dtype)
+
+    bitmap = valid_mask(tile, n_ref[0])
+    acc_ref[...] = acc_ref[...] + B.block_group_aggregate(
+        g_ref[...], v_ref[...].astype(acc_ref.dtype), bitmap, n_groups)
+
+    @pl.when(i == pl.num_programs(0) - 1)
+    def _fin():
+        out_ref[...] = acc_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("n_groups", "tile", "interpret"))
+def group_sum(group_ids: jax.Array, vals: jax.Array, n_groups: int,
+              tile: int = DEFAULT_TILE, interpret: bool | None = None
+              ) -> jax.Array:
+    """SELECT SUM(vals) GROUP BY group_ids (dense int32 ids)."""
+    interpret = INTERPRET if interpret is None else interpret
+    n = vals.shape[0]
+    gp = pad_to_tile(group_ids, tile, 0)
+    vp = pad_to_tile(vals, tile, 0)
+    acc_dt = jnp.float32 if jnp.issubdtype(vals.dtype, jnp.floating) \
+        else jnp.int32
+    return pl.pallas_call(
+        functools.partial(_group_kernel, tile=tile, n_groups=n_groups),
+        grid=(gp.shape[0] // tile,),
+        in_specs=[pl.BlockSpec(memory_space=pltpu.SMEM),
+                  pl.BlockSpec((tile,), lambda i: (i,)),
+                  pl.BlockSpec((tile,), lambda i: (i,))],
+        out_specs=pl.BlockSpec(memory_space=pl.ANY),
+        out_shape=jax.ShapeDtypeStruct((n_groups,), acc_dt),
+        scratch_shapes=[pltpu.VMEM((n_groups,), acc_dt)],
+        interpret=interpret,
+    )(jnp.array([n], jnp.int32), gp, vp)

@@ -1,0 +1,41 @@
+"""Shared Pallas kernel utilities.
+
+DEFAULT_TILE = 2048 items — the paper's best configuration (256 threads x 8
+items/thread, §3.3 / Fig. 9) carries over directly as the VMEM tile size:
+16 VPU sublanes x 128 lanes = 2048 int32 elements.
+
+All kernels are written for TPU (pl.pallas_call + BlockSpec VMEM tiling +
+SMEM scalar carries) and validated with interpret=True on CPU.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_TILE = 2048
+
+# interpret toggle: CPU container -> True in tests; on real TPU set False
+INTERPRET = jax.default_backend() != "tpu"
+
+
+def lane_iota(n: int) -> jax.Array:
+    """1-D iota usable in kernel bodies (TPU wants >=2D iota internally)."""
+    return jax.lax.broadcasted_iota(jnp.int32, (n,), 0)
+
+
+def pad_to_tile(x: jax.Array, tile: int, fill) -> jax.Array:
+    n = x.shape[0]
+    pad = (-n) % tile
+    if pad:
+        x = jnp.pad(x, (0, pad), constant_values=fill)
+    return x
+
+
+def valid_mask(tile: int, n_valid: jax.Array) -> jax.Array:
+    """Bitmap of in-bounds lanes for the current grid step."""
+    base = pl.program_id(0) * tile
+    return ((lane_iota(tile) + base) < n_valid).astype(jnp.int32)

@@ -1,0 +1,213 @@
+"""Hash-join kernels (paper §4.3): no-partitioning join, linear probing.
+
+Build: the paper builds in parallel with CAS; the TPU-native build exploits
+the *sequential grid* — tiles insert in order with a lax.fori_loop over the
+tile, probing/writing the table in ANY (HBM) space.  No atomics exist on
+TPU and none are needed.
+
+Probe (the perf-critical side): each grid step BlockLoads a tile of probe
+keys+payloads, BlockLookup vector-probes the table (lock-step linear
+probing via while_loop), and either
+  * probe_agg:  fuses SUM(a.v + b.v) into the kernel (paper's Q4), or
+  * probe_join: BlockShuffle-compacts matches and streams them out at the
+    sequential-grid offset carry (join materialization).
+The hash table's residency (VMEM if small, HBM otherwise) is the TPU
+analogue of the paper's L2-cache step function; the cost model in
+repro/cost mirrors it.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core import blocks as B
+from repro.kernels.common import DEFAULT_TILE, INTERPRET, pad_to_tile, \
+    valid_mask
+
+
+# ---------------------------------------------------------------------------
+# build
+# ---------------------------------------------------------------------------
+
+
+def _build_kernel(n_ref, keys_ref, vals_ref, htk_ref, htv_ref, *,
+                  tile: int, n_slots: int):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        htk_ref[...] = jnp.full((n_slots,), B.EMPTY, htk_ref.dtype)
+        htv_ref[...] = jnp.zeros((n_slots,), htv_ref.dtype)
+
+    keys = keys_ref[...]
+    vals = vals_ref[...]
+    base = i * tile
+    n_valid = n_ref[0]
+
+    def insert(j, _):
+        k = keys[j]
+        v = vals[j]
+
+        def do(_):
+            slot0 = B.hash_fn(k[None], n_slots)[0]
+
+            def cond(s):
+                return htk_ref[s] != B.EMPTY
+
+            def body(s):
+                return (s + 1) & (n_slots - 1)
+
+            s = jax.lax.while_loop(cond, body, slot0)
+            htk_ref[s] = k
+            htv_ref[s] = v
+            return 0
+
+        jax.lax.cond(base + j < n_valid, do, lambda _: 0, 0)
+        return 0
+
+    jax.lax.fori_loop(0, tile, insert, 0)
+
+
+@functools.partial(jax.jit, static_argnames=("n_slots", "tile", "interpret"))
+def build(keys: jax.Array, vals: jax.Array, n_slots: int,
+          tile: int = DEFAULT_TILE, interpret: bool | None = None
+          ) -> Tuple[jax.Array, jax.Array]:
+    interpret = INTERPRET if interpret is None else interpret
+    n = keys.shape[0]
+    kp = pad_to_tile(keys, tile, 0)
+    vp = pad_to_tile(vals, tile, 0)
+    nv = jnp.array([n], jnp.int32)
+    htk, htv = pl.pallas_call(
+        functools.partial(_build_kernel, tile=tile, n_slots=n_slots),
+        grid=(kp.shape[0] // tile,),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((tile,), lambda i: (i,)),
+            pl.BlockSpec((tile,), lambda i: (i,)),
+        ],
+        out_specs=[pl.BlockSpec(memory_space=pl.ANY),
+                   pl.BlockSpec(memory_space=pl.ANY)],
+        out_shape=[jax.ShapeDtypeStruct((n_slots,), keys.dtype),
+                   jax.ShapeDtypeStruct((n_slots,), vals.dtype)],
+        interpret=interpret,
+    )(nv, kp, vp)
+    return htk, htv
+
+
+# ---------------------------------------------------------------------------
+# probe + aggregate (paper Q4: SELECT SUM(A.v + B.v) FROM A,B WHERE A.k=B.k)
+# ---------------------------------------------------------------------------
+
+
+def _probe_agg_kernel(n_ref, keys_ref, vals_ref, htk_ref, htv_ref,
+                      out_ref, acc_ref, *, tile: int):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        acc_ref[0] = 0
+
+    keys = keys_ref[...]
+    vals = vals_ref[...]
+    payload, found = B.block_lookup(keys, htk_ref[...], htv_ref[...])
+    found = found * valid_mask(tile, n_ref[0])
+    local = B.block_aggregate(payload + vals, found, "sum")
+    acc_ref[0] = acc_ref[0] + local
+
+    @pl.when(i == pl.num_programs(0) - 1)
+    def _fin():
+        out_ref[0] = acc_ref[0]
+
+
+@functools.partial(jax.jit, static_argnames=("tile", "interpret"))
+def probe_agg(keys: jax.Array, vals: jax.Array, ht_keys: jax.Array,
+              ht_vals: jax.Array, tile: int = DEFAULT_TILE,
+              interpret: bool | None = None) -> jax.Array:
+    interpret = INTERPRET if interpret is None else interpret
+    n = keys.shape[0]
+    kp = pad_to_tile(keys, tile, 0)
+    vp = pad_to_tile(vals, tile, 0)
+    nv = jnp.array([n], jnp.int32)
+    out = pl.pallas_call(
+        functools.partial(_probe_agg_kernel, tile=tile),
+        grid=(kp.shape[0] // tile,),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((tile,), lambda i: (i,)),
+            pl.BlockSpec((tile,), lambda i: (i,)),
+            pl.BlockSpec(memory_space=pl.ANY),
+            pl.BlockSpec(memory_space=pl.ANY),
+        ],
+        out_specs=pl.BlockSpec(memory_space=pltpu.SMEM),
+        out_shape=jax.ShapeDtypeStruct((1,), vals.dtype),
+        scratch_shapes=[pltpu.SMEM((1,), vals.dtype)],
+        interpret=interpret,
+    )(nv, kp, vp, ht_keys, ht_vals)
+    return out[0]
+
+
+# ---------------------------------------------------------------------------
+# probe + materialize (join output: matched (payload, probe_val) pairs)
+# ---------------------------------------------------------------------------
+
+
+def _probe_join_kernel(n_ref, keys_ref, vals_ref, htk_ref, htv_ref,
+                       outp_ref, outv_ref, cnt_ref, off_ref, *, tile: int):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        off_ref[0] = 0
+
+    keys = keys_ref[...]
+    vals = vals_ref[...]
+    payload, found = B.block_lookup(keys, htk_ref[...], htv_ref[...])
+    found = found * valid_mask(tile, n_ref[0])
+    offsets, total = B.block_scan(found)
+    comp_p = B.block_shuffle(payload, found, offsets)
+    comp_v = B.block_shuffle(vals, found, offsets)
+    base = off_ref[0]
+    outp_ref[pl.ds(base, tile)] = comp_p
+    outv_ref[pl.ds(base, tile)] = comp_v
+    off_ref[0] = base + total
+
+    @pl.when(i == pl.num_programs(0) - 1)
+    def _fin():
+        cnt_ref[0] = off_ref[0]
+
+
+@functools.partial(jax.jit, static_argnames=("tile", "interpret"))
+def probe_join(keys: jax.Array, vals: jax.Array, ht_keys: jax.Array,
+               ht_vals: jax.Array, tile: int = DEFAULT_TILE,
+               interpret: bool | None = None
+               ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    interpret = INTERPRET if interpret is None else interpret
+    n = keys.shape[0]
+    kp = pad_to_tile(keys, tile, 0)
+    vp = pad_to_tile(vals, tile, 0)
+    nv = jnp.array([n], jnp.int32)
+    outp, outv, cnt = pl.pallas_call(
+        functools.partial(_probe_join_kernel, tile=tile),
+        grid=(kp.shape[0] // tile,),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((tile,), lambda i: (i,)),
+            pl.BlockSpec((tile,), lambda i: (i,)),
+            pl.BlockSpec(memory_space=pl.ANY),
+            pl.BlockSpec(memory_space=pl.ANY),
+        ],
+        out_specs=[pl.BlockSpec(memory_space=pl.ANY),
+                   pl.BlockSpec(memory_space=pl.ANY),
+                   pl.BlockSpec(memory_space=pltpu.SMEM)],
+        out_shape=[jax.ShapeDtypeStruct((kp.shape[0] + tile,), ht_vals.dtype),
+                   jax.ShapeDtypeStruct((kp.shape[0] + tile,), vals.dtype),
+                   jax.ShapeDtypeStruct((1,), jnp.int32)],
+        scratch_shapes=[pltpu.SMEM((1,), jnp.int32)],
+        interpret=interpret,
+    )(nv, kp, vp, ht_keys, ht_vals)
+    return outp, outv, cnt[0]

@@ -1,0 +1,110 @@
+"""Public jit'd entry points for the Crystal kernels.
+
+Each op dispatches between the Pallas kernel (TPU target; interpret=True on
+CPU) and the pure-jnp reference path.  The SQL engine (repro/sql) calls
+these; ``mode`` is usually left as "auto":
+
+  auto   -> jnp path on CPU (fast host execution), kernels on TPU
+  kernel -> force Pallas (interpret on CPU) — what the tests exercise
+  ref    -> force the jnp oracle
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import agg as _agg
+from repro.kernels import hash_join as _hj
+from repro.kernels import project as _proj
+from repro.kernels import radix_part as _radix
+from repro.kernels import ref as _ref
+from repro.kernels import select_scan as _sel
+from repro.kernels.common import DEFAULT_TILE
+
+
+def _use_kernel(mode: str) -> bool:
+    if mode == "kernel":
+        return True
+    if mode == "ref":
+        return False
+    return jax.default_backend() == "tpu"
+
+
+def select_scan(x, y, lo, hi, mode: str = "auto", tile: int = DEFAULT_TILE):
+    if _use_kernel(mode):
+        out, cnt = _sel.select_scan(x, y, lo, hi, tile=tile)
+        return out[:x.shape[0]], cnt
+    return _ref.select_scan(x, y, lo, hi)
+
+
+def project(x1, x2, a, b, sigmoid=False, mode: str = "auto",
+            tile: int = DEFAULT_TILE):
+    if _use_kernel(mode):
+        return _proj.project(x1, x2, a, b, sigmoid=sigmoid, tile=tile)
+    return _ref.project(x1, x2, a, b, sigmoid=sigmoid)
+
+
+def build_hash_table(keys, vals, n_slots, mode: str = "auto",
+                     tile: int = DEFAULT_TILE):
+    if _use_kernel(mode):
+        return _hj.build(keys, vals, n_slots, tile=tile)
+    return _ref.build(keys, vals, n_slots)
+
+
+def probe_agg(keys, vals, ht_keys, ht_vals, mode: str = "auto",
+              tile: int = DEFAULT_TILE):
+    if _use_kernel(mode):
+        return _hj.probe_agg(keys, vals, ht_keys, ht_vals, tile=tile)
+    return _ref.probe_agg(keys, vals, ht_keys, ht_vals)
+
+
+def probe_join(keys, vals, ht_keys, ht_vals, mode: str = "auto",
+               tile: int = DEFAULT_TILE):
+    if _use_kernel(mode):
+        outp, outv, cnt = _hj.probe_join(keys, vals, ht_keys, ht_vals,
+                                         tile=tile)
+        return outp[:keys.shape[0]], outv[:keys.shape[0]], cnt
+    return _ref.probe_join(keys, vals, ht_keys, ht_vals)
+
+
+def radix_sort(keys, vals, mode: str = "auto", r: int = 8,
+               tile: int = DEFAULT_TILE):
+    if _use_kernel(mode):
+        return _radix.radix_sort(keys, vals, r=r, tile=tile)
+    return _ref.radix_sort(keys, vals)
+
+
+def radix_partition(keys, vals, start_bit, r, mode: str = "auto",
+                    tile: int = DEFAULT_TILE):
+    if _use_kernel(mode):
+        return _radix.partition(keys, vals, start_bit, r, tile=tile)
+    return _ref.partition(keys, vals, start_bit, r)
+
+
+def reduce_sum(x, mode: str = "auto", tile: int = DEFAULT_TILE):
+    if _use_kernel(mode):
+        return _agg.reduce_sum(x, tile=tile)
+    return _ref.reduce_sum(x)
+
+
+def group_sum(group_ids, vals, n_groups, mode: str = "auto",
+              tile: int = DEFAULT_TILE):
+    if _use_kernel(mode):
+        return _agg.group_sum(group_ids, vals, n_groups, tile=tile)
+    return _ref.group_sum(group_ids, vals, n_groups)
+
+
+def spja(pred_cols, pred_bounds, join_keys, join_tables, group_mults,
+         m1, m2=None, measure_op="first", n_groups=1, mode: str = "auto",
+         tile: int = DEFAULT_TILE):
+    if _use_kernel(mode):
+        from repro.kernels import ssb_fused
+        return ssb_fused.spja(tuple(pred_cols), pred_bounds,
+                              tuple(join_keys), tuple(join_tables),
+                              group_mults, m1, m2, measure_op=measure_op,
+                              n_groups=n_groups, tile=tile)
+    return _ref.spja(pred_cols, pred_bounds, join_keys, join_tables,
+                     group_mults, m1, m2, measure_op=measure_op,
+                     n_groups=n_groups)

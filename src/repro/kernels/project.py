@@ -1,0 +1,54 @@
+"""Projection kernels (paper §4.1, Q1/Q2).
+
+Q1: SELECT a*x1 + b*x2 FROM R            (pure bandwidth)
+Q2: SELECT sigmoid(a*x1 + b*x2) FROM R   (bandwidth + transcendental)
+
+Single fused elementwise kernel per query; the grid is embarrassingly
+parallel (no carry), BlockSpec double-buffers HBM<->VMEM so the kernel
+saturates memory bandwidth — the paper's model: t = (2 reads + 1 write) x
+4B x N / BW.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.common import DEFAULT_TILE, INTERPRET, pad_to_tile
+
+
+def _project_kernel(coef_ref, x1_ref, x2_ref, out_ref, *, sigmoid: bool):
+    a, b = coef_ref[0], coef_ref[1]
+    y = a * x1_ref[...] + b * x2_ref[...]
+    if sigmoid:
+        y = 1.0 / (1.0 + jnp.exp(-y))
+    out_ref[...] = y
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("sigmoid", "tile", "interpret"))
+def project(x1: jax.Array, x2: jax.Array, a, b, sigmoid: bool = False,
+            tile: int = DEFAULT_TILE, interpret: bool | None = None
+            ) -> jax.Array:
+    interpret = INTERPRET if interpret is None else interpret
+    n = x1.shape[0]
+    x1p = pad_to_tile(x1, tile, 0)
+    x2p = pad_to_tile(x2, tile, 0)
+    coef = jnp.array([a, b], x1.dtype)
+    out = pl.pallas_call(
+        functools.partial(_project_kernel, sigmoid=sigmoid),
+        grid=(x1p.shape[0] // tile,),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((tile,), lambda i: (i,)),
+            pl.BlockSpec((tile,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((tile,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((x1p.shape[0],), x1.dtype),
+        interpret=interpret,
+    )(coef, x1p, x2p)
+    return out[:n]

@@ -1,0 +1,144 @@
+"""Radix partitioning kernels (paper §4.4) — histogram + shuffle passes.
+
+LSB radix sort = sequence of stable radix-partition passes.  On GPU the
+paper contrasts stable (7-bit, register-starved) vs unstable (8-bit) MSB
+variants; on TPU the register pressure constraint disappears (the per-tile
+histogram lives in VMEM), so the stable pass handles 8 bits directly —
+a hardware-adaptation win recorded in DESIGN.md.
+
+histogram pass: embarrassingly parallel — each grid step writes its tile's
+(2^r,) bucket counts to its own output row.
+
+shuffle pass: offsets (n_tiles, 2^r) are precomputed by the ops wrapper
+(bucket-major exclusive scan — the paper's K2 prefix-sum kernel, run once
+per pass over a tiny array).  Each grid step computes stable in-tile ranks
+and scatters elements to out[offset[tile, bucket] + rank].  The scatter is
+an element loop against HBM refs (exact-length bucket runs; a block store
+would clobber neighbouring bucket regions) — on hardware this becomes a
+per-run DMA; interpret mode validates semantics.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.common import DEFAULT_TILE, INTERPRET, lane_iota, \
+    pad_to_tile
+
+
+def _bucket_of(keys: jax.Array, start_bit: int, r: int) -> jax.Array:
+    return jax.lax.shift_right_logical(
+        keys, start_bit).astype(jnp.int32) & ((1 << r) - 1)
+
+
+def _hist_kernel(n_ref, keys_ref, hist_ref, *, tile: int, start_bit: int,
+                 r: int):
+    i = pl.program_id(0)
+    keys = keys_ref[...]
+    base = i * tile
+    valid = (lane_iota(tile) + base) < n_ref[0]
+    b = jnp.where(valid, _bucket_of(keys, start_bit, r), 1 << r)
+    onehot = (b[:, None] == lane_iota((1 << r))[None, :]).astype(jnp.int32)
+    hist_ref[0, :] = jnp.sum(onehot, axis=0)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("start_bit", "r", "tile", "interpret"))
+def histogram(keys: jax.Array, start_bit: int, r: int,
+              tile: int = DEFAULT_TILE, interpret: bool | None = None
+              ) -> jax.Array:
+    """Per-tile bucket histogram: (n_tiles, 2^r) int32."""
+    interpret = INTERPRET if interpret is None else interpret
+    n = keys.shape[0]
+    kp = pad_to_tile(keys, tile, 0)
+    nt = kp.shape[0] // tile
+    nv = jnp.array([n], jnp.int32)
+    return pl.pallas_call(
+        functools.partial(_hist_kernel, tile=tile, start_bit=start_bit, r=r),
+        grid=(nt,),
+        in_specs=[pl.BlockSpec(memory_space=pltpu.SMEM),
+                  pl.BlockSpec((tile,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((1, 1 << r), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((nt, 1 << r), jnp.int32),
+        interpret=interpret,
+    )(nv, kp).reshape(nt, 1 << r)
+
+
+def _shuffle_kernel(n_ref, keys_ref, vals_ref, off_ref, outk_ref, outv_ref,
+                    *, tile: int, start_bit: int, r: int):
+    i = pl.program_id(0)
+    keys = keys_ref[...]
+    vals = vals_ref[...]
+    offs = off_ref[...]  # (1, 2^r) this tile's global bucket offsets
+    base = i * tile
+    valid = (lane_iota(tile) + base) < n_ref[0]
+    b = jnp.where(valid, _bucket_of(keys, start_bit, r), 1 << r)
+    onehot = (b[:, None] == lane_iota((1 << r))[None, :]).astype(jnp.int32)
+    ranks = jnp.cumsum(onehot, axis=0) - onehot          # stable in-tile rank
+    rank = jnp.sum(ranks * onehot, axis=1)
+    safe_b = jnp.clip(b, 0, (1 << r) - 1)
+    pos = offs[0, :][safe_b] + rank
+
+    def write(j, _):
+        @pl.when(valid[j])
+        def _():
+            outk_ref[pos[j]] = keys[j]
+            outv_ref[pos[j]] = vals[j]
+        return 0
+
+    jax.lax.fori_loop(0, tile, write, 0)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("start_bit", "r", "tile", "interpret"))
+def partition(keys: jax.Array, vals: jax.Array, start_bit: int, r: int,
+              tile: int = DEFAULT_TILE, interpret: bool | None = None
+              ) -> Tuple[jax.Array, jax.Array]:
+    """One stable radix-partition pass: returns (keys', vals')."""
+    interpret = INTERPRET if interpret is None else interpret
+    n = keys.shape[0]
+    hist = histogram(keys, start_bit, r, tile=tile, interpret=interpret)
+    nt, nb = hist.shape
+    # the paper's K2: bucket-major exclusive scan over (tile, bucket) counts
+    flat = hist.T.reshape(-1)                           # bucket-major
+    offsets = (jnp.cumsum(flat) - flat).reshape(nb, nt).T  # (nt, nb)
+    kp = pad_to_tile(keys, tile, 0)
+    vp = pad_to_tile(vals, tile, 0)
+    nv = jnp.array([n], jnp.int32)
+    outk, outv = pl.pallas_call(
+        functools.partial(_shuffle_kernel, tile=tile, start_bit=start_bit,
+                          r=r),
+        grid=(nt,),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((tile,), lambda i: (i,)),
+            pl.BlockSpec((tile,), lambda i: (i,)),
+            pl.BlockSpec((1, nb), lambda i: (i, 0)),
+        ],
+        out_specs=[pl.BlockSpec(memory_space=pl.ANY),
+                   pl.BlockSpec(memory_space=pl.ANY)],
+        out_shape=[jax.ShapeDtypeStruct((n,), keys.dtype),
+                   jax.ShapeDtypeStruct((n,), vals.dtype)],
+        interpret=interpret,
+    )(nv, kp, vp, offsets.astype(jnp.int32))
+    return outk, outv
+
+
+def radix_sort(keys: jax.Array, vals: jax.Array, key_bits: int = 32,
+               r: int = 8, tile: int = DEFAULT_TILE,
+               interpret: bool | None = None
+               ) -> Tuple[jax.Array, jax.Array]:
+    """LSB radix sort: ceil(key_bits / r) stable partition passes.
+
+    TPU does 8-bit stable passes (VMEM histograms), so 32-bit keys sort in
+    4 passes — matching the paper's *unstable MSB* pass count while keeping
+    LSB stability."""
+    for p in range(-(-key_bits // r)):
+        keys, vals = partition(keys, vals, p * r, r, tile=tile,
+                               interpret=interpret)
+    return keys, vals

@@ -1,0 +1,112 @@
+"""Pure-jnp oracles for every kernel — the correctness ground truth.
+
+Each function has the same signature/semantics as its kernel counterpart
+but is a straight-line jnp program with no tiling, used by
+tests/test_kernels.py (shape/dtype sweeps + hypothesis properties).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import blocks as B
+
+
+def select_scan(x: jax.Array, y: jax.Array, lo, hi
+                ) -> Tuple[jax.Array, jax.Array]:
+    """Returns (compacted y where lo<=x<=hi — stable, padded, count)."""
+    bitmap = ((x >= lo) & (x <= hi)).astype(jnp.int32)
+    offsets = jnp.cumsum(bitmap) - bitmap
+    count = jnp.sum(bitmap)
+    n = x.shape[0]
+    idx = jnp.where(bitmap > 0, offsets, n)
+    out = jnp.zeros((n + 1,), y.dtype).at[idx].set(y, mode="drop")[:n]
+    return out, count
+
+
+def project(x1, x2, a, b, sigmoid: bool = False) -> jax.Array:
+    y = a * x1 + b * x2
+    if sigmoid:
+        y = 1.0 / (1.0 + jnp.exp(-y))
+    return y
+
+
+def build(keys, vals, n_slots) -> Tuple[jax.Array, jax.Array]:
+    return B.build_hash_table(keys, vals, n_slots)
+
+
+def probe_agg(keys, vals, ht_keys, ht_vals) -> jax.Array:
+    payload, found = B.block_lookup(keys, ht_keys, ht_vals)
+    return jnp.sum(jnp.where(found > 0, payload + vals, 0))
+
+
+def probe_join(keys, vals, ht_keys, ht_vals):
+    payload, found = B.block_lookup(keys, ht_keys, ht_vals)
+    offsets = jnp.cumsum(found) - found
+    count = jnp.sum(found)
+    n = keys.shape[0]
+    idx = jnp.where(found > 0, offsets, n)
+    outp = jnp.zeros((n + 1,), ht_vals.dtype).at[idx].set(
+        payload, mode="drop")[:n]
+    outv = jnp.zeros((n + 1,), vals.dtype).at[idx].set(
+        vals, mode="drop")[:n]
+    return outp, outv, count
+
+
+def histogram(keys, start_bit, r, tile) -> jax.Array:
+    """Per-tile histograms, matching the kernel's (n_tiles, 2^r) layout."""
+    n = keys.shape[0]
+    pad = (-n) % tile
+    b = jax.lax.shift_right_logical(keys, start_bit) & ((1 << r) - 1)
+    b = jnp.pad(b.astype(jnp.int32), (0, pad), constant_values=1 << r)
+    nt = b.shape[0] // tile
+    onehot = b.reshape(nt, tile)[:, :, None] == jnp.arange(1 << r)
+    return jnp.sum(onehot.astype(jnp.int32), axis=1)
+
+
+def partition(keys, vals, start_bit, r) -> Tuple[jax.Array, jax.Array]:
+    """One stable radix-partition pass (argsort-stable oracle)."""
+    b = jax.lax.shift_right_logical(keys, start_bit) & ((1 << r) - 1)
+    order = jnp.argsort(b, stable=True)
+    return keys[order], vals[order]
+
+
+def radix_sort(keys, vals) -> Tuple[jax.Array, jax.Array]:
+    order = jnp.argsort(keys, stable=True)
+    return keys[order], vals[order]
+
+
+def reduce_sum(x) -> jax.Array:
+    dt = jnp.float32 if jnp.issubdtype(x.dtype, jnp.floating) else jnp.int32
+    return jnp.sum(x.astype(dt))
+
+
+def group_sum(group_ids, vals, n_groups) -> jax.Array:
+    dt = jnp.float32 if jnp.issubdtype(vals.dtype, jnp.floating) \
+        else jnp.int32
+    return jnp.zeros((n_groups,), dt).at[group_ids].add(vals.astype(dt))
+
+
+def spja(pred_cols, pred_bounds, join_keys, join_tables, group_mults,
+         m1, m2, measure_op="first", n_groups=1) -> jax.Array:
+    n = m1.shape[0]
+    bitmap = jnp.ones((n,), jnp.int32)
+    for p, col in enumerate(pred_cols):
+        bitmap = bitmap * ((col >= pred_bounds[p, 0])
+                           & (col <= pred_bounds[p, 1])).astype(jnp.int32)
+    group = jnp.zeros((n,), jnp.int32)
+    for j, keys in enumerate(join_keys):
+        payload, found = B.block_lookup(keys, join_tables[2 * j],
+                                        join_tables[2 * j + 1])
+        bitmap = bitmap * found
+        group = group + payload * group_mults[j]
+    m = m1.astype(jnp.float32)
+    if measure_op == "mul":
+        m = m * m2.astype(jnp.float32)
+    elif measure_op == "sub":
+        m = m - m2.astype(jnp.float32)
+    contrib = jnp.where(bitmap > 0, m, 0.0)
+    safe = jnp.where(bitmap > 0, group, 0)
+    return jnp.zeros((n_groups,), jnp.float32).at[safe].add(contrib)

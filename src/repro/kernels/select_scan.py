@@ -1,0 +1,180 @@
+"""Fused selection-scan kernel — the paper's flagship (Fig. 4b / Q0, Q3).
+
+One kernel does BlockLoad -> BlockPred -> BlockScan -> BlockShuffle ->
+BlockStore per tile.  The paper's global atomic counter is replaced by a
+sequential-grid SMEM carry (DESIGN.md §2): TPU grid steps execute in order,
+so the running output offset needs no atomics and the result is stable.
+
+Output is over-allocated by one tile: each grid step stores a full
+compacted tile at the running offset (positions past the per-tile match
+count are overwritten by the next step); callers slice [:count].
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core import blocks as B
+from repro.kernels.common import DEFAULT_TILE, INTERPRET, valid_mask
+
+
+def _select_kernel(bounds_ref, n_ref, x_ref, y_ref, out_ref, cnt_ref,
+                   off_ref, *, tile: int):
+    """bounds: [lo, hi]; n: [n_valid] — select y where lo <= x <= hi."""
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        off_ref[0] = 0
+
+    x = x_ref[...]
+    y = y_ref[...]
+    lo, hi = bounds_ref[0], bounds_ref[1]
+    bitmap = B.block_pred_range(x, lo, hi) * valid_mask(tile, n_ref[0])
+    offsets, total = B.block_scan(bitmap)
+    comp = B.block_shuffle(y, bitmap, offsets)
+    base = off_ref[0]
+    out_ref[pl.ds(base, tile)] = comp
+    off_ref[0] = base + total
+
+    @pl.when(i == pl.num_programs(0) - 1)
+    def _fin():
+        cnt_ref[0] = off_ref[0]
+
+
+@functools.partial(jax.jit, static_argnames=("tile", "interpret"))
+def select_scan(x: jax.Array, y: jax.Array, lo, hi,
+                tile: int = DEFAULT_TILE, interpret: bool | None = None
+                ) -> Tuple[jax.Array, jax.Array]:
+    """SELECT y FROM R WHERE lo <= x <= hi.  Returns (out, count); out is
+    padded to len(x)+tile, valid entries are out[:count] (stable order)."""
+    interpret = INTERPRET if interpret is None else interpret
+    n = x.shape[0]
+    from repro.kernels.common import pad_to_tile
+    xp = pad_to_tile(x, tile, 0)
+    yp = pad_to_tile(y, tile, 0)
+    npad = xp.shape[0]
+    bounds = jnp.array([lo, hi], x.dtype)
+    nv = jnp.array([n], jnp.int32)
+    out, cnt = pl.pallas_call(
+        functools.partial(_select_kernel, tile=tile),
+        grid=(npad // tile,),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((tile,), lambda i: (i,)),
+            pl.BlockSpec((tile,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec(memory_space=pl.ANY),
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((npad + tile,), y.dtype),
+            jax.ShapeDtypeStruct((1,), jnp.int32),
+        ],
+        scratch_shapes=[pltpu.SMEM((1,), jnp.int32)],
+        interpret=interpret,
+    )(bounds, nv, xp, yp)
+    return out, cnt[0]
+
+
+# ---------------------------------------------------------------------------
+# sparse variant: BlockLoadSel at tile granularity (paper §5.3 r1 term)
+# ---------------------------------------------------------------------------
+
+
+def _select_sparse_kernel(tids_ref, bounds_ref, n_ref, x_ref, y_ref,
+                          out_ref, cnt_ref, off_ref, *, tile: int):
+    """Grid runs only over tiles known to contain matches; the BlockSpec
+    index_map reads the prefetched tile-id list, so unmatched tiles of the
+    PAYLOAD column are never DMA'd from HBM — the TPU-native analogue of
+    the paper's 'skip entire cache lines' selective load."""
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        off_ref[0] = 0
+
+    x = x_ref[...]
+    y = y_ref[...]
+    lo, hi = bounds_ref[0], bounds_ref[1]
+    tid = tids_ref[i]
+    base = tid * tile
+    n_valid = n_ref[0]
+    lane = jax.lax.broadcasted_iota(jnp.int32, (tile,), 0)
+    inb = ((lane + base) < n_valid).astype(jnp.int32)
+    bitmap = B.block_pred_range(x, lo, hi) * inb
+    offsets, total = B.block_scan(bitmap)
+    comp = B.block_shuffle(y, bitmap, offsets)
+    base_out = off_ref[0]
+    out_ref[pl.ds(base_out, tile)] = comp
+    off_ref[0] = base_out + total
+
+    @pl.when(i == pl.num_programs(0) - 1)
+    def _fin():
+        cnt_ref[0] = off_ref[0]
+
+
+@functools.partial(jax.jit, static_argnames=("tile", "interpret"))
+def select_scan_sparse(x: jax.Array, y: jax.Array, lo, hi,
+                       tile: int = DEFAULT_TILE,
+                       interpret: bool | None = None
+                       ) -> Tuple[jax.Array, jax.Array]:
+    """Two-phase selective scan: phase 1 finds tiles with >=1 match
+    (cheap pass over the predicate column only); phase 2 runs the fused
+    select kernel over just those tiles via scalar-prefetch indirection,
+    so the payload column is only read where needed."""
+    interpret = INTERPRET if interpret is None else interpret
+    from repro.kernels.common import pad_to_tile
+    n = x.shape[0]
+    xp = pad_to_tile(x, tile, 0)
+    yp = pad_to_tile(y, tile, 0)
+    npad = xp.shape[0]
+    nt = npad // tile
+
+    # phase 1 (K1-style, but over the predicate column only)
+    lanes = jnp.arange(npad, dtype=jnp.int32)
+    hit = ((xp >= lo) & (xp <= hi) & (lanes < n)).reshape(nt, tile)
+    tile_has = jnp.any(hit, axis=1)
+    order = jnp.argsort(~tile_has)            # matching tiles first, stable
+    tids = jnp.arange(nt, dtype=jnp.int32)[order]
+    # grid still has static size nt; tiles past the matching prefix
+    # contribute nothing (their bitmaps are empty) but on real hardware a
+    # dynamic grid bound (pl.num_programs from scalar) trims them.
+
+    bounds = jnp.array([lo, hi], x.dtype)
+    nv = jnp.array([n], jnp.int32)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(nt,),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            # the indirection: block index comes from the prefetched
+            # tile-id list, so the DMA engine only ever touches the tiles
+            # phase 1 marked as matching
+            pl.BlockSpec((tile,), lambda i, tids: (tids[i],)),
+            pl.BlockSpec((tile,), lambda i, tids: (tids[i],)),
+        ],
+        out_specs=[
+            pl.BlockSpec(memory_space=pl.ANY),
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+        ],
+        scratch_shapes=[pltpu.SMEM((1,), jnp.int32)],
+    )
+    out, cnt = pl.pallas_call(
+        functools.partial(_select_sparse_kernel, tile=tile),
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((npad + tile,), y.dtype),
+            jax.ShapeDtypeStruct((1,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(tids, bounds, nv, xp, yp)
+    return out, cnt[0]

@@ -1,0 +1,141 @@
+"""Fused SPJA full-query kernel — the paper's headline result (§5).
+
+ONE kernel executes an entire SSB query pipeline per fact-table tile:
+  BlockLoad(fact cols) -> BlockPred(fact predicates) ->
+  BlockLookup(join 1..J, selective dim hash tables) ->
+  group-id from join payloads -> BlockAggregate(group-by sum)
+with zero intermediate materialization in HBM — the tile-based execution
+model's whole point (Fig. 4b generalized to SPJA, §5.3's q2.1 plan).
+
+Static shape of a query:
+  n_preds  range predicates on fact columns (bounds in SMEM)
+  n_joins  hash joins; dim tables pre-built with only selected rows, so a
+           probe miss = row filtered (paper's selective-join pipelining)
+  group id = sum_j payload_j * mult_j  (mult=0 for filter-only joins)
+  measure  = m1, m1*m2, or m1-m2 summed per group (f32 accumulators)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core import blocks as B
+from repro.kernels.common import DEFAULT_TILE, INTERPRET, pad_to_tile, \
+    valid_mask
+
+
+def _make_kernel(n_preds: int, n_joins: int, measure_op: str,
+                 n_groups: int, tile: int):
+    def kernel(*refs):
+        idx = 0
+        n_ref = refs[idx]; idx += 1
+        bounds_ref = refs[idx] if n_preds else None
+        idx += 1 if n_preds else 0
+        mults_ref = refs[idx] if n_joins else None
+        idx += 1 if n_joins else 0
+        pred_refs = refs[idx:idx + n_preds]; idx += n_preds
+        key_refs = refs[idx:idx + n_joins]; idx += n_joins
+        ht_refs = refs[idx:idx + 2 * n_joins]; idx += 2 * n_joins
+        m1_ref = refs[idx]; idx += 1
+        m2_ref = refs[idx] if measure_op in ("mul", "sub") else None
+        idx += 1 if measure_op in ("mul", "sub") else 0
+        out_ref = refs[idx]; idx += 1
+        acc_ref = refs[idx]
+
+        i = pl.program_id(0)
+
+        @pl.when(i == 0)
+        def _init():
+            acc_ref[...] = jnp.zeros((n_groups,), jnp.float32)
+
+        bitmap = valid_mask(tile, n_ref[0])
+        # --- selections on fact columns ---
+        for p in range(n_preds):
+            col = pred_refs[p][...]
+            bitmap = bitmap * B.block_pred_range(
+                col, bounds_ref[p, 0], bounds_ref[p, 1])
+        # --- pipelined hash probes (selective joins) ---
+        group = jnp.zeros((tile,), jnp.int32)
+        for j in range(n_joins):
+            keys = key_refs[j][...]
+            payload, found = B.block_lookup(keys, ht_refs[2 * j][...],
+                                            ht_refs[2 * j + 1][...])
+            bitmap = bitmap * found
+            group = group + payload * mults_ref[j]
+        # --- measure + group aggregate ---
+        m = m1_ref[...].astype(jnp.float32)
+        if measure_op == "mul":
+            m = m * m2_ref[...].astype(jnp.float32)
+        elif measure_op == "sub":
+            m = m - m2_ref[...].astype(jnp.float32)
+        acc_ref[...] = acc_ref[...] + B.block_group_aggregate(
+            group, m, bitmap, n_groups)
+
+        @pl.when(i == pl.num_programs(0) - 1)
+        def _fin():
+            out_ref[...] = acc_ref[...]
+
+    return kernel
+
+
+@functools.partial(
+    jax.jit, static_argnames=("measure_op", "n_groups", "tile", "interpret"))
+def spja(pred_cols: Tuple[jax.Array, ...],
+         pred_bounds: jax.Array,             # (n_preds, 2) int32
+         join_keys: Tuple[jax.Array, ...],   # fact FK columns
+         join_tables: Tuple[jax.Array, ...], # (htk0, htv0, htk1, htv1, ...)
+         group_mults: jax.Array,             # (n_joins,) int32
+         m1: jax.Array, m2: jax.Array | None,
+         measure_op: str = "first",          # first | mul | sub
+         n_groups: int = 1,
+         tile: int = DEFAULT_TILE,
+         interpret: bool | None = None) -> jax.Array:
+    """Run a full SPJA query in one fused kernel.  Returns (n_groups,) f32
+    per-group sums (group 0 holds the scalar for ungrouped queries)."""
+    interpret = INTERPRET if interpret is None else interpret
+    n_preds = len(pred_cols)
+    n_joins = len(join_keys)
+    n = m1.shape[0]
+
+    inputs = [jnp.array([n], jnp.int32)]
+    in_specs = [pl.BlockSpec(memory_space=pltpu.SMEM)]
+    if n_preds:
+        inputs.append(pred_bounds.astype(jnp.int32))
+        in_specs.append(pl.BlockSpec(memory_space=pltpu.SMEM))
+    if n_joins:
+        inputs.append(group_mults.astype(jnp.int32))
+        in_specs.append(pl.BlockSpec(memory_space=pltpu.SMEM))
+    blocked = pl.BlockSpec((tile,), lambda i: (i,))
+    for c in pred_cols:
+        inputs.append(pad_to_tile(c, tile, 0))
+        in_specs.append(blocked)
+    for c in join_keys:
+        inputs.append(pad_to_tile(c, tile, 0))
+        in_specs.append(blocked)
+    for t in join_tables:
+        inputs.append(t)
+        in_specs.append(pl.BlockSpec(memory_space=pl.ANY))
+    inputs.append(pad_to_tile(m1, tile, 0))
+    in_specs.append(blocked)
+    if measure_op in ("mul", "sub"):
+        assert m2 is not None
+        inputs.append(pad_to_tile(m2, tile, 0))
+        in_specs.append(blocked)
+
+    npad = inputs[-1].shape[0] if measure_op in ("mul", "sub") else \
+        pad_to_tile(m1, tile, 0).shape[0]
+    out = pl.pallas_call(
+        _make_kernel(n_preds, n_joins, measure_op, n_groups, tile),
+        grid=(npad // tile,),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec(memory_space=pl.ANY),
+        out_shape=jax.ShapeDtypeStruct((n_groups,), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((n_groups,), jnp.float32)],
+        interpret=interpret,
+    )(*inputs)
+    return out

@@ -1,0 +1,213 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST be the first two lines, before ANY other import (jax locks the
+#   device count on first init).  Run this module as its own process.
+#
+# Multi-pod dry-run: lower + compile every (arch x input-shape) cell on the
+# production mesh, print memory_analysis / cost_analysis, and derive the
+# roofline terms.  Results append to a JSONL artifact so an interrupted
+# batch resumes where it left off.
+#
+# Usage:
+#   PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2-0.5b --shape train_4k
+#   PYTHONPATH=src python -m repro.launch.dryrun --all --mesh single
+#   PYTHONPATH=src python -m repro.launch.dryrun --all --mesh multi \
+#       --out experiments/dryrun_multi.jsonl
+
+import argparse
+import json
+import sys
+import time
+import traceback
+from pathlib import Path
+
+import jax
+
+from repro.configs.base import (ARCH_IDS, SHAPES, cell_is_runnable,
+                                get_config)
+from repro.distributed import sharding as sh
+from repro.launch import roofline as rl
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import donate_for, input_specs, step_fn
+
+
+def shardings_for(cfg, shape, mesh, abstract_args, zero1=False,
+                  fsdp=False):
+    """NamedSharding trees matching input_specs(cfg, shape)."""
+    pspec = sh.param_pspecs(abstract_args[0], cfg, mesh.shape["model"])
+    if fsdp:
+        # ZeRO-3-style: params additionally shard over the data axes
+        # (per-layer all-gather inserted by GSPMD)
+        pspec = sh.zero1_pspecs(pspec, abstract_args[0], mesh)
+    if shape.kind == "train":
+        aparams, aopt, abatch = abstract_args
+        ospec = sh.opt_pspecs(pspec, aparams, mesh, zero1=zero1 or fsdp)
+        bspec = sh.batch_pspecs(abatch, mesh)
+        specs = (pspec, ospec, bspec)
+    elif shape.kind == "prefill":
+        aparams, abatch = abstract_args
+        specs = (pspec, sh.batch_pspecs(abatch, mesh))
+    else:
+        aparams, acache, tokens, pos = abstract_args
+        cspec = sh.cache_pspecs(acache, mesh)
+        from jax.sharding import PartitionSpec as P
+        tspec = sh.batch_pspecs(tokens, mesh)
+        specs = (pspec, cspec, tspec, P())
+    return jax.tree.map(lambda s: jax.NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(
+                            x, jax.sharding.PartitionSpec))
+
+
+def run_cell(arch: str, shape_name: str, mesh_name: str,
+             zero1: bool = False, fsdp: bool = False,
+             sp_attn: bool = False, moments_bf16: bool = False,
+             micro: int = 0, kv_int8: bool = False, tag: str = "baseline",
+             verbose: bool = True) -> dict:
+    cfg = get_config(arch)
+    if sp_attn:
+        cfg = cfg.replace(sp_attention=True)
+    if micro:
+        cfg = cfg.replace(train_microbatches=micro)
+    if kv_int8:
+        cfg = cfg.replace(kv_cache_dtype="int8")
+    shape = SHAPES[shape_name]
+    ok, why = cell_is_runnable(cfg, shape)
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name, "tag": tag}
+    if not ok:
+        rec.update(status="skip", reason=why)
+        return rec
+
+    mesh = make_production_mesh(multi_pod=(mesh_name == "multi"))
+    chips = mesh.size
+    t0 = time.time()
+    try:
+        import jax.numpy as jnp
+        mdt = jnp.bfloat16 if moments_bf16 else jnp.float32
+        abstract_args = input_specs(cfg, shape, moments_dtype=mdt)
+        in_sh = shardings_for(cfg, shape, mesh, abstract_args, zero1=zero1,
+                              fsdp=fsdp)
+        grad_pspecs = None
+        if shape.kind == "train" and (fsdp or zero1):
+            grad_pspecs = sh.param_pspecs(abstract_args[0], cfg,
+                                          mesh.shape["model"])
+            grad_pspecs = sh.zero1_pspecs(grad_pspecs, abstract_args[0],
+                                          mesh)
+        fn = step_fn(cfg, shape, grad_pspecs=grad_pspecs)
+        jitted = jax.jit(fn, in_shardings=in_sh,
+                         donate_argnums=donate_for(shape))
+        with jax.sharding.set_mesh(mesh):
+            lowered = jitted.lower(*abstract_args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+
+        mem = compiled.memory_analysis()
+        mem_d = None
+        if mem is not None:
+            mem_d = {
+                "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+                "output_bytes": getattr(mem, "output_size_in_bytes", None),
+                "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+                "generated_code_bytes": getattr(
+                    mem, "generated_code_size_in_bytes", None),
+                "peak_bytes": (
+                    (getattr(mem, "argument_size_in_bytes", 0) or 0)
+                    + (getattr(mem, "temp_size_in_bytes", 0) or 0)
+                    + (getattr(mem, "output_size_in_bytes", 0) or 0)),
+            }
+        cost = compiled.cost_analysis() or {}
+        hlo = compiled.as_text()
+        terms = rl.analyze(cfg, shape, mesh_name, chips, cost, hlo, mem_d)
+        rec.update(status="ok", seconds_lower=round(t_lower, 1),
+                   seconds_compile=round(t_compile, 1),
+                   roofline=terms.to_dict())
+        if verbose:
+            print(f"[{arch} x {shape_name} x {mesh_name}] OK "
+                  f"lower={t_lower:.0f}s compile={t_compile:.0f}s")
+            print(f"  memory_analysis: {mem_d}")
+            print(f"  flops/chip={terms.flops_per_chip:.3e} "
+                  f"bytes/chip={terms.bytes_per_chip:.3e} "
+                  f"(ub={terms.bytes_per_chip_ub:.3e}) "
+                  f"coll/chip={terms.coll_bytes_per_chip:.3e}")
+            print(f"  T_comp={terms.t_compute*1e3:.2f}ms "
+                  f"T_mem={terms.t_memory*1e3:.2f}ms "
+                  f"(ub={terms.t_memory_ub*1e3:.2f}ms) "
+                  f"T_coll={terms.t_collective*1e3:.2f}ms "
+                  f"dominant={terms.dominant} "
+                  f"useful={terms.useful_flops_ratio:.2f} "
+                  f"roofline_frac={terms.peak_fraction:.3f}")
+    except Exception as e:  # noqa: BLE001 — record the failure, keep batch
+        rec.update(status="error", error=f"{type(e).__name__}: {e}",
+                   traceback=traceback.format_exc()[-2000:])
+        if verbose:
+            print(f"[{arch} x {shape_name} x {mesh_name}] FAILED: {e}")
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS)
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--mesh", choices=["single", "multi"], default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--zero1", action="store_true",
+                    help="shard optimizer state over the data axes (ZeRO-1)")
+    ap.add_argument("--fsdp", action="store_true",
+                    help="ZeRO-3-style param sharding over the data axes")
+    ap.add_argument("--sp-attn", action="store_true",
+                    help="sequence-parallel (context-parallel) attention")
+    ap.add_argument("--moments-bf16", action="store_true",
+                    help="bf16 Adam moments")
+    ap.add_argument("--micro", type=int, default=0,
+                    help="override train_microbatches")
+    ap.add_argument("--kv-int8", action="store_true",
+                    help="int8 KV cache with per-token-head scales")
+    ap.add_argument("--tag", default="baseline")
+    ap.add_argument("--out", default="experiments/dryrun.jsonl")
+    args = ap.parse_args()
+
+    out = Path(args.out)
+    out.parent.mkdir(parents=True, exist_ok=True)
+    done = set()
+    if out.exists():
+        for line in out.read_text().splitlines():
+            try:
+                r = json.loads(line)
+                if r.get("status") in ("ok", "skip"):
+                    done.add((r["arch"], r["shape"], r["mesh"], r["tag"]))
+            except json.JSONDecodeError:
+                pass
+
+    cells = []
+    if args.all:
+        for a in ARCH_IDS:
+            for s in SHAPES:
+                cells.append((a, s))
+    else:
+        if not args.arch or not args.shape:
+            ap.error("--arch and --shape required unless --all")
+        cells = [(args.arch, args.shape)]
+
+    n_ok = n_skip = n_err = 0
+    for arch, shape in cells:
+        key = (arch, shape, args.mesh, args.tag)
+        if key in done:
+            print(f"[{arch} x {shape} x {args.mesh}] cached, skipping")
+            continue
+        rec = run_cell(arch, shape, args.mesh, zero1=args.zero1,
+                       fsdp=args.fsdp, sp_attn=args.sp_attn,
+                       moments_bf16=args.moments_bf16, micro=args.micro,
+                       kv_int8=args.kv_int8, tag=args.tag)
+        with out.open("a") as f:
+            f.write(json.dumps(rec) + "\n")
+        st = rec["status"]
+        n_ok += st == "ok"
+        n_skip += st == "skip"
+        n_err += st == "error"
+    print(f"done: ok={n_ok} skip={n_skip} error={n_err}")
+    if n_err:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

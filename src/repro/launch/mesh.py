@@ -1,0 +1,39 @@
+"""Production meshes.
+
+Defined as FUNCTIONS (not module constants) so importing this module never
+touches jax device state.  Single pod = (data=16, model=16) over 256 chips;
+multi-pod = (pod=2, data=16, model=16) over 512 chips — the "pod" axis is a
+pure data-parallel outer axis whose collectives ride the inter-pod links (DCN
+on real fleets), which is why gradient compression (distributed/compression)
+targets it first.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = int(np.prod(shape))
+    devs = jax.devices()
+    if len(devs) == n:
+        return jax.make_mesh(shape, axes)
+    if len(devs) < n:
+        raise RuntimeError(
+            f"mesh {shape} needs {n} devices, found {len(devs)} — run under "
+            "XLA_FLAGS=--xla_force_host_platform_device_count="
+            f"{n} (launch/dryrun.py does this)")
+    # more devices than needed (e.g. 512 host devices, single-pod mesh):
+    # build the mesh from the first n devices.
+    return Mesh(np.asarray(devs[:n]).reshape(shape), axes)
+
+
+def make_host_mesh(model: int = 1) -> Mesh:
+    """Small mesh over whatever devices exist (tests / local runs)."""
+    devs = jax.devices()
+    data = len(devs) // model
+    return Mesh(np.asarray(devs[:data * model]).reshape(data, model),
+                ("data", "model"))

@@ -1,0 +1,138 @@
+"""Roofline analysis from compiled dry-run artifacts (no real hardware).
+
+Three terms per (arch x shape x mesh), in seconds:
+  T_compute    = HLO_FLOPs_per_chip    / PEAK_FLOPS      (197 TF/s bf16, v5e)
+  T_memory     = HLO_bytes_per_chip    / HBM_BW          (819 GB/s)
+  T_collective = coll_bytes_per_chip   / ICI_BW          (~50 GB/s/link)
+
+``compiled.cost_analysis()`` reports the per-device (SPMD-partitioned)
+module, so per-chip terms come out directly; global = per-chip x chips.
+Collective bytes are NOT in cost_analysis — we parse the optimized HLO and
+sum *operand* bytes of every collective instruction (async `-start` forms
+counted once; `-done` forms skipped).
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, asdict
+from typing import Dict, Optional
+
+# --- TPU v5e-class hardware constants (per chip) ---
+PEAK_FLOPS = 197e12       # bf16 FLOP/s
+HBM_BW = 819e9            # bytes/s
+ICI_BW = 50e9             # bytes/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1,
+}
+
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+_COLL_RE = re.compile(
+    r"=\s*(?:\([^)]*\)|\S+)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute|"
+    r"collective-broadcast|ragged-all-to-all)"
+    r"(-start)?\(")
+_COLL_SPLIT_RE = re.compile(
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute|"
+    r"collective-broadcast|ragged-all-to-all)(-start)?\(")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Sum operand bytes per collective kind from optimized HLO text."""
+    out: Dict[str, float] = {}
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        kind = m.group(1)
+        # operands are everything after the op name's opening paren
+        tail = _COLL_SPLIT_RE.split(line, maxsplit=1)[-1]
+        nbytes = sum(_shape_bytes(d, dims)
+                     for d, dims in _SHAPE_RE.findall(tail))
+        out[kind] = out.get(kind, 0.0) + float(nbytes)
+    out["total"] = float(sum(v for k, v in out.items() if k != "total"))
+    return out
+
+
+@dataclass
+class RooflineTerms:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    flops_per_chip: float
+    bytes_per_chip: float       # fusion-optimal lower bound (roofline term)
+    bytes_per_chip_ub: float    # fusion-pessimal upper bound (recorded)
+    coll_bytes_per_chip: float
+    coll_breakdown: Dict[str, float]
+    t_compute: float
+    t_memory: float
+    t_memory_ub: float
+    t_collective: float
+    dominant: str
+    model_flops: float          # 6*N*D (train) or 2*N*D (inference), global
+    useful_flops_ratio: float   # model_flops / (flops_per_chip * chips)
+    peak_fraction: float        # model_flops-roofline vs achieved-step bound
+    memory_per_chip: Optional[Dict[str, float]] = None
+
+    def to_dict(self):
+        return asdict(self)
+
+
+def model_flops_for(cfg, shape) -> float:
+    """Paper-style useful FLOPs: 6*N_active*D train, 2*N_active*D inference."""
+    n = cfg.param_count(active_only=(cfg.family == "moe"))
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    tokens = shape.global_batch * 1
+    return 2.0 * n * tokens
+
+
+def analyze(cfg, shape, mesh_name: str, chips: int,
+            cost: Dict[str, float], hlo_text: str,
+            memory: Optional[Dict[str, float]] = None) -> RooflineTerms:
+    # trip-count-corrected accounting (see hlo_analysis.py: XLA CPU
+    # cost_analysis counts while bodies once — useless for scanned layers)
+    from repro.launch.hlo_analysis import analyze_hlo
+    parsed = analyze_hlo(hlo_text)
+    flops = float(parsed["flops"])
+    byts_lb = float(parsed["bytes_lb"])
+    byts_ub = float(parsed["bytes"])
+    coll = dict(parsed["coll_breakdown"])
+    coll["total"] = float(parsed["coll_bytes"])
+    t_c = flops / PEAK_FLOPS
+    t_m = byts_lb / HBM_BW
+    t_m_ub = byts_ub / HBM_BW
+    t_x = coll["total"] / ICI_BW
+    dom = max((("compute", t_c), ("memory", t_m), ("collective", t_x)),
+              key=lambda kv: kv[1])[0]
+    mf = model_flops_for(cfg, shape)
+    total_hlo_flops = flops * chips
+    ratio = mf / total_hlo_flops if total_hlo_flops else 0.0
+    bound = max(t_c, t_m, t_x)
+    ideal = mf / (chips * PEAK_FLOPS)
+    frac = ideal / bound if bound > 0 else 0.0
+    return RooflineTerms(
+        arch=cfg.name, shape=shape.name, mesh=mesh_name, chips=chips,
+        flops_per_chip=flops, bytes_per_chip=byts_lb,
+        bytes_per_chip_ub=byts_ub,
+        coll_bytes_per_chip=coll["total"], coll_breakdown=coll,
+        t_compute=t_c, t_memory=t_m, t_memory_ub=t_m_ub, t_collective=t_x,
+        dominant=dom, model_flops=mf, useful_flops_ratio=ratio,
+        peak_fraction=frac, memory_per_chip=memory)

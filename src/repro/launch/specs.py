@@ -1,0 +1,71 @@
+"""ShapeDtypeStruct input stand-ins for every (arch x shape) cell, plus the
+jit-able step builders used by both the dry-run and the real launchers.
+
+``input_specs(arch, shape)`` returns exactly what the lowered step consumes:
+  * train:   (abstract_params, abstract_opt_state, abstract_batch)
+  * prefill: (abstract_params, abstract_batch)
+  * decode:  (abstract_params, abstract_cache, tokens, pos)
+No device memory is allocated anywhere in this module.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import (ModelConfig, ShapeConfig, SHAPES,
+                                cell_is_runnable, get_config)
+from repro.models import api
+from repro.train.optim import AdamWConfig, init_opt_state
+from repro.train.step import make_decode_step, make_prefill_step, \
+    make_train_step
+
+
+def abstract_opt_state(aparams, moments_dtype=jnp.float32):
+    return jax.eval_shape(
+        lambda p: init_opt_state(p, moments_dtype=moments_dtype), aparams)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig,
+                moments_dtype=jnp.float32) -> Tuple[Any, ...]:
+    """Abstract inputs for the cell's step function."""
+    ok, why = cell_is_runnable(cfg, shape)
+    if not ok:
+        raise ValueError(f"{cfg.name} x {shape.name}: {why}")
+    aparams = api.abstract_params(cfg)
+    if shape.kind == "train":
+        abatch = api.abstract_batch(cfg, shape.global_batch, shape.seq_len)
+        aopt = abstract_opt_state(aparams, moments_dtype)
+        return aparams, aopt, abatch
+    if shape.kind == "prefill":
+        abatch = api.abstract_batch(cfg, shape.global_batch, shape.seq_len)
+        return aparams, abatch
+    # decode: one new token against a cache of length seq_len
+    acache = api.abstract_cache(cfg, shape.global_batch, shape.seq_len)
+    tokens = jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32)
+    pos = jax.ShapeDtypeStruct((), jnp.int32)
+    return aparams, acache, tokens, pos
+
+
+def step_fn(cfg: ModelConfig, shape: ShapeConfig,
+            grad_pspecs=None) -> Callable:
+    if shape.kind == "train":
+        return make_train_step(cfg, AdamWConfig(), grad_pspecs=grad_pspecs)
+    if shape.kind == "prefill":
+        return make_prefill_step(cfg, shape.seq_len)
+
+    decode = make_decode_step(cfg)
+
+    def serve_step(params, cache, tokens, pos):
+        return decode(params, cache, tokens, pos)
+
+    return serve_step
+
+
+def donate_for(shape: ShapeConfig) -> Tuple[int, ...]:
+    if shape.kind == "train":
+        return (0, 1)      # params, opt_state
+    if shape.kind == "decode":
+        return (1,)        # cache
+    return ()

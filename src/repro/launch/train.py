@@ -1,0 +1,111 @@
+"""Production training driver.
+
+Runs any registered arch (or its reduced smoke config) on whatever devices
+exist, with the full substrate engaged: deterministic data pipeline,
+jit'd train step with sharding, checkpoint/restart (atomic + async),
+straggler watchdog, and optional int8 gradient compression on the data
+axis.
+
+  PYTHONPATH=src python -m repro.launch.train --arch qwen2-0.5b --smoke \
+      --steps 50 --batch 8 --seq 128 --ckpt-dir /tmp/ckpt --ckpt-every 20
+
+Restart the same command after a kill: it resumes from the latest
+checkpoint (data cursor = step, so the stream continues exactly).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.configs.base import ARCH_IDS, get_config, smoke_config
+from repro.data.pipeline import DataConfig, TokenPipeline
+from repro.models import api
+from repro.train.optim import AdamWConfig, init_opt_state
+from repro.train.step import make_train_step
+from repro.train.watchdog import StepWatchdog
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS, default="qwen2-0.5b")
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced same-family config (CPU-friendly)")
+    ap.add_argument("--d-model", type=int, default=0,
+                    help="override width (e.g. ~100M custom run)")
+    ap.add_argument("--n-layers", type=int, default=0)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--ckpt-keep", type=int, default=3)
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args()
+
+    cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    overrides = {}
+    if args.d_model:
+        overrides.update(d_model=args.d_model,
+                         head_dim=max(args.d_model // cfg.n_heads, 8),
+                         d_ff=4 * args.d_model)
+    if args.n_layers:
+        overrides["n_layers"] = args.n_layers
+    if overrides:
+        cfg = cfg.replace(**overrides)
+    if args.smoke or jax.default_backend() == "cpu":
+        cfg = cfg.replace(param_dtype="float32", compute_dtype="float32",
+                          train_microbatches=1)
+
+    print(f"arch={cfg.name} layers={cfg.n_layers} d={cfg.d_model} "
+          f"params~{cfg.param_count()/1e6:.1f}M devices={jax.device_count()}")
+
+    opt_cfg = AdamWConfig(lr=args.lr, total_steps=args.steps,
+                          warmup_steps=max(args.steps // 20, 5))
+    pipeline = TokenPipeline(cfg, DataConfig(batch=args.batch, seq=args.seq))
+    step_fn = jax.jit(make_train_step(cfg, opt_cfg), donate_argnums=(0, 1))
+
+    params = api.init(jax.random.PRNGKey(0), cfg)
+    opt_state = init_opt_state(params)
+    start = 0
+
+    mgr = None
+    if args.ckpt_dir:
+        mgr = CheckpointManager(args.ckpt_dir, keep=args.ckpt_keep,
+                                async_save=True)
+        latest = mgr.latest_step()
+        if latest is not None:
+            tree = mgr.restore(latest, {"params": params, "opt": opt_state})
+            params, opt_state = tree["params"], tree["opt"]
+            start = latest
+            print(f"resumed from step {start}")
+
+    dog = StepWatchdog(on_straggler=lambda s, dt, p50: print(
+        f"[watchdog] step {s} straggled: {dt*1e3:.0f}ms vs p50 "
+        f"{p50*1e3:.0f}ms"))
+
+    for step in range(start, args.steps):
+        dog.start()
+        batch = pipeline.batch_at(step)
+        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        loss = float(metrics["loss"])
+        dt = dog.stop(step)
+        if step % args.log_every == 0 or step == args.steps - 1:
+            print(f"step {step:5d} loss {loss:.4f} "
+                  f"gnorm {float(metrics['grad_norm']):.3f} "
+                  f"lr {float(metrics['lr']):.2e} {dt*1e3:.0f}ms")
+        if mgr and (step + 1) % args.ckpt_every == 0:
+            mgr.save(step + 1, {"params": params, "opt": opt_state},
+                     extra={"loss": loss})
+    if mgr:
+        mgr.save(args.steps, {"params": params, "opt": opt_state})
+        mgr.wait()
+    print("done")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,93 @@
+"""Family dispatch: one uniform functional API over all 10 architectures.
+
+  init(rng, cfg)                          -> params
+  loss(params, cfg, batch)                -> (scalar loss, metrics)
+  prefill(params, cfg, batch, max_len)    -> (logits, cache)
+  decode(params, cfg, cache, tokens, pos) -> (logits, cache)
+  abstract_* variants                     -> ShapeDtypeStruct trees (no alloc)
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models import lm, whisper
+
+Params = Dict[str, Any]
+
+
+def init(rng, cfg: ModelConfig) -> Params:
+    if cfg.family == "audio":
+        return whisper.init_params(rng, cfg)
+    return lm.init_params(rng, cfg)
+
+
+def forward(params: Params, cfg: ModelConfig, batch: Dict[str, jax.Array]
+            ) -> Tuple[jax.Array, jax.Array]:
+    if cfg.family == "audio":
+        return whisper.forward(params, cfg, batch["tokens"], batch["frames"])
+    return lm.forward(params, cfg, batch["tokens"],
+                      patch_embeds=batch.get("patch_embeds"))
+
+
+def loss(params: Params, cfg: ModelConfig, batch: Dict[str, jax.Array]
+         ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    logits, aux = forward(params, cfg, batch)
+    mask = batch.get("loss_mask")
+    ce = L.cross_entropy(logits[:, :-1], batch["tokens"][:, 1:],
+                         None if mask is None else mask[:, 1:])
+    total = ce + 0.01 * aux
+    return total, {"ce": ce, "aux": aux}
+
+
+def prefill(params: Params, cfg: ModelConfig, batch: Dict[str, jax.Array],
+            max_len: int) -> Tuple[jax.Array, Params]:
+    if cfg.family == "audio":
+        return whisper.prefill(params, cfg, batch["tokens"],
+                               batch["frames"], max_len)
+    return lm.prefill(params, cfg, batch["tokens"], max_len,
+                      patch_embeds=batch.get("patch_embeds"))
+
+
+def decode(params: Params, cfg: ModelConfig, cache: Params,
+           tokens: jax.Array, pos: jax.Array) -> Tuple[jax.Array, Params]:
+    if cfg.family == "audio":
+        return whisper.decode_step(params, cfg, cache, tokens, pos)
+    return lm.decode_step(params, cfg, cache, tokens, pos)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> Params:
+    if cfg.family == "audio":
+        return whisper.init_cache(cfg, batch, max_len)
+    return lm.init_cache(cfg, batch, max_len)
+
+
+# ---------------------------------------------------------------------------
+# abstract (ShapeDtypeStruct) builders — no device allocation
+# ---------------------------------------------------------------------------
+
+
+def abstract_params(cfg: ModelConfig) -> Params:
+    rng = jax.random.PRNGKey(0)
+    return jax.eval_shape(lambda: init(rng, cfg))
+
+
+def abstract_cache(cfg: ModelConfig, batch: int, max_len: int) -> Params:
+    return jax.eval_shape(lambda: init_cache(cfg, batch, max_len))
+
+
+def abstract_batch(cfg: ModelConfig, batch: int, seq: int,
+                   with_labels: bool = True) -> Dict[str, Any]:
+    sd = jax.ShapeDtypeStruct
+    cd = jnp.dtype(cfg.compute_dtype)
+    out: Dict[str, Any] = {"tokens": sd((batch, seq), jnp.int32)}
+    if cfg.family == "vlm":
+        out["patch_embeds"] = sd((batch, cfg.n_frontend_tokens,
+                                  cfg.d_model), cd)
+    if cfg.family == "audio":
+        out["frames"] = sd((batch, cfg.encoder_len, cfg.d_model), cd)
+    return out

@@ -1,0 +1,497 @@
+"""Shared NN layers: RMSNorm, RoPE, GQA attention (direct / chunked-flash /
+cached-decode), dense FFNs, embeddings.
+
+Conventions
+-----------
+* params are nested dicts of jnp arrays; linear weights are (d_in, d_out).
+* activations flow in ``cfg.compute_dtype``; norms, softmax and loss in fp32.
+* attention is grouped-query: q heads = n_kv_heads * group_size.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+Params = Dict[str, Any]
+
+NEG_INF = -1e30
+
+
+def cdtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.compute_dtype)
+
+
+def pdtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.param_dtype)
+
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+
+def dense_init(rng, d_in: int, d_out: int, dtype, scale: float | None = None):
+    scale = scale if scale is not None else 1.0 / math.sqrt(d_in)
+    return (jax.random.normal(rng, (d_in, d_out), jnp.float32) * scale).astype(dtype)
+
+
+def embed_init(rng, vocab: int, d: int, dtype):
+    return (jax.random.normal(rng, (vocab, d), jnp.float32) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norm / rope
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x: jax.Array, weight: jax.Array, eps: float) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * weight.astype(jnp.float32)
+    return out.astype(dt)
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, D); positions: (S,) int32."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = jnp.exp(-math.log(theta) * jnp.arange(half, dtype=jnp.float32) / half)
+    angles = positions.astype(jnp.float32)[:, None] * freqs[None, :]  # (S, half)
+    cos = jnp.cos(angles)[:, None, :]  # (S, 1, half)
+    sin = jnp.sin(angles)[:, None, :]
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention cores
+# ---------------------------------------------------------------------------
+
+
+def _expand_kv(x: jax.Array, g: int) -> jax.Array:
+    """(B,S,Hkv,Dh) -> (B,S,Hq,Dh).  Only reached when KV heads are
+    replicated over the model axis (Hkv doesn't divide it), so the repeat
+    never crosses a sharded dimension."""
+    if g == 1:
+        return x
+    return jnp.repeat(x, g, axis=2)
+
+
+def _direct_attention(q, k, v, q_pos, kv_pos, causal: bool) -> jax.Array:
+    """q: (B,Sq,Hq,Dh)  k,v: (B,Skv,Hkv,Dh)  -> (B,Sq,Hq,Dh)."""
+    dh = q.shape[-1]
+    g = q.shape[2] // k.shape[2]
+    k = _expand_kv(k, g)
+    v = _expand_kv(v, g)
+    scale = 1.0 / math.sqrt(dh)
+    s = jnp.einsum("bqhd,bshd->bhqs", q, k,
+                   preferred_element_type=jnp.float32)
+    s = s.astype(jnp.float32) * scale
+    if causal:
+        mask = kv_pos[None, :] <= q_pos[:, None]  # (Sq, Skv)
+        s = jnp.where(mask[None, None], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhqs,bshd->bqhd", w.astype(v.dtype), v)
+    return o
+
+
+def _chunked_attention(q, k, v, q_pos, kv_pos, causal: bool, chunk: int) -> jax.Array:
+    """Flash-style online-softmax attention, scanning over KV chunks.
+
+    Never materializes the (Sq, Skv) score matrix; peak score memory is
+    (B,Hq,Sq,chunk).  This is the jnp analogue of an IO-aware fused
+    attention and is what keeps the 32k prefill roofline memory term honest.
+    """
+    b, sq, hq, dh = q.shape
+    hkv = k.shape[2]
+    skv = k.shape[1]
+    scale = 1.0 / math.sqrt(dh)
+    n = -(-skv // chunk)
+    pad = n * chunk - skv
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        kv_pos = jnp.pad(kv_pos, (0, pad), constant_values=jnp.iinfo(jnp.int32).max)
+    pc = kv_pos.reshape(n, chunk)
+
+    qf = q.astype(jnp.float32)
+    g = hq // hkv
+
+    def body(carry, xs):
+        m, l, acc = carry
+        ci, pb = xs
+        # slice the chunk in-body: scanning over pre-transposed
+        # (n, b, chunk, ...) stacks materializes a full transposed copy of
+        # K and V per layer (measured ~180GB/step on qwen2 x train_4k)
+        kb = jax.lax.dynamic_slice_in_dim(k, ci * chunk, chunk, axis=1)
+        vb = jax.lax.dynamic_slice_in_dim(v, ci * chunk, chunk, axis=1)
+        kb = _expand_kv(kb, g)
+        vb = _expand_kv(vb, g)
+        s = jnp.einsum("bqhd,bshd->bhqs", qf, kb.astype(jnp.float32)) * scale
+        valid = pb[None, :] < jnp.iinfo(jnp.int32).max
+        if causal:
+            valid = valid & (pb[None, :] <= q_pos[:, None])
+        s = jnp.where(valid[None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + p.sum(axis=-1)
+        acc_new = acc * alpha[..., None] + jnp.einsum(
+            "bhqs,bshd->bhqd", p, vb.astype(jnp.float32))
+        return (m_new, l_new, acc_new), None
+
+    # remat per kv-block: without this, the backward pass tapes every
+    # block's (B,Hq,Sq,chunk) score matrix — the full S x S tape that the
+    # online-softmax form exists to avoid.
+    body = jax.checkpoint(body)
+
+    m0 = jnp.full((b, hq, sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, hq, sq), jnp.float32)
+    a0 = jnp.zeros((b, hq, sq, dh), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        body, (m0, l0, a0), (jnp.arange(n, dtype=jnp.int32), pc))
+    o = acc / jnp.maximum(l, 1e-30)[..., None]
+    return o.transpose(0, 2, 1, 3).astype(q.dtype)  # (B,Sq,Hq,Dh)
+
+
+# ---------------------------------------------------------------------------
+# attention module
+# ---------------------------------------------------------------------------
+
+
+def attn_init(rng, cfg: ModelConfig, use_rope: bool = True) -> Params:
+    d, dh = cfg.d_model, cfg.resolved_head_dim
+    hq, hkv = cfg.n_heads, cfg.n_kv_heads
+    dt = pdtype(cfg)
+    ks = jax.random.split(rng, 4)
+    p: Params = {
+        "wq": dense_init(ks[0], d, hq * dh, dt),
+        "wk": dense_init(ks[1], d, hkv * dh, dt),
+        "wv": dense_init(ks[2], d, hkv * dh, dt),
+        "wo": dense_init(ks[3], hq * dh, d, dt),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((hq * dh,), dt)
+        p["bk"] = jnp.zeros((hkv * dh,), dt)
+        p["bv"] = jnp.zeros((hkv * dh,), dt)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((dh,), dt)
+        p["k_norm"] = jnp.ones((dh,), dt)
+    return p
+
+
+def _project_qkv(p: Params, cfg: ModelConfig, xq, xkv, q_pos, kv_pos,
+                 use_rope: bool):
+    b, sq, _ = xq.shape
+    skv = xkv.shape[1]
+    dh = cfg.resolved_head_dim
+    hq, hkv = cfg.n_heads, cfg.n_kv_heads
+    q = xq @ p["wq"]
+    k = xkv @ p["wk"]
+    v = xkv @ p["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(b, sq, hq, dh)
+    k = k.reshape(b, skv, hkv, dh)
+    v = v.reshape(b, skv, hkv, dh)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    if use_rope:
+        q = apply_rope(q, q_pos, cfg.rope_theta)
+        k = apply_rope(k, kv_pos, cfg.rope_theta)
+    return q, k, v
+
+
+def attention(p: Params, cfg: ModelConfig, x: jax.Array, positions: jax.Array,
+              causal: bool = True, use_rope: bool = True,
+              kv_source: Optional[jax.Array] = None,
+              kv_positions: Optional[jax.Array] = None) -> jax.Array:
+    """Full-sequence (train / prefill / encoder / cross) attention.
+
+    kv_source: if given, cross-attention against that sequence.
+    """
+    from repro.distributed.ctx import constrain
+    b, sq, _ = x.shape
+    xkv = kv_source if kv_source is not None else x
+    kv_pos = kv_positions if kv_positions is not None else positions
+    q, k, v = _project_qkv(p, cfg, x, xkv, positions, kv_pos, use_rope)
+    if cfg.sp_attention:
+        # context parallelism: q positions shard over "model"; k/v stay
+        # replicated.  Every score/softmax/output op is then local per
+        # q-shard — this is the hillclimb fix for archs whose head counts
+        # don't divide the TP axis (EXPERIMENTS §Perf, qwen2-0.5b cell).
+        q = constrain(q, "batch", "model", None, None)
+    if max(sq, xkv.shape[1]) > cfg.attn_chunk_threshold:
+        o = _chunked_attention(q, k, v, positions, kv_pos, causal, cfg.attn_chunk)
+    else:
+        o = _direct_attention(q, k, v, positions, kv_pos, causal)
+    o = o.reshape(b, sq, cfg.n_heads * cfg.resolved_head_dim).astype(x.dtype)
+    if cfg.sp_attention:
+        o = constrain(o, "batch", "model", None)
+    out = o @ p["wo"]
+    if cfg.sp_attention:
+        out = constrain(out, "batch", None, None)
+    return out
+
+
+def attention_prefill(p: Params, cfg: ModelConfig, x: jax.Array,
+                      positions: jax.Array, cache_len: int,
+                      use_rope: bool = True):
+    """Prefill: run causal attention AND return (k, v) to seed a cache of
+    length ``cache_len`` (>= S).
+
+    Cache layout is (B, Hkv, S, Dh): the decode dots then need no
+    transposes of the (huge) cache — a measured 3x memory-term win on
+    decode_32k (EXPERIMENTS §Perf).
+    """
+    b, sq, _ = x.shape
+    q, k, v = _project_qkv(p, cfg, x, x, positions, positions, use_rope)
+    if sq > cfg.attn_chunk_threshold:
+        o = _chunked_attention(q, k, v, positions, positions, True, cfg.attn_chunk)
+    else:
+        o = _direct_attention(q, k, v, positions, positions, True)
+    o = o.reshape(b, sq, cfg.n_heads * cfg.resolved_head_dim).astype(x.dtype)
+    out = o @ p["wo"]
+    pad = cache_len - sq
+    ck = jnp.pad(k.transpose(0, 2, 1, 3), ((0, 0), (0, 0), (0, pad), (0, 0)))
+    cv = jnp.pad(v.transpose(0, 2, 1, 3), ((0, 0), (0, 0), (0, pad), (0, 0)))
+    return out, ck, cv
+
+
+def attention_decode(p: Params, cfg: ModelConfig, x: jax.Array,
+                     pos: jax.Array, cache_k: jax.Array, cache_v: jax.Array,
+                     use_rope: bool = True,
+                     cross: bool = False, cross_len: Optional[int] = None):
+    """One-token decode.  x: (B,1,d); cache_k/v: (B,Hkv,S_max,Dh);
+    pos: scalar int32 — current position (uniform across batch).
+
+    cross=True: cache holds precomputed encoder K/V (no update, no causal).
+
+    Memory discipline (this op IS the decode roofline): grouped einsums
+    against the raw (B,Hkv,S,Dh) cache — no expanded-KV copy (G x bytes),
+    no fp32 cache cast (2 x bytes), no transposes (layout already matches
+    the dot); scores accumulate in fp32 via preferred_element_type.
+    """
+    b, sq, _ = x.shape
+    dh = cfg.resolved_head_dim
+    hq, hkv = cfg.n_heads, cfg.n_kv_heads
+    g = hq // hkv
+    s_max = cache_k.shape[2]
+    q = x @ p["wq"]
+    if cfg.qkv_bias:
+        q = q + p["bq"]
+    q = q.reshape(b, sq, hq, dh)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+    q_pos = jnp.full((sq,), pos, jnp.int32)
+    if use_rope:
+        q = apply_rope(q, q_pos, cfg.rope_theta)
+
+    if not cross:
+        k_new = x @ p["wk"]
+        v_new = x @ p["wv"]
+        if cfg.qkv_bias:
+            k_new, v_new = k_new + p["bk"], v_new + p["bv"]
+        k_new = k_new.reshape(b, sq, hkv, dh)
+        v_new = v_new.reshape(b, sq, hkv, dh)
+        if cfg.qk_norm:
+            k_new = rms_norm(k_new, p["k_norm"], cfg.norm_eps)
+        if use_rope:
+            k_new = apply_rope(k_new, q_pos, cfg.rope_theta)
+        cache_k = jax.lax.dynamic_update_slice(
+            cache_k, k_new.transpose(0, 2, 1, 3).astype(cache_k.dtype),
+            (0, 0, pos, 0))
+        cache_v = jax.lax.dynamic_update_slice(
+            cache_v, v_new.transpose(0, 2, 1, 3).astype(cache_v.dtype),
+            (0, 0, pos, 0))
+        kv_pos = jnp.arange(s_max, dtype=jnp.int32)
+        valid = kv_pos <= pos
+    else:
+        kv_pos = jnp.arange(s_max, dtype=jnp.int32)
+        valid = kv_pos < (cross_len if cross_len is not None else s_max)
+
+    scale = 1.0 / math.sqrt(dh)
+    qg = q.reshape(b, sq, hkv, g, dh).astype(cache_k.dtype)
+    s = jnp.einsum("bqhgd,bhsd->bhgqs", qg, cache_k,
+                   preferred_element_type=jnp.float32) * scale
+    s = jnp.where(valid[None, None, None, None, :], s, NEG_INF)
+    w = jax.nn.softmax(s.astype(jnp.float32), axis=-1)
+    o = jnp.einsum("bhgqs,bhsd->bqhgd", w.astype(cache_v.dtype), cache_v,
+                   preferred_element_type=jnp.float32)
+    o = o.reshape(b, sq, hq * dh).astype(x.dtype)
+    return o @ p["wo"], cache_k, cache_v
+
+
+# ---------------------------------------------------------------------------
+# int8 KV-cache quantization (per-token-per-head scales over Dh)
+# ---------------------------------------------------------------------------
+
+
+def quantize_kv(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """(..., S, Dh) bf16 -> (int8 values, (..., S) bf16 scales)."""
+    xf = x.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(xf), axis=-1), 1e-8) / 127.0
+    q = jnp.clip(jnp.round(xf / scale[..., None]), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.bfloat16)
+
+
+def dequantize_kv(q: jax.Array, scale: jax.Array, dtype) -> jax.Array:
+    return (q.astype(jnp.float32)
+            * scale.astype(jnp.float32)[..., None]).astype(dtype)
+
+
+def attention_decode_q8(p: Params, cfg: ModelConfig, x: jax.Array,
+                        pos: jax.Array, cache_k, cache_v, k_scale, v_scale,
+                        use_rope: bool = True):
+    """attention_decode against an int8 cache: dequant is fused into the
+    dots on TPU (the HBM read is 1 byte/elem + the scale vector), new
+    tokens are quantized before the in-place cache update."""
+    cdt = jnp.dtype(cfg.compute_dtype)
+    b, sq, _ = x.shape
+    dh = cfg.resolved_head_dim
+    hq, hkv = cfg.n_heads, cfg.n_kv_heads
+    g = hq // hkv
+    s_max = cache_k.shape[2]
+    q = x @ p["wq"]
+    if cfg.qkv_bias:
+        q = q + p["bq"]
+    q = q.reshape(b, sq, hq, dh)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+    q_pos = jnp.full((sq,), pos, jnp.int32)
+    if use_rope:
+        q = apply_rope(q, q_pos, cfg.rope_theta)
+
+    k_new = x @ p["wk"]
+    v_new = x @ p["wv"]
+    if cfg.qkv_bias:
+        k_new, v_new = k_new + p["bk"], v_new + p["bv"]
+    k_new = k_new.reshape(b, sq, hkv, dh)
+    v_new = v_new.reshape(b, sq, hkv, dh)
+    if cfg.qk_norm:
+        k_new = rms_norm(k_new, p["k_norm"], cfg.norm_eps)
+    if use_rope:
+        k_new = apply_rope(k_new, q_pos, cfg.rope_theta)
+    kq, ks = quantize_kv(k_new.transpose(0, 2, 1, 3))   # (B,Hkv,1,Dh)
+    vq, vs = quantize_kv(v_new.transpose(0, 2, 1, 3))
+    cache_k = jax.lax.dynamic_update_slice(cache_k, kq, (0, 0, pos, 0))
+    cache_v = jax.lax.dynamic_update_slice(cache_v, vq, (0, 0, pos, 0))
+    k_scale = jax.lax.dynamic_update_slice(k_scale, ks, (0, 0, pos))
+    v_scale = jax.lax.dynamic_update_slice(v_scale, vs, (0, 0, pos))
+
+    kv_pos = jnp.arange(s_max, dtype=jnp.int32)
+    valid = kv_pos <= pos
+    scale = 1.0 / math.sqrt(dh)
+    qg = q.reshape(b, sq, hkv, g, dh).astype(cdt)
+    kf = dequantize_kv(cache_k, k_scale, cdt)
+    s = jnp.einsum("bqhgd,bhsd->bhgqs", qg, kf,
+                   preferred_element_type=jnp.float32) * scale
+    s = jnp.where(valid[None, None, None, None, :], s, NEG_INF)
+    w = jax.nn.softmax(s.astype(jnp.float32), axis=-1)
+    vf = dequantize_kv(cache_v, v_scale, cdt)
+    o = jnp.einsum("bhgqs,bhsd->bqhgd", w.astype(cdt), vf,
+                   preferred_element_type=jnp.float32)
+    o = o.reshape(b, sq, hq * dh).astype(x.dtype)
+    return o @ p["wo"], cache_k, cache_v, k_scale, v_scale
+
+
+# ---------------------------------------------------------------------------
+# FFN
+# ---------------------------------------------------------------------------
+
+_GATED = ("swiglu", "geglu")
+
+
+def ffn_init(rng, cfg: ModelConfig, d_ff: Optional[int] = None) -> Params:
+    d = cfg.d_model
+    d_ff = d_ff or cfg.d_ff
+    dt = pdtype(cfg)
+    ks = jax.random.split(rng, 3)
+    p: Params = {
+        "w_up": dense_init(ks[0], d, d_ff, dt),
+        "w_down": dense_init(ks[1], d_ff, d, dt),
+    }
+    if cfg.activation in _GATED:
+        p["w_gate"] = dense_init(ks[2], d, d_ff, dt)
+    return p
+
+
+def _act(h: jax.Array, activation: str) -> jax.Array:
+    if activation in ("swiglu",):
+        return jax.nn.silu(h)
+    if activation in ("geglu", "gelu"):
+        return jax.nn.gelu(h)
+    if activation == "squared_relu":
+        r = jax.nn.relu(h)
+        return r * r
+    raise ValueError(activation)
+
+
+def ffn(p: Params, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    if cfg.activation in _GATED:
+        h = _act(x @ p["w_gate"], cfg.activation) * (x @ p["w_up"])
+    else:
+        h = _act(x @ p["w_up"], cfg.activation)
+    return h @ p["w_down"]
+
+
+# ---------------------------------------------------------------------------
+# embedding / logits / loss
+# ---------------------------------------------------------------------------
+
+
+def sinusoid_positions(n: int, d: int) -> jax.Array:
+    pos = jnp.arange(n, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(d // 2, dtype=jnp.float32)[None, :]
+    angle = pos / jnp.power(10_000.0, 2 * dim / d)
+    return jnp.concatenate([jnp.sin(angle), jnp.cos(angle)], axis=-1)
+
+
+def sinusoid_at(pos: jax.Array, d: int) -> jax.Array:
+    """Sinusoidal embedding for a single (traced) position. -> (d,)"""
+    dim = jnp.arange(d // 2, dtype=jnp.float32)
+    angle = pos.astype(jnp.float32) / jnp.power(10_000.0, 2 * dim / d)
+    return jnp.concatenate([jnp.sin(angle), jnp.cos(angle)], axis=-1)
+
+
+def logits_from_hidden(params: Params, cfg: ModelConfig, h: jax.Array) -> jax.Array:
+    from repro.distributed.ctx import constrain
+    if cfg.tie_embeddings:
+        table = params["embed"]
+        out = jnp.einsum("bsd,vd->bsv", h, table,
+                         preferred_element_type=jnp.float32)
+    else:
+        out = jnp.einsum("bsd,dv->bsv", h, params["unembed"],
+                         preferred_element_type=jnp.float32)
+    # keep the (B,S,V) tensor vocab-sharded — unconstrained, GSPMD is prone
+    # to replicating it, which is a ~40GB/chip temp at train_4k scale
+    return constrain(out, "batch", None, "model")
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array,
+                  mask: Optional[jax.Array] = None) -> jax.Array:
+    """logits (B,S,V) fp32; labels (B,S) int32.
+
+    The gold-logit extraction uses a compare+reduce instead of
+    take_along_axis: a gather across a vocab-sharded axis makes GSPMD
+    all-gather the full logits; compare+reduce keeps everything sharded and
+    lowers the reduction to a psum.
+    """
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    vocab_iota = jnp.arange(logits.shape[-1], dtype=labels.dtype)
+    onehot = (vocab_iota[None, None, :] == labels[..., None])
+    gold = jnp.sum(jnp.where(onehot, logits, 0.0), axis=-1)
+    nll = lse - gold
+    if mask is not None:
+        nll = nll * mask
+        return nll.sum() / jnp.maximum(mask.sum(), 1.0)
+    return nll.mean()

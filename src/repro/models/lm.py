@@ -1,0 +1,367 @@
+"""Unified decoder-only language model covering the dense / moe / vlm / ssm /
+hybrid families, with scan-over-layers (O(1) HLO size — required for 96-layer
+x 512-chip compiles) and optional remat.
+
+Three entry points per family:
+  * ``forward``      — full-sequence logits (training)
+  * ``prefill``      — full-sequence forward that also fills a decode cache
+  * ``decode_step``  — one-token step against the cache (serve_step)
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models import mamba2 as M
+from repro.models import moe as MOE
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def _attn_block_init(rng, cfg: ModelConfig) -> Params:
+    k1, k2, k3, k4 = jax.random.split(rng, 4)
+    return {
+        "attn_norm": jnp.ones((cfg.d_model,), jnp.dtype(cfg.param_dtype)),
+        "attn": L.attn_init(k1, cfg),
+        "ffn_norm": jnp.ones((cfg.d_model,), jnp.dtype(cfg.param_dtype)),
+        "ffn": L.ffn_init(k2, cfg),
+    }
+
+
+def _layer_init(rng, cfg: ModelConfig) -> Params:
+    """One scanned layer's params (family-dependent)."""
+    if cfg.family in ("ssm", "hybrid"):
+        k1, k2 = jax.random.split(rng)
+        return {
+            "norm": jnp.ones((cfg.d_model,), jnp.dtype(cfg.param_dtype)),
+            "mamba": M.mamba2_init(k1, cfg),
+        }
+    p = _attn_block_init(rng, cfg)
+    if cfg.family == "moe":
+        del p["ffn"]
+        p["moe"] = MOE.moe_init(jax.random.fold_in(rng, 7), cfg)
+    return p
+
+
+def init_params(rng, cfg: ModelConfig) -> Params:
+    dt = jnp.dtype(cfg.param_dtype)
+    k_embed, k_layers, k_un, k_shared = jax.random.split(rng, 4)
+    layer_keys = jax.random.split(k_layers, cfg.n_layers)
+    layers = jax.vmap(lambda k: _layer_init(k, cfg))(layer_keys)
+    params: Params = {
+        "embed": L.embed_init(k_embed, cfg.vocab_size, cfg.d_model, dt),
+        "final_norm": jnp.ones((cfg.d_model,), dt),
+        "layers": layers,
+    }
+    if not cfg.tie_embeddings:
+        params["unembed"] = L.dense_init(k_un, cfg.d_model, cfg.vocab_size, dt)
+    if cfg.family == "hybrid":
+        params["shared_attn"] = _attn_block_init(k_shared, cfg)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# per-layer bodies
+# ---------------------------------------------------------------------------
+
+
+def _dense_layer(lp: Params, cfg: ModelConfig, h: jax.Array,
+                 positions: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    a = L.attention(lp["attn"], cfg,
+                    L.rms_norm(h, lp["attn_norm"], cfg.norm_eps), positions)
+    h = h + a
+    hin = L.rms_norm(h, lp["ffn_norm"], cfg.norm_eps)
+    if cfg.family == "moe":
+        f, aux = MOE.moe_ffn(lp["moe"], cfg, hin)
+    else:
+        f, aux = L.ffn(lp["ffn"], cfg, hin), jnp.zeros((), jnp.float32)
+    return h + f, aux
+
+
+def _shared_attn_apply(sp: Params, cfg: ModelConfig, h: jax.Array,
+                       positions: jax.Array) -> jax.Array:
+    a = L.attention(sp["attn"], cfg,
+                    L.rms_norm(h, sp["attn_norm"], cfg.norm_eps), positions)
+    h = h + a
+    f = L.ffn(sp["ffn"], cfg, L.rms_norm(h, sp["ffn_norm"], cfg.norm_eps))
+    return h + f
+
+
+def _segments(cfg: ModelConfig):
+    """Split the mamba stack into (attn_first, start, end) segments.
+
+    The shared attention block runs at trace level *between* scans over
+    contiguous mamba-layer slices — no lax.cond in the scan body, so the HLO
+    while-loop trip counts are exact for the roofline accounting, and each
+    attn application gets its own static KV-cache slot.
+    """
+    L_ = cfg.n_layers
+    if cfg.family != "hybrid" or not cfg.attn_every:
+        return [(False, 0, L_)]
+    attn_pos = [i for i in range(L_)
+                if i % cfg.attn_every == cfg.attn_every - 1]
+    segs = []
+    if attn_pos[0] > 0:
+        segs.append((False, 0, attn_pos[0]))
+    for i, p in enumerate(attn_pos):
+        end = attn_pos[i + 1] if i + 1 < len(attn_pos) else L_
+        segs.append((True, p, end))
+    return segs
+
+
+def n_attn_slots(cfg: ModelConfig) -> int:
+    return sum(1 for s in _segments(cfg) if s[0])
+
+
+# ---------------------------------------------------------------------------
+# forward (training)
+# ---------------------------------------------------------------------------
+
+
+def _embed_tokens(params: Params, cfg: ModelConfig, tokens: jax.Array,
+                  patch_embeds: Optional[jax.Array]) -> jax.Array:
+    from repro.distributed.ctx import constrain
+    h = params["embed"][tokens].astype(jnp.dtype(cfg.compute_dtype))
+    if cfg.family == "vlm":
+        h = h * math.sqrt(cfg.d_model)  # gemma embedding normalizer
+        if patch_embeds is not None:
+            nf = cfg.n_frontend_tokens
+            pe = patch_embeds.astype(h.dtype)
+            h = jnp.concatenate([pe, h[:, nf:, :]], axis=1)
+    # anchor the residual stream layout: batch over dp axes, replicated
+    # over "model" (activation TP happens inside attention/ffn only)
+    return constrain(h, "batch", None, None)
+
+
+def forward(params: Params, cfg: ModelConfig, tokens: jax.Array,
+            patch_embeds: Optional[jax.Array] = None
+            ) -> Tuple[jax.Array, jax.Array]:
+    """Full-sequence logits.  Returns (logits fp32, aux_loss)."""
+    b, s = tokens.shape
+    positions = jnp.arange(s, dtype=jnp.int32)
+    h = _embed_tokens(params, cfg, tokens, patch_embeds)
+
+    if cfg.family in ("ssm", "hybrid"):
+        shared = params.get("shared_attn")
+
+        def body(h, lp):
+            y, _ = M.mamba2_block(lp["mamba"], cfg,
+                                  L.rms_norm(h, lp["norm"], cfg.norm_eps))
+            return h + y, jnp.zeros((), jnp.float32)
+
+        fn = jax.checkpoint(body) if cfg.remat else body
+        aux = jnp.zeros((), jnp.float32)
+        for attn_first, s0, s1 in _segments(cfg):
+            if attn_first:
+                h = _shared_attn_apply(shared, cfg, h, positions)
+            sub = jax.tree.map(lambda x: x[s0:s1], params["layers"])
+            h, _ = jax.lax.scan(fn, h, sub)
+    else:
+        def body(h, lp):
+            return _dense_layer(lp, cfg, h, positions)
+
+        fn = jax.checkpoint(body) if cfg.remat else body
+        h, aux = jax.lax.scan(fn, h, params["layers"])
+
+    h = L.rms_norm(h, params["final_norm"], cfg.norm_eps)
+    logits = L.logits_from_hidden(params, cfg, h)
+    return logits, jnp.sum(aux)
+
+
+# ---------------------------------------------------------------------------
+# cache init / prefill / decode
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> Params:
+    """Abstract cache structure (zeros); mirrors what prefill produces."""
+    dt = jnp.dtype(cfg.compute_dtype)
+    dh = cfg.resolved_head_dim
+    if cfg.family in ("ssm", "hybrid"):
+        w = cfg.ssm_conv_width
+        cache: Params = {
+            "ssm": jnp.zeros((cfg.n_layers, batch, cfg.ssm_heads,
+                              cfg.ssm_state, cfg.ssm_head_dim), jnp.float32),
+            "conv_x": jnp.zeros((cfg.n_layers, batch, w - 1, cfg.d_inner), dt),
+            "conv_bc": jnp.zeros((cfg.n_layers, batch, w - 1,
+                                  2 * cfg.ssm_groups * cfg.ssm_state), dt),
+        }
+        if cfg.family == "hybrid":
+            ns = n_attn_slots(cfg)
+            cache["attn_k"] = jnp.zeros((ns, batch, cfg.n_kv_heads,
+                                         max_len, dh), dt)
+            cache["attn_v"] = jnp.zeros((ns, batch, cfg.n_kv_heads,
+                                         max_len, dh), dt)
+        return cache
+    if cfg.kv_cache_dtype == "int8":
+        return {
+            "k": jnp.zeros((cfg.n_layers, batch, cfg.n_kv_heads, max_len,
+                            dh), jnp.int8),
+            "v": jnp.zeros((cfg.n_layers, batch, cfg.n_kv_heads, max_len,
+                            dh), jnp.int8),
+            "k_scale": jnp.zeros((cfg.n_layers, batch, cfg.n_kv_heads,
+                                  max_len), jnp.bfloat16),
+            "v_scale": jnp.zeros((cfg.n_layers, batch, cfg.n_kv_heads,
+                                  max_len), jnp.bfloat16),
+        }
+    return {
+        "k": jnp.zeros((cfg.n_layers, batch, cfg.n_kv_heads, max_len, dh), dt),
+        "v": jnp.zeros((cfg.n_layers, batch, cfg.n_kv_heads, max_len, dh), dt),
+    }
+
+
+def prefill(params: Params, cfg: ModelConfig, tokens: jax.Array,
+            max_len: int, patch_embeds: Optional[jax.Array] = None
+            ) -> Tuple[jax.Array, Params]:
+    """Run the prompt, return (last-position logits fp32, filled cache)."""
+    b, s = tokens.shape
+    positions = jnp.arange(s, dtype=jnp.int32)
+    h = _embed_tokens(params, cfg, tokens, patch_embeds)
+
+    if cfg.family in ("ssm", "hybrid"):
+        shared = params.get("shared_attn")
+
+        def body(h, lp):
+            y, st = M.mamba2_block(lp["mamba"], cfg,
+                                   L.rms_norm(h, lp["norm"], cfg.norm_eps))
+            return h + y, st
+
+        seg_states = []
+        attn_ks, attn_vs = [], []
+        for attn_first, s0, s1 in _segments(cfg):
+            if attn_first:
+                xin = L.rms_norm(h, shared["attn_norm"], cfg.norm_eps)
+                a, ck, cv = L.attention_prefill(shared["attn"], cfg, xin,
+                                                positions, max_len)
+                h = h + a
+                h = h + L.ffn(shared["ffn"], cfg,
+                              L.rms_norm(h, shared["ffn_norm"], cfg.norm_eps))
+                attn_ks.append(ck)
+                attn_vs.append(cv)
+            sub = jax.tree.map(lambda x: x[s0:s1], params["layers"])
+            h, st = jax.lax.scan(body, h, sub)
+            seg_states.append(st)
+        states = jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=0),
+                              *seg_states)
+        cache: Params = {"ssm": states["ssm"], "conv_x": states["conv_x"],
+                         "conv_bc": states["conv_bc"]}
+        if attn_ks:
+            cache["attn_k"] = jnp.stack(attn_ks)
+            cache["attn_v"] = jnp.stack(attn_vs)
+    else:
+        def body(h, lp):
+            xin = L.rms_norm(h, lp["attn_norm"], cfg.norm_eps)
+            a, ck, cv = L.attention_prefill(lp["attn"], cfg, xin,
+                                            positions, max_len)
+            h = h + a
+            hin = L.rms_norm(h, lp["ffn_norm"], cfg.norm_eps)
+            if cfg.family == "moe":
+                f, _ = MOE.moe_ffn(lp["moe"], cfg, hin)
+            else:
+                f = L.ffn(lp["ffn"], cfg, hin)
+            return h + f, (ck, cv)
+
+        h, (ks, vs) = jax.lax.scan(body, h, params["layers"])
+        cache = {"k": ks, "v": vs}
+        if cfg.kv_cache_dtype == "int8":
+            kq, ksc = L.quantize_kv(ks)
+            vq, vsc = L.quantize_kv(vs)
+            cache = {"k": kq, "v": vq, "k_scale": ksc, "v_scale": vsc}
+
+    h = L.rms_norm(h[:, -1:, :], params["final_norm"], cfg.norm_eps)
+    logits = L.logits_from_hidden(params, cfg, h)
+    return logits, cache
+
+
+def decode_step(params: Params, cfg: ModelConfig, cache: Params,
+                tokens: jax.Array, pos: jax.Array
+                ) -> Tuple[jax.Array, Params]:
+    """One-token serve_step.  tokens: (B,1) int32; pos: scalar int32."""
+    h = params["embed"][tokens].astype(jnp.dtype(cfg.compute_dtype))
+    if cfg.family == "vlm":
+        h = h * math.sqrt(cfg.d_model)
+
+    if cfg.family in ("ssm", "hybrid"):
+        shared = params.get("shared_attn")
+
+        def body(h, xs):
+            lp, st = xs
+            y, st_new = M.mamba2_decode(lp["mamba"], cfg,
+                                        L.rms_norm(h, lp["norm"],
+                                                   cfg.norm_eps), st)
+            return h + y, st_new
+
+        sts = {"ssm": cache["ssm"], "conv_x": cache["conv_x"],
+               "conv_bc": cache["conv_bc"]}
+        seg_states = []
+        attn_ks, attn_vs = [], []
+        slot = 0
+        for attn_first, s0, s1 in _segments(cfg):
+            if attn_first:
+                ck, cv = cache["attn_k"][slot], cache["attn_v"][slot]
+                xin = L.rms_norm(h, shared["attn_norm"], cfg.norm_eps)
+                a, ck, cv = L.attention_decode(shared["attn"], cfg, xin,
+                                               pos, ck, cv)
+                h = h + a
+                h = h + L.ffn(shared["ffn"], cfg,
+                              L.rms_norm(h, shared["ffn_norm"], cfg.norm_eps))
+                attn_ks.append(ck)
+                attn_vs.append(cv)
+                slot += 1
+            sub_p = jax.tree.map(lambda x: x[s0:s1], params["layers"])
+            sub_s = jax.tree.map(lambda x: x[s0:s1], sts)
+            h, st_new = jax.lax.scan(body, h, (sub_p, sub_s))
+            seg_states.append(st_new)
+        new_cache: Params = jax.tree.map(
+            lambda *xs: jnp.concatenate(xs, axis=0), *seg_states)
+        if attn_ks:
+            new_cache["attn_k"] = jnp.stack(attn_ks)
+            new_cache["attn_v"] = jnp.stack(attn_vs)
+    else:
+        quant = cfg.kv_cache_dtype == "int8"
+
+        def body(h, xs):
+            if quant:
+                lp, ck, cv, ksc, vsc = xs
+                xin = L.rms_norm(h, lp["attn_norm"], cfg.norm_eps)
+                a, ck, cv, ksc, vsc = L.attention_decode_q8(
+                    lp["attn"], cfg, xin, pos, ck, cv, ksc, vsc)
+            else:
+                lp, ck, cv = xs
+                xin = L.rms_norm(h, lp["attn_norm"], cfg.norm_eps)
+                a, ck, cv = L.attention_decode(lp["attn"], cfg, xin, pos,
+                                               ck, cv)
+            h = h + a
+            hin = L.rms_norm(h, lp["ffn_norm"], cfg.norm_eps)
+            if cfg.family == "moe":
+                f, _ = MOE.moe_ffn(lp["moe"], cfg, hin)
+            else:
+                f = L.ffn(lp["ffn"], cfg, hin)
+            out = (ck, cv, ksc, vsc) if quant else (ck, cv)
+            return h + f, out
+
+        if quant:
+            h, (ks, vs, kscs, vscs) = jax.lax.scan(
+                body, h, (params["layers"], cache["k"], cache["v"],
+                          cache["k_scale"], cache["v_scale"]))
+            new_cache = {"k": ks, "v": vs, "k_scale": kscs,
+                         "v_scale": vscs}
+        else:
+            h, (ks, vs) = jax.lax.scan(body, h, (params["layers"],
+                                                 cache["k"], cache["v"]))
+            new_cache = {"k": ks, "v": vs}
+
+    h = L.rms_norm(h, params["final_norm"], cfg.norm_eps)
+    logits = L.logits_from_hidden(params, cfg, h)
+    return logits, new_cache

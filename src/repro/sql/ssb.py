@@ -1,0 +1,117 @@
+"""Star Schema Benchmark: schema + scale-factor data generator (paper §5.1).
+
+All string attributes are dictionary-encoded int32 (the paper does the same
+rewrite, §5.2) with *structured* code spaces so selective predicates become
+integer ranges:
+
+  region  0..4                           (AFRICA, AMERICA, ASIA, EUROPE, MIDDLE EAST)
+  nation  region*5 + k     (25 total)
+  city    nation*10 + j    (250 total)
+  mfgr    0..4                           (MFGR#1..5)
+  category mfgr*5 + c      (25 total)    (MFGR#11..)
+  brand1  category*40 + b  (1000 total)  (MFGR#1101..)
+  datekey 0..2555 = (year-1992)*365 + dayofyear   (simplified 365-day calendar)
+
+SF=1 -> 6M lineorder rows (SF 20 in the paper = 120M); dimension
+cardinalities follow the SSB spec.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict
+
+import numpy as np
+
+N_YEARS = 7
+DAYS_PER_YEAR = 365
+N_DATES = N_YEARS * DAYS_PER_YEAR
+REGIONS = ["AFRICA", "AMERICA", "ASIA", "EUROPE", "MIDDLE EAST"]
+AMERICA, ASIA, EUROPE, UNITED_STATES = 1, 2, 3, 1 * 5 + 3  # encodings used
+# nation "UNITED STATES" = region AMERICA(1)*5 + 3 = 8
+NATION_US = 8
+# cities "UNITED KI1" / "UNITED KI5": nation UNITED KINGDOM = EUROPE(3)*5+4=19
+NATION_UK = 19
+CITY_UKI1 = NATION_UK * 10 + 1
+CITY_UKI5 = NATION_UK * 10 + 5
+
+
+@dataclass
+class Table:
+    name: str
+    columns: Dict[str, np.ndarray] = field(default_factory=dict)
+
+    def __getitem__(self, col: str) -> np.ndarray:
+        return self.columns[col]
+
+    @property
+    def n_rows(self) -> int:
+        return len(next(iter(self.columns.values())))
+
+
+@dataclass
+class Database:
+    lineorder: Table
+    date: Table
+    supplier: Table
+    customer: Table
+    part: Table
+    sf: float
+
+
+def datekey(year: int, day: int = 0) -> int:
+    return (year - 1992) * DAYS_PER_YEAR + day
+
+
+def generate(sf: float = 0.01, seed: int = 0) -> Database:
+    rng = np.random.default_rng(seed)
+    n_lo = max(1, int(6_000_000 * sf))
+    n_supp = max(8, int(2_000 * sf))
+    n_cust = max(8, int(30_000 * sf))
+    n_part = int(200_000 * max(1.0, 1 + np.log2(max(sf, 1.0))))
+    if sf < 1.0:
+        n_part = max(64, int(200_000 * sf))
+
+    i32 = np.int32
+    dk = np.arange(N_DATES, dtype=i32)
+    date = Table("date", {
+        "d_datekey": dk,
+        "d_year": (1992 + dk // DAYS_PER_YEAR).astype(i32),
+        "d_yearmonthnum": (
+            (1992 + dk // DAYS_PER_YEAR) * 100
+            + ((dk % DAYS_PER_YEAR) // 31 + 1)).astype(i32),
+        "d_weeknuminyear": ((dk % DAYS_PER_YEAR) // 7 + 1).astype(i32),
+    })
+
+    supplier = Table("supplier", {
+        "s_suppkey": np.arange(n_supp, dtype=i32),
+        "s_city": rng.integers(0, 250, n_supp, dtype=i32),
+    })
+    supplier.columns["s_nation"] = (supplier["s_city"] // 10).astype(i32)
+    supplier.columns["s_region"] = (supplier["s_nation"] // 5).astype(i32)
+
+    customer = Table("customer", {
+        "c_custkey": np.arange(n_cust, dtype=i32),
+        "c_city": rng.integers(0, 250, n_cust, dtype=i32),
+    })
+    customer.columns["c_nation"] = (customer["c_city"] // 10).astype(i32)
+    customer.columns["c_region"] = (customer["c_nation"] // 5).astype(i32)
+
+    part = Table("part", {
+        "p_partkey": np.arange(n_part, dtype=i32),
+        "p_brand1": rng.integers(0, 1000, n_part, dtype=i32),
+    })
+    part.columns["p_category"] = (part["p_brand1"] // 40).astype(i32)
+    part.columns["p_mfgr"] = (part["p_category"] // 5).astype(i32)
+
+    lineorder = Table("lineorder", {
+        "lo_orderdate": rng.integers(0, N_DATES, n_lo, dtype=i32),
+        "lo_partkey": rng.integers(0, n_part, n_lo, dtype=i32),
+        "lo_suppkey": rng.integers(0, n_supp, n_lo, dtype=i32),
+        "lo_custkey": rng.integers(0, n_cust, n_lo, dtype=i32),
+        "lo_quantity": rng.integers(1, 51, n_lo, dtype=i32),
+        "lo_discount": rng.integers(0, 11, n_lo, dtype=i32),
+        "lo_extendedprice": rng.integers(1, 1_000, n_lo, dtype=i32),
+        "lo_revenue": rng.integers(1, 1_000, n_lo, dtype=i32),
+        "lo_supplycost": rng.integers(1, 500, n_lo, dtype=i32),
+    })
+    return Database(lineorder, date, supplier, customer, part, sf)

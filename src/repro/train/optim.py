@@ -1,0 +1,107 @@
+"""AdamW implemented from scratch (no optax in this environment).
+
+Mixed-precision discipline: model params may be bf16; the optimizer holds
+fp32 master weights + fp32 first/second moments.  When params are already
+fp32 the master copy is skipped (saves memory on small runs).
+
+ZeRO-1 (optimizer-state sharding over the data axis) is implemented at the
+*sharding* level — see distributed/sharding.py:zero1_pspecs — the update rule
+below is written leaf-wise so GSPMD can partition it freely.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+
+
+def lr_at(cfg: AdamWConfig, step: jax.Array) -> jax.Array:
+    """Linear warmup + cosine decay."""
+    step = step.astype(jnp.float32)
+    warm = cfg.lr * step / max(cfg.warmup_steps, 1)
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = cfg.min_lr_frac * cfg.lr + (1 - cfg.min_lr_frac) * cfg.lr \
+        * 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+    return jnp.where(step < cfg.warmup_steps, warm, cos)
+
+
+def init_opt_state(params, moments_dtype=jnp.float32) -> Dict[str, Any]:
+    """moments_dtype=bf16 halves optimizer-state memory (2+2 vs 4+4 bytes
+    per param) at negligible quality cost — the standard fit-enabler for
+    the 340B-class configs (EXPERIMENTS §Perf, nemotron cell)."""
+    zeros = lambda p: jnp.zeros(p.shape, moments_dtype)
+    state: Dict[str, Any] = {
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+    needs_master = any(p.dtype != jnp.float32
+                       for p in jax.tree.leaves(params))
+    if needs_master:
+        state["master"] = jax.tree.map(
+            lambda p: p.astype(jnp.float32), params)
+    return state
+
+
+def global_norm(tree) -> jax.Array:
+    sq = sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+             for g in jax.tree.leaves(tree))
+    return jnp.sqrt(sq)
+
+
+def adamw_update(cfg: AdamWConfig, params, grads, state
+                 ) -> Tuple[Any, Dict[str, Any], Dict[str, jax.Array]]:
+    step = state["step"] + 1
+    lr = lr_at(cfg, step)
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-12)) \
+        if cfg.grad_clip > 0 else jnp.float32(1.0)
+    b1c = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+    masters = state.get("master", params)
+
+    def upd(p, master, g, m, v):
+        mdt = m.dtype
+        g = g.astype(jnp.float32) * scale
+        m = (cfg.b1 * m.astype(jnp.float32) + (1 - cfg.b1) * g).astype(mdt)
+        v = (cfg.b2 * v.astype(jnp.float32)
+             + (1 - cfg.b2) * jnp.square(g)).astype(mdt)
+        mh = m.astype(jnp.float32) / b1c
+        vh = v.astype(jnp.float32) / b2c
+        mast = master.astype(jnp.float32)
+        new_master = mast - lr * (mh / (jnp.sqrt(vh) + cfg.eps)
+                                  + cfg.weight_decay * mast
+                                  * (mast.ndim > 1))
+        return new_master.astype(p.dtype), new_master, m, v
+
+    out = jax.tree.map(upd, params, masters, grads, state["m"], state["v"])
+    # unzip the 4-tuples
+    new_params = jax.tree.map(lambda t: t[0], out,
+                              is_leaf=lambda t: isinstance(t, tuple))
+    new_master = jax.tree.map(lambda t: t[1], out,
+                              is_leaf=lambda t: isinstance(t, tuple))
+    new_m = jax.tree.map(lambda t: t[2], out,
+                         is_leaf=lambda t: isinstance(t, tuple))
+    new_v = jax.tree.map(lambda t: t[3], out,
+                         is_leaf=lambda t: isinstance(t, tuple))
+    new_state: Dict[str, Any] = {"m": new_m, "v": new_v, "step": step}
+    if "master" in state:
+        new_state["master"] = new_master
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_params, new_state, metrics

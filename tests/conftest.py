@@ -1,0 +1,14 @@
+"""Shared fixtures.  NOTE: no XLA_FLAGS device-count override here — smoke
+tests and benches must see the real single CPU device; only
+launch/dryrun.py (its own process) forces 512 host devices."""
+import warnings
+
+import numpy as np
+import pytest
+
+warnings.filterwarnings("ignore", category=DeprecationWarning)
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)

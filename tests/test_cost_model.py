@@ -1,0 +1,53 @@
+"""The paper's claims, reproduced from our cost models (faithfulness gate).
+
+Every assertion cites the paper section it validates.
+"""
+from repro.cost import model as M
+
+
+def test_bandwidth_ratio():
+    # §1 / §4 intro: "roughly 16x on modern hardware" (16.2 in-text)
+    assert 15.5 < M.BANDWIDTH_RATIO_PAPER < 17.0
+
+
+def test_project_select_sort_speedups_near_ratio():
+    # §4.1 project: 16.56x measured; §4.2 select: 15.8x; §4.4 sort: 17.13x
+    c = M.paper_claims()
+    for k in ("project_speedup", "select_speedup", "sort_speedup"):
+        assert 15.0 < c[k] < 18.0, (k, c[k])
+
+
+def test_join_below_ratio():
+    # §4.3: large hash tables -> "we would expect roughly 8.1x"
+    c = M.paper_claims()
+    assert 7.0 < c["join_1gb_speedup"] < 11.0
+
+
+def test_join_cache_step_function():
+    # §4.3 Fig 13: runtime steps up when the table exceeds the cache
+    small = M.join_probe_time(256_000_000, 1e6, M.PAPER_GPU)
+    large = M.join_probe_time(256_000_000, 1e9, M.PAPER_GPU)
+    assert large > 2 * small
+
+
+def test_coprocessor_loses():
+    # §3.1: R_C < R_G whenever B_c > B_pcie — the paper's negative result
+    c = M.paper_claims()
+    assert c["coprocessor_loses"]
+    assert c["coprocessor_q1_ms"] > 2 * c["cpu_q1_ms"]
+
+
+def test_q21_model_magnitude():
+    # §5.3: model predicts 3.7ms GPU / 47ms CPU (measured 3.86 / 125).
+    # Our re-derivation must land in the same regime.
+    c = M.paper_claims()
+    assert 1.5 < c["q21_gpu_model_ms"] < 6.0
+    assert 15.0 < c["q21_cpu_model_ms"] < 60.0
+    # and the full-query speedup exceeds the per-operator join speedup
+    assert c["q21_cpu_model_ms"] / c["q21_gpu_model_ms"] > 6.0
+
+
+def test_tpu_constants():
+    # v5e numbers used across the roofline (system prompt spec)
+    assert M.TPU_V5E.read_bw == 819e9
+    assert M.TPU_V5E.interconnect_bw == 50e9

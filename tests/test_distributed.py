@@ -1,0 +1,139 @@
+"""Multi-device correctness, run in subprocesses with 8 fake CPU devices
+(the main test process must keep seeing 1 device — assignment requirement).
+
+Checks:
+  * sharded train step == single-device train step (same numerics)
+  * shard_map MoE == local MoE
+  * compressed (int8+EF) data-parallel psum ~= exact psum
+  * dry-run entrypoint works for a tiny arch on a small mesh
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def run_subprocess(code: str) -> str:
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                         capture_output=True, text=True, cwd=REPO, env=env,
+                         timeout=600)
+    assert out.returncode == 0, (out.stdout[-2000:], out.stderr[-3000:])
+    return out.stdout
+
+
+def test_sharded_train_step_matches_single_device():
+    out = run_subprocess("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import PartitionSpec as P, NamedSharding
+        from repro.configs.base import smoke_config
+        from repro.models import api
+        from repro.train.optim import init_opt_state
+        from repro.train.step import make_train_step
+        from repro.distributed import sharding as sh
+
+        cfg = smoke_config("qwen2.5-3b").replace(
+            n_heads=4, n_kv_heads=2, head_dim=16, vocab_size=512)
+        params = api.init(jax.random.PRNGKey(0), cfg)
+        opt = init_opt_state(params)
+        batch = {"tokens": jax.random.randint(
+            jax.random.PRNGKey(1), (8, 32), 0, cfg.vocab_size)}
+        step = make_train_step(cfg)
+
+        # single device
+        p1, o1, m1 = jax.jit(step)(params, opt, batch)
+
+        # sharded (2 data x 4 model)
+        mesh = jax.make_mesh((2, 4), ("data", "model"))
+        pspec = sh.param_pspecs(params, cfg, 4)
+        ospec = sh.opt_pspecs(pspec, params, mesh)
+        bspec = sh.batch_pspecs(batch, mesh)
+        to = lambda t, s: jax.tree.map(
+            lambda x, sp: jax.device_put(x, NamedSharding(mesh, sp)), t, s,
+            is_leaf=lambda v: isinstance(v, P))
+        with jax.sharding.set_mesh(mesh):
+            p2, o2, m2 = jax.jit(step)(to(params, pspec), to(opt, ospec),
+                                       to(batch, bspec))
+        np.testing.assert_allclose(float(m1["loss"]), float(m2["loss"]),
+                                   rtol=2e-4)
+        for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p2)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=3e-3, atol=3e-4)
+        print("SHARDED_MATCH_OK", float(m1["loss"]), float(m2["loss"]))
+    """)
+    assert "SHARDED_MATCH_OK" in out
+
+
+def test_shard_map_moe_matches_local():
+    out = run_subprocess("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import PartitionSpec as P, NamedSharding
+        from repro.configs.base import smoke_config
+        from repro.models import moe as MOE
+
+        cfg = smoke_config("qwen3-moe-30b-a3b")
+        p = MOE.moe_init(jax.random.PRNGKey(0), cfg)
+        x = jax.random.normal(jax.random.PRNGKey(1), (4, 32, cfg.d_model),
+                              jnp.float32)
+        ref, aux_ref = MOE._moe_ffn_local(p, cfg, x)
+
+        mesh = jax.make_mesh((2, 4), ("data", "model"))
+        with jax.sharding.set_mesh(mesh):
+            got, aux = jax.jit(lambda p, x: MOE.moe_ffn(p, cfg, x))(p, x)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                                   rtol=2e-4, atol=2e-5)
+        np.testing.assert_allclose(float(aux), float(aux_ref), rtol=1e-4)
+        print("MOE_SHARDMAP_OK")
+    """)
+    assert "MOE_SHARDMAP_OK" in out
+
+
+def test_compressed_data_parallel_psum():
+    out = run_subprocess("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import PartitionSpec as P
+        from repro.distributed import compression as C
+
+        mesh = jax.make_mesh((8,), ("data",))
+        g = jax.random.normal(jax.random.PRNGKey(0), (8, 1024), jnp.float32)
+        err = jnp.zeros((8, 1024), jnp.float32)
+
+        def f(g, err):
+            out, new_err = C.compressed_psum(g[0], err[0], "data")
+            return out, new_err[None]
+
+        with jax.sharding.set_mesh(mesh):
+            out, _ = jax.jit(jax.shard_map(
+                f, in_specs=(P("data", None), P("data", None)),
+                out_specs=(P(), P("data", None))))(g, err)
+        exact = jnp.mean(g, axis=0)
+        err_rel = float(jnp.abs(out - exact).max()
+                        / jnp.abs(exact).max())
+        assert err_rel < 0.15, err_rel
+        print("COMPRESSED_PSUM_OK", err_rel)
+    """)
+    assert "COMPRESSED_PSUM_OK" in out
+
+
+def test_dryrun_entrypoint_small(tmp_path):
+    """The actual dryrun module (512 fake devices) on one small cell."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--arch", "qwen2-0.5b",
+         "--shape", "decode_32k", "--mesh", "single", "--out",
+         str(tmp_path / "dryrun_pytest.jsonl")],
+        capture_output=True, text=True, cwd=REPO, env=env, timeout=900)
+    assert out.returncode == 0, (out.stdout[-2000:], out.stderr[-2000:])
+    assert "OK" in out.stdout

@@ -1,0 +1,93 @@
+"""The HLO cost analyzer vs hand-counted ground truth — this underpins the
+whole roofline deliverable, so it gets its own tests."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.launch.hlo_analysis import analyze_hlo
+
+
+def _compile(fn, *args):
+    return jax.jit(fn).lower(*args).compile().as_text()
+
+
+def test_matmul_flops_exact():
+    a = jax.ShapeDtypeStruct((512, 1024), jnp.bfloat16)
+    b = jax.ShapeDtypeStruct((1024, 2048), jnp.bfloat16)
+    txt = _compile(lambda a, b: jnp.einsum("mk,kn->mn", a, b), a, b)
+    r = analyze_hlo(txt)
+    expect = 2 * 512 * 1024 * 2048
+    assert abs(r["flops"] - expect) / expect < 0.02
+
+
+def test_scan_trip_count_multiplies():
+    """cost_analysis counts a while body once; the analyzer must multiply
+    by the trip count (8 matmuls here)."""
+    a = jax.ShapeDtypeStruct((64, 512), jnp.float32)
+    w = jax.ShapeDtypeStruct((512, 512), jnp.float32)
+
+    def f(x, w):
+        def body(x, _):
+            return jnp.tanh(x @ w), None
+        y, _ = jax.lax.scan(body, x, None, length=8)
+        return jnp.sum(y)
+
+    txt = _compile(f, a, w)
+    r = analyze_hlo(txt)
+    expect = 8 * 2 * 64 * 512 * 512
+    assert 0.95 * expect < r["flops"] < 1.15 * expect
+
+
+def test_grad_of_scan_counts_fwd_plus_bwd():
+    a = jax.ShapeDtypeStruct((64, 512), jnp.float32)
+    w = jax.ShapeDtypeStruct((512, 512), jnp.float32)
+
+    def f(x, w):
+        def body(x, _):
+            return jnp.tanh(x @ w), None
+        y, _ = jax.lax.scan(body, x, None, length=8)
+        return jnp.sum(y)
+
+    txt = _compile(jax.grad(f, argnums=1), a, w)
+    r = analyze_hlo(txt)
+    expect = 24 * 2 * 64 * 512 * 512   # fwd 8 + bwd 16 matmuls
+    assert 0.9 * expect < r["flops"] < 1.2 * expect
+
+
+def test_bytes_bounds_ordering():
+    a = jax.ShapeDtypeStruct((1024, 1024), jnp.float32)
+    txt = _compile(lambda x: jnp.tanh(x * 2 + 1) @ x, a)
+    r = analyze_hlo(txt)
+    assert 0 < r["bytes_lb"] <= r["bytes"]
+    # the matmul alone moves >= 3 buffers of 4MB
+    assert r["bytes_lb"] >= 3 * 1024 * 1024 * 4
+
+
+def test_collectives_parsed():
+    import os
+    import subprocess, sys, textwrap
+    code = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import jax, jax.numpy as jnp
+        from jax.sharding import PartitionSpec as P
+        from repro.launch.hlo_analysis import analyze_hlo
+        mesh = jax.make_mesh((2, 4), ("data", "model"))
+        def f(w, x):
+            return jnp.sum(jnp.einsum('bd,de->be', x, w) ** 2)
+        g = jax.grad(f)
+        ws = jax.ShapeDtypeStruct((128, 256), jnp.float32)
+        xs = jax.ShapeDtypeStruct((64, 128), jnp.float32)
+        with mesh:
+            c = jax.jit(g, in_shardings=(
+                jax.NamedSharding(mesh, P(None, "model")),
+                jax.NamedSharding(mesh, P("data", None)))).lower(ws, xs).compile()
+        r = analyze_hlo(c.as_text())
+        assert r["coll_bytes"] > 0, "no collectives found"
+        print("COLL_OK", r["coll_bytes"])
+    """)
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, cwd="/root/repo", env=env)
+    assert "COLL_OK" in out.stdout, out.stderr[-2000:]

@@ -1,0 +1,86 @@
+"""Hypothesis property tests on system invariants.
+
+Invariants:
+  * select: kernel output == numpy boolean filter (stable order), any data
+  * radix sort: sorted + a permutation (key-value binding preserved)
+  * hash table: every inserted key is found with its payload; absent keys
+    are not found
+  * group aggregate: partition of the total sum
+  * SSB engine: crystal path == independent numpy oracle on random DBs
+"""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import blocks as B
+from repro.kernels import ops, ref
+from repro.sql import engine, ssb
+
+ints = st.integers(min_value=-1_000_000, max_value=1_000_000)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(ints, min_size=1, max_size=300),
+       st.integers(-1000, 1000), st.integers(0, 2000))
+def test_select_matches_numpy(xs, lo, width):
+    hi = lo + width
+    x = jnp.asarray(np.array(xs, np.int32))
+    out, cnt = ops.select_scan(x, x, lo, hi, mode="kernel", tile=128)
+    expect = np.array(xs, np.int32)
+    expect = expect[(expect >= lo) & (expect <= hi)]
+    assert int(cnt) == len(expect)
+    np.testing.assert_array_equal(np.asarray(out)[:int(cnt)], expect)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.lists(st.integers(0, 2**31 - 1), min_size=1, max_size=400))
+def test_radix_sort_properties(keys):
+    k = jnp.asarray(np.array(keys, np.int32))
+    v = jnp.arange(len(keys), dtype=jnp.int32)
+    sk, sv = ops.radix_sort(k, v, mode="kernel", tile=128)
+    sk, sv = np.asarray(sk), np.asarray(sv)
+    assert (np.diff(sk) >= 0).all()                      # sorted
+    np.testing.assert_array_equal(np.sort(sv), np.arange(len(keys)))
+    np.testing.assert_array_equal(np.array(keys, np.int32)[sv], sk)  # bound
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.sets(st.integers(0, 10_000), min_size=1, max_size=200),
+       st.lists(st.integers(0, 10_000), min_size=1, max_size=200))
+def test_hash_table_membership(build_keys, probe_keys):
+    bk = np.array(sorted(build_keys), np.int32)
+    bv = (bk * 7 + 1).astype(np.int32)
+    n_slots = engine.next_pow2(len(bk))
+    htk, htv = engine.np_build(bk, bv, n_slots)
+    payload, found = B.block_lookup(
+        jnp.asarray(np.array(probe_keys, np.int32)),
+        jnp.asarray(htk), jnp.asarray(htv))
+    member = np.isin(np.array(probe_keys), bk)
+    np.testing.assert_array_equal(np.asarray(found).astype(bool), member)
+    got = np.asarray(payload)[member]
+    expect = (np.array(probe_keys, np.int64)[member] * 7 + 1)
+    np.testing.assert_array_equal(got, expect.astype(np.int32))
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.lists(st.tuples(st.integers(0, 9), st.integers(0, 1000)),
+                min_size=1, max_size=500))
+def test_group_sum_partitions_total(pairs):
+    g = jnp.asarray(np.array([p[0] for p in pairs], np.int32))
+    v = jnp.asarray(np.array([p[1] for p in pairs], np.int32))
+    sums = np.asarray(ops.group_sum(g, v, 10, mode="kernel", tile=128))
+    assert sums.sum() == sum(p[1] for p in pairs)
+    for gid in range(10):
+        assert sums[gid] == sum(p[1] for p in pairs if p[0] == gid)
+
+
+@settings(max_examples=5, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_ssb_engine_matches_oracle(seed):
+    db = ssb.generate(sf=0.001, seed=seed)
+    qs = engine.ssb_queries()
+    for name in ("q1.1", "q2.2", "q3.1", "q4.1"):
+        spec = qs[name]
+        got = engine.run_query(db, spec, mode="ref")
+        expect = engine.run_query_oracle(db, spec)
+        np.testing.assert_allclose(got, expect, rtol=1e-5, atol=1e-3)
