@@ -7,9 +7,13 @@ pairs a measurement with the bandwidth-saturation model the paper uses.
 
   PYTHONPATH=src python -m benchmarks.run             # all tables
   PYTHONPATH=src python -m benchmarks.run fig12 fig16 # subset
+  PYTHONPATH=src python -m benchmarks.run --json bench_out fig17
+      # also writes bench_out/BENCH_fig17.json (perf-trajectory record)
 """
 from __future__ import annotations
 
+import json
+import os
 import sys
 import time
 
@@ -20,6 +24,7 @@ import numpy as np
 from repro.cost import model as M
 from repro.kernels import ref
 from repro.sql import engine, ssb
+from repro.sql.compile import compile_plan
 
 ROWS = []
 
@@ -149,29 +154,68 @@ def fig14_radix():
          f"speedup={mc32 / mg32:.1f}x;paper_measured=17.13x")
 
 
+def ssb_model_time(name: str, db, hw) -> float:
+    """Paper cost-model prediction (seconds) for one SSB query: flight 1
+    is the 4-column scan bound; the join flights reuse the §5.3 q2.1
+    three-term model (the paper's representative full query)."""
+    n_lo = db.lineorder.n_rows
+    if name.startswith("q1"):
+        return M.q1_time(n_lo, hw)
+    part_ht = 2 * 4 * db.part.n_rows / 25 * 2.0
+    return M.q21_time(n_lo, db.supplier.n_rows, 2556, part_ht, hw)
+
+
 def fig16_ssb(sf: float = 0.05):
     """Fig. 16: full SSB, crystal pipeline (ref path) measured + models."""
     db = ssb.generate(sf=sf, seed=7)
-    n_lo = db.lineorder.n_rows
     qs = engine.ssb_queries()
     for name, spec in qs.items():
         us = timeit(lambda spec=spec: engine.run_query(db, spec, mode="ref"),
                     warmup=1, iters=3)
-        if name.startswith("q1"):
-            mg = M.q1_time(n_lo, M.PAPER_GPU) * 1e6
-            mt = M.q1_time(n_lo, M.TPU_V5E) * 1e6
-            mc = M.q1_time(n_lo, M.PAPER_CPU) * 1e6
-        else:
-            part_ht = 2 * 4 * db.part.n_rows / 25 * 2.0
-            mg = M.q21_time(n_lo, db.supplier.n_rows, 2556, part_ht,
-                            M.PAPER_GPU) * 1e6
-            mt = M.q21_time(n_lo, db.supplier.n_rows, 2556, part_ht,
-                            M.TPU_V5E) * 1e6
-            mc = M.q21_time(n_lo, db.supplier.n_rows, 2556, part_ht,
-                            M.PAPER_CPU) * 1e6
+        mg = ssb_model_time(name, db, M.PAPER_GPU) * 1e6
+        mt = ssb_model_time(name, db, M.TPU_V5E) * 1e6
+        mc = ssb_model_time(name, db, M.PAPER_CPU) * 1e6
         emit(f"fig16.{name}", us,
              f"model_cpu={mc:.0f};model_gpu={mg:.0f};model_tpu={mt:.0f};"
              f"gpu_speedup={mc / mg:.1f}x")
+
+
+def fig17_fusion(sf: float = 0.05):
+    """Fig. 17 (repo extension of the paper's §5.3 argument): fused vs.
+    operator-at-a-time lowering of every SSB query.  The fused plan makes
+    one pass over the fact table; opat emits a selection vector per
+    operator and re-materializes the live columns through it.
+
+    Two readings per row: the *measured* host ratio (cache-resident
+    intermediates, so selective queries can favor opat — work-skipping
+    beats fusion when materialization is nearly free), and the paper's
+    bandwidth model on the V100, where every intermediate is an HBM
+    round-trip (upper bound: full fact cardinality per operator) — the
+    regime where fusion-beats-materialization is the headline."""
+    db = ssb.generate(sf=sf, seed=7)
+    n_lo = db.lineorder.n_rows
+    qs = engine.ssb_queries()
+    # shared dim-table cache: the warmup iteration builds, so the timed
+    # region is the scan path only — the host-side build would otherwise
+    # inflate both sides and bias the ratio toward 1
+    cache = engine.HashTableCache()
+    for name, plan in qs.items():
+        fused = compile_plan(plan, "fused")
+        opat = compile_plan(plan, "opat")
+        us_f = timeit(lambda: fused.execute(db, mode="ref", cache=cache),
+                      warmup=1, iters=3)
+        us_o = timeit(lambda: opat.execute(db, mode="ref", cache=cache),
+                      warmup=1, iters=3)
+        hw = M.PAPER_GPU
+        base = ssb_model_time(name, db, hw)
+        n_ops = len(plan.filters) + len(plan.joins)
+        live_cols = 2                    # row ids + running group id
+        mat = n_ops * live_cols * (4 * n_lo / hw.write_bw
+                                   + 4 * n_lo / hw.read_bw)
+        emit(f"fig17.{name}", us_f,
+             f"opat_us={us_o:.2f};fusion_speedup={us_o / us_f:.2f}x;"
+             f"model_gpu_fusion_speedup={(base + mat) / base:.2f}x;"
+             f"n_joins={len(plan.joins)}")
 
 
 def table3_cost():
@@ -192,15 +236,49 @@ ALL = {
     "fig13": fig13_join,
     "fig14": fig14_radix,
     "fig16": fig16_ssb,
+    "fig17": fig17_fusion,
     "table3": table3_cost,
 }
 
 
+def write_json(out_dir: str, name: str, rows) -> None:
+    """One BENCH_<name>.json per table so the perf trajectory accumulates
+    machine-readable points, not just stdout CSV."""
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, f"BENCH_{name}.json")
+    payload = {
+        "table": name,
+        "unix_time": time.time(),
+        "backend": jax.default_backend(),
+        "rows": [{"name": n, "us_per_call": us, "derived": d}
+                 for n, us, d in rows],
+    }
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1)
+    print(f"# wrote {path}", file=sys.stderr)
+
+
 def main() -> None:
-    which = sys.argv[1:] or list(ALL)
+    argv = sys.argv[1:]
+    json_out = None
+    if "--json" in argv:
+        i = argv.index("--json")
+        try:
+            json_out = argv[i + 1]
+        except IndexError:
+            raise SystemExit("--json requires an output directory")
+        del argv[i:i + 2]
+    which = argv or list(ALL)
+    unknown = [w for w in which if w not in ALL]
+    if unknown:
+        raise SystemExit(
+            f"unknown table(s) {unknown}; available: {', '.join(ALL)}")
     print("name,us_per_call,derived")
     for w in which:
+        start = len(ROWS)
         ALL[w]()
+        if json_out is not None:
+            write_json(json_out, w, ROWS[start:])
 
 
 if __name__ == "__main__":

@@ -56,13 +56,21 @@ def _build_kernel(n_ref, keys_ref, vals_ref, htk_ref, htv_ref, *,
         def do(_):
             slot0 = B.hash_fn(k[None], n_slots)[0]
 
-            def cond(s):
-                return htk_ref[s] != B.EMPTY
+            # The ref read lives in the *body* with a carried done-flag:
+            # interpret mode discharges while_loops only when the cond is
+            # ref-free (jax state_discharge limitation); Mosaic is
+            # indifferent, so this is the portable formulation.
+            def cond(state):
+                return ~state[1]
 
-            def body(s):
-                return (s + 1) & (n_slots - 1)
+            def body(state):
+                s, _ = state
+                occupied = htk_ref[s] != B.EMPTY
+                nxt = jnp.where(occupied, (s + 1) & (n_slots - 1), s)
+                return nxt, ~occupied
 
-            s = jax.lax.while_loop(cond, body, slot0)
+            s, _ = jax.lax.while_loop(cond, body,
+                                      (slot0, jnp.bool_(False)))
             htk_ref[s] = k
             htv_ref[s] = v
             return 0

@@ -1,0 +1,241 @@
+"""Plan compiler: lower a logical plan to one of two physical strategies.
+
+``fused``  — collapse the whole SPJA subtree into the single-pass
+             ``kernels/ssb_fused.spja`` kernel (the paper's Crystal model,
+             §5.3: zero intermediate materialization, one HBM pass over
+             the fact table).
+``opat``   — operator-at-a-time: each plan node lowers to an individual
+             ``kernels/ops`` primitive with *materialized* intermediates
+             between operators (the paper's CPU-engine model).  Each
+             operator emits a positional *selection vector* (one
+             select_scan/probe per node), and every live column (row ids,
+             running group id) is re-materialized through it by gather —
+             MonetDB-style positional reconstruction.  That per-operator
+             memory traffic is exactly the overhead Fig. 16/§5.3
+             attributes to non-fused engines, and
+             ``benchmarks/run.py fig17`` measures it.
+
+``compile_plan(plan, "fused")`` validates fusability first; plans the
+fused kernel cannot express (non-range fact predicates, row-returning
+roots, OrderBy) *fall back* to ``opat`` with the reason recorded on the
+``CompiledQuery`` so callers and the query server can report it.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List, Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops
+from repro.kernels.common import DEFAULT_TILE
+from repro.sql import hashtable as HT
+from repro.sql import plan as P
+from repro.sql import ssb
+
+STRATEGIES = ("fused", "opat")
+
+
+# ---------------------------------------------------------------------------
+# validation
+# ---------------------------------------------------------------------------
+
+
+def classify(plan: P.Plan) -> str:
+    """Check chain well-formedness; return result kind: "agg" | "rows".
+
+    Aggregate plans:  Scan [Filter|HashJoin]* Project GroupAgg
+    Row plans:        Scan [Filter|HashJoin]* [OrderBy]
+    """
+    chain = plan.chain
+    if not isinstance(chain[0], P.Scan):
+        raise ValueError(f"{plan.name}: chain must start with Scan")
+    i = 1
+    while i < len(chain) and isinstance(chain[i], (P.Filter, P.HashJoin)):
+        i += 1
+    rest = chain[i:]
+    kinds = tuple(type(n).__name__ for n in rest)
+    if kinds == ("Project", "GroupAgg"):
+        return "agg"
+    if kinds in ((), ("OrderBy",)):
+        return "rows"
+    raise ValueError(
+        f"{plan.name}: unsupported chain tail {kinds} — expected "
+        "Project+GroupAgg (aggregate) or optional OrderBy (row plan)")
+
+
+def fusability(plan: P.Plan) -> Optional[str]:
+    """None if the plan can lower to the fused SPJA kernel, else the
+    human-readable reason it cannot.  Raises (via classify) on malformed
+    chains — an invalid plan is an error, not a fallback."""
+    kind = classify(plan)
+    if kind != "agg":
+        return ("row-returning plan (no Project+GroupAgg root): the fused "
+                "kernel only produces per-group aggregates")
+    for pred in plan.filters:
+        if not isinstance(pred, (P.RangePred, P.EqPred)):
+            return (f"fact predicate {pred!r} is not a range predicate; "
+                    "the fused kernel evaluates SMEM-resident (lo, hi) "
+                    "bounds only")
+    if plan.project.op not in ("first", "mul", "sub"):
+        return f"measure op {plan.project.op!r} not supported by the kernel"
+    return None
+
+
+# ---------------------------------------------------------------------------
+# fused lowering (Crystal model)
+# ---------------------------------------------------------------------------
+
+
+def _execute_fused(plan: P.Plan, db: ssb.Database, mode: str, tile: int,
+                   cache: Optional[HT.HashTableCache]) -> np.ndarray:
+    fact = getattr(db, plan.scan.table)
+    bounds = plan.preds           # fusability guarantees the range view
+    pred_cols = [jnp.asarray(fact[c]) for c, _, _ in bounds]
+    pred_bounds = jnp.asarray(
+        np.array([[lo, hi] for _, lo, hi in bounds], np.int32).reshape(
+            len(bounds), 2))
+    joins = plan.joins
+    join_keys = [jnp.asarray(fact[j.fact_col]) for j in joins]
+    join_tables: List[jnp.ndarray] = []
+    for j in joins:
+        htk, htv = (cache.get_or_build(db, j) if cache is not None
+                    else HT.build_dim_table(db, j))
+        join_tables.extend([htk, htv])
+    mults = jnp.asarray(np.array([j.mult for j in joins], np.int32))
+    proj = plan.project
+    m1 = jnp.asarray(fact[proj.m1]).astype(jnp.float32)
+    m2 = None if proj.m2 is None else \
+        jnp.asarray(fact[proj.m2]).astype(jnp.float32)
+    out = ops.spja(pred_cols, pred_bounds, join_keys, join_tables, mults,
+                   m1, m2, measure_op=proj.op, n_groups=plan.n_groups,
+                   mode=mode, tile=tile)
+    return np.asarray(out)
+
+
+# ---------------------------------------------------------------------------
+# operator-at-a-time lowering (materializing CPU-engine model)
+# ---------------------------------------------------------------------------
+
+
+def _execute_opat(plan: P.Plan, db: ssb.Database, mode: str, tile: int,
+                  cache: Optional[HT.HashTableCache]) -> np.ndarray:
+    fact = getattr(db, plan.scan.table)
+    n = fact.n_rows
+    # live intermediate state, re-materialized by every operator:
+    rowids = jnp.arange(n, dtype=jnp.int32)
+    group = jnp.zeros((n,), jnp.int32)
+    measure = None
+
+    for node in plan.chain[1:]:
+        empty = int(rowids.shape[0]) == 0
+        if isinstance(node, P.Filter):
+            for pred in node.preds:
+                if int(rowids.shape[0]) == 0:
+                    break
+                if isinstance(pred, (P.RangePred, P.EqPred)):
+                    col, lo, hi = P.range_bounds(pred)
+                    x = jnp.asarray(fact[col])[rowids]
+                    # emit a selection vector, then gather each live
+                    # column through it — the materialization traffic
+                    # the fused path avoids
+                    sel, cnt = ops.select_scan(
+                        x, jnp.arange(rowids.shape[0], dtype=jnp.int32),
+                        lo, hi, mode=mode, tile=tile)
+                    sel = sel[:int(cnt)]
+                    rowids = rowids[sel]
+                    group = group[sel]
+                else:                       # generic predicate: host mask
+                    keep = jnp.asarray(P.pred_mask(pred, fact))[rowids]
+                    rowids = rowids[keep]
+                    group = group[keep]
+        elif isinstance(node, P.HashJoin):
+            if empty:
+                continue
+            htk, htv = (cache.get_or_build(db, node) if cache is not None
+                        else HT.build_dim_table(db, node))
+            keys = jnp.asarray(fact[node.fact_col])[rowids]
+            # one probe; matched positions come back as a selection
+            # vector and the live columns are gathered through it
+            payload, sel, cnt = ops.probe_join(
+                keys, jnp.arange(rowids.shape[0], dtype=jnp.int32),
+                htk, htv, mode=mode, tile=tile)
+            cnt = int(cnt)
+            sel = sel[:cnt]
+            rowids = rowids[sel]
+            group = group[sel] + payload[:cnt] * jnp.int32(node.mult)
+        elif isinstance(node, P.Project):
+            m = jnp.asarray(fact[node.m1]).astype(jnp.float32)[rowids]
+            if node.op == "mul":
+                m = m * jnp.asarray(fact[node.m2]).astype(
+                    jnp.float32)[rowids]
+            elif node.op == "sub":
+                m2 = jnp.asarray(fact[node.m2]).astype(jnp.float32)[rowids]
+                m = m if empty else ops.project(m, m2, 1.0, -1.0,
+                                                mode=mode, tile=tile)
+            measure = m
+        elif isinstance(node, P.GroupAgg):
+            if empty:
+                return np.zeros(node.n_groups, np.float32)
+            out = ops.group_sum(group, measure, node.n_groups,
+                                mode=mode, tile=tile)
+            return np.asarray(out)
+        elif isinstance(node, P.OrderBy):
+            if empty:
+                break
+            keys = jnp.asarray(
+                np.asarray(fact[node.key_col], np.int32))[rowids]
+            _, rowids = ops.radix_sort(keys, rowids, mode=mode, tile=tile)
+        else:
+            raise TypeError(f"{plan.name}: cannot lower node {node!r}")
+
+    # only row plans (classify()-checked at compile time) fall through
+    return np.asarray(rowids)
+
+
+# ---------------------------------------------------------------------------
+# public API
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class CompiledQuery:
+    """An executable lowering of a logical plan.
+
+    ``strategy`` is the strategy that will actually run; when the caller
+    asked for ``fused`` on an unfusable plan, ``strategy == "opat"`` and
+    ``fallback_reason`` says why.
+    """
+    plan: P.Plan
+    strategy: str
+    requested: str
+    fallback_reason: Optional[str] = None
+
+    def execute(self, db: ssb.Database, mode: str = "auto",
+                tile: int = DEFAULT_TILE,
+                cache: Optional[HT.HashTableCache] = None) -> np.ndarray:
+        if self.strategy == "fused":
+            return _execute_fused(self.plan, db, mode, tile, cache)
+        return _execute_opat(self.plan, db, mode, tile, cache)
+
+    __call__ = execute
+
+
+def compile_plan(plan: P.Plan, strategy: str = "fused") -> CompiledQuery:
+    """Validate + lower ``plan``.  ``strategy``:
+
+    * ``fused`` — Crystal single-kernel lowering; falls back to ``opat``
+      (with ``fallback_reason`` set) when the plan is not fusable.
+    * ``opat``  — force operator-at-a-time lowering.
+    """
+    if strategy not in STRATEGIES:
+        raise ValueError(f"unknown strategy {strategy!r}; "
+                         f"expected one of {STRATEGIES}")
+    if strategy == "fused":
+        reason = fusability(plan)       # classifies; raises on malformed
+        if reason is None:
+            return CompiledQuery(plan, "fused", "fused")
+        return CompiledQuery(plan, "opat", "fused", fallback_reason=reason)
+    classify(plan)                      # raise on malformed chains
+    return CompiledQuery(plan, "opat", "opat")

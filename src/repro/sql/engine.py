@@ -1,327 +1,244 @@
-"""SSB query engine: declarative query specs executed through the Crystal
-fused-SPJA pipeline (one kernel per query, paper §5) with a pure-numpy
-oracle for correctness.
+"""SSB query engine facade over the logical-plan IR.
 
-A query is: fact-table range predicates + selective hash joins (dim tables
-filtered at build) + a group-id linearization over join payloads + an
-aggregated measure.  This covers all 13 SSB queries.
+The 13 SSB queries are *constructed through the plan builder*
+(``repro.sql.plan``) and lowered by the plan compiler
+(``repro.sql.compile``) — there is no bespoke per-query execution path
+any more.  This module keeps the historical entry points as thin
+wrappers:
+
+  ``ssb_queries()``       -> Dict[str, Plan]   (plans, not QuerySpecs)
+  ``run_query(db, plan)``  -> fused (Crystal) lowering, as before
+  ``run_query_oracle``    -> independent pure-numpy plan interpreter
+  ``order_by``            -> Scan->OrderBy row plan, opat lowering
+
+Plans expose ``.joins`` / ``.preds`` / ``.m1`` / ``.n_groups`` accessors
+matching the old ``QuerySpec`` shape, so existing call sites (tests,
+benchmarks) keep working against the IR.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional, Tuple
+from types import SimpleNamespace
+from typing import Dict, Optional, Sequence
 
-import jax.numpy as jnp
 import numpy as np
 
-from repro.kernels import ops
+from repro.sql import plan as P
 from repro.sql import ssb
+from repro.sql.compile import compile_plan
+from repro.sql.hashtable import (EMPTY, HashTableCache, build_dim_table,
+                                 next_pow2, np_build, np_hash)
+from repro.sql.plan import (AffineExpr, ColExpr, EqPred, FlagExpr, InPred,
+                            Plan, QueryBuilder, RangePred)
 from repro.sql.ssb import Database, datekey
 
-
-# ---------------------------------------------------------------------------
-# numpy hash-table build (parallel linear-probe placement — emulates the
-# paper's CAS build; any placement satisfying the gapless-chain invariant
-# is a valid linear-probing table)
-# ---------------------------------------------------------------------------
-
-EMPTY = -2147483648
-
-
-def np_hash(keys: np.ndarray, n_slots: int) -> np.ndarray:
-    return ((keys.astype(np.uint32) * np.uint32(2654435761))
-            & np.uint32(n_slots - 1)).astype(np.int64)
-
-
-def np_build(keys: np.ndarray, vals: np.ndarray, n_slots: int
-             ) -> Tuple[np.ndarray, np.ndarray]:
-    htk = np.full(n_slots, EMPTY, np.int32)
-    htv = np.zeros(n_slots, np.int32)
-    slot = np_hash(keys, n_slots)
-    pending = np.arange(len(keys))
-    while len(pending):
-        s = slot[pending]
-        order = np.argsort(s, kind="stable")
-        s_sorted = s[order]
-        first = np.ones(len(s_sorted), bool)
-        first[1:] = s_sorted[1:] != s_sorted[:-1]
-        winner_rows = pending[order[first]]
-        winner_slots = s_sorted[first]
-        empty = htk[winner_slots] == EMPTY
-        placed = winner_rows[empty]
-        htk[winner_slots[empty]] = keys[placed]
-        htv[winner_slots[empty]] = vals[placed]
-        placed_mask = np.zeros(len(keys), bool)
-        placed_mask[placed] = True
-        rest = pending[~placed_mask[pending]]
-        slot[rest] = (slot[rest] + 1) & (n_slots - 1)
-        pending = rest
-    return htk, htv
-
-
-def next_pow2(n: int) -> int:
-    return 1 << max(4, int(np.ceil(np.log2(max(n * 2, 2)))))
+__all__ = [
+    "EMPTY", "np_hash", "np_build", "next_pow2", "HashTableCache",
+    "ssb_queries", "run_query", "run_query_oracle", "order_by",
+    "build_join_tables", "Plan", "QueryBuilder",
+]
 
 
 # ---------------------------------------------------------------------------
-# query specs
+# the 13 SSB queries, built through the plan IR
 # ---------------------------------------------------------------------------
 
 
-@dataclass
-class JoinSpec:
-    fact_col: str
-    dim: str                    # dim table name
-    key_col: str
-    filter: Callable[[ssb.Table], np.ndarray]     # row mask
-    payload: Callable[[ssb.Table], np.ndarray]    # int32 payload per row
-    mult: int                   # group-id multiplier
+def _date_join(b: QueryBuilder, payload: P.Expr, mult: int,
+               years: Optional[Sequence[int]] = None) -> QueryBuilder:
+    return b.hash_join(
+        "lo_orderdate", "date", "d_datekey",
+        dim_filter=None if years is None else InPred("d_year", tuple(years)),
+        payload=payload, mult=mult)
 
 
-@dataclass
-class QuerySpec:
-    name: str
-    preds: List[Tuple[str, int, int]]             # (fact col, lo, hi)
-    joins: List[JoinSpec]
-    m1: str
-    m2: Optional[str]
-    measure_op: str             # first | mul | sub
-    n_groups: int
-
-
-def _region_filter(col: str, region: int):
-    return lambda t: np.asarray(t[col]) == region
-
-
-ONE = lambda t: np.ones(t.n_rows, np.int32)
-
-
-def ssb_queries() -> Dict[str, QuerySpec]:
-    q: Dict[str, QuerySpec] = {}
+def ssb_queries() -> Dict[str, Plan]:
+    q: Dict[str, Plan] = {}
     dk = datekey
-    q["q1.1"] = QuerySpec(
-        "q1.1",
-        preds=[("lo_orderdate", dk(1993), dk(1994) - 1),
-               ("lo_discount", 1, 3), ("lo_quantity", 1, 24)],
-        joins=[], m1="lo_extendedprice", m2="lo_discount",
-        measure_op="mul", n_groups=1)
-    q["q1.2"] = QuerySpec(
-        "q1.2",
-        preds=[("lo_orderdate", dk(1994, 0), dk(1994, 30)),
-               ("lo_discount", 4, 6), ("lo_quantity", 26, 35)],
-        joins=[], m1="lo_extendedprice", m2="lo_discount",
-        measure_op="mul", n_groups=1)
-    q["q1.3"] = QuerySpec(
-        "q1.3",
-        preds=[("lo_orderdate", dk(1994, 35), dk(1994, 41)),
-               ("lo_discount", 5, 7), ("lo_quantity", 26, 35)],
-        joins=[], m1="lo_extendedprice", m2="lo_discount",
-        measure_op="mul", n_groups=1)
+    d_year0 = AffineExpr("d_year", 1, -1992)
 
-    def date_join(payload, mult, years=None):
-        return JoinSpec(
-            "lo_orderdate", "date", "d_datekey",
-            (lambda t: np.isin(np.asarray(t["d_year"]), years))
-            if years is not None else (lambda t: np.ones(t.n_rows, bool)),
-            payload, mult)
+    # --- flight 1: pure selection, SUM(extendedprice * discount) ---
+    def flight1(name, date_lo, date_hi, disc, qty):
+        return (QueryBuilder(name).scan("lineorder")
+                .where_range("lo_orderdate", date_lo, date_hi)
+                .where_range("lo_discount", *disc)
+                .where_range("lo_quantity", *qty)
+                .measure("lo_extendedprice", "lo_discount", "mul")
+                .group_by(1).build())
+
+    q["q1.1"] = flight1("q1.1", dk(1993), dk(1994) - 1, (1, 3), (1, 24))
+    q["q1.2"] = flight1("q1.2", dk(1994, 0), dk(1994, 30), (4, 6), (26, 35))
+    q["q1.3"] = flight1("q1.3", dk(1994, 35), dk(1994, 41), (5, 7), (26, 35))
 
     # --- flight 2: part x supplier x date, group (d_year, p_brand1) ---
     def flight2(name, part_filter, s_region):
-        return QuerySpec(
-            name, preds=[],
-            joins=[
-                JoinSpec("lo_suppkey", "supplier", "s_suppkey",
-                         _region_filter("s_region", s_region), ONE, 0),
-                JoinSpec("lo_partkey", "part", "p_partkey", part_filter,
-                         lambda t: np.asarray(t["p_brand1"]), 1),
-                date_join(lambda t: np.asarray(t["d_year"]) - 1992, 1000),
-            ],
-            m1="lo_revenue", m2=None, measure_op="first", n_groups=7000)
+        b = (QueryBuilder(name).scan("lineorder")
+             .hash_join("lo_suppkey", "supplier", "s_suppkey",
+                        dim_filter=EqPred("s_region", s_region))
+             .hash_join("lo_partkey", "part", "p_partkey",
+                        dim_filter=part_filter,
+                        payload=ColExpr("p_brand1"), mult=1))
+        return (_date_join(b, d_year0, 1000)
+                .measure("lo_revenue").group_by(7000).build())
 
-    q["q2.1"] = flight2("q2.1",
-                        lambda t: np.asarray(t["p_category"]) == 1,
-                        ssb.AMERICA)
-    q["q2.2"] = flight2(
-        "q2.2",
-        lambda t: (np.asarray(t["p_brand1"]) >= 260)
-        & (np.asarray(t["p_brand1"]) <= 267), ssb.ASIA)
-    q["q2.3"] = flight2("q2.3",
-                        lambda t: np.asarray(t["p_brand1"]) == 260,
-                        ssb.EUROPE)
+    q["q2.1"] = flight2("q2.1", EqPred("p_category", 1), ssb.AMERICA)
+    q["q2.2"] = flight2("q2.2", RangePred("p_brand1", 260, 267), ssb.ASIA)
+    q["q2.3"] = flight2("q2.3", EqPred("p_brand1", 260), ssb.EUROPE)
 
-    # --- flight 3: customer x supplier x date ---
+    # --- flight 3: customer x supplier x date, group (c_x, s_x, d_year) ---
     def flight3(name, c_filter, c_payload, s_filter, s_payload, cdim,
                 years, date_days=None):
         n_years = 6
-        joins = [
-            JoinSpec("lo_custkey", "customer", "c_custkey", c_filter,
-                     c_payload, cdim * n_years),
-            JoinSpec("lo_suppkey", "supplier", "s_suppkey", s_filter,
-                     s_payload, n_years),
-            date_join(lambda t: np.asarray(t["d_year"]) - 1992, 1,
-                      years=years),
-        ]
-        preds = []
+        b = QueryBuilder(name).scan("lineorder")
         if date_days is not None:
-            preds = [("lo_orderdate", date_days[0], date_days[1])]
-        return QuerySpec(name, preds=preds, joins=joins, m1="lo_revenue",
-                         m2=None, measure_op="first",
-                         n_groups=cdim * cdim * n_years)
+            b = b.where_range("lo_orderdate", *date_days)
+        b = (b.hash_join("lo_custkey", "customer", "c_custkey",
+                         dim_filter=c_filter, payload=c_payload,
+                         mult=cdim * n_years)
+             .hash_join("lo_suppkey", "supplier", "s_suppkey",
+                        dim_filter=s_filter, payload=s_payload,
+                        mult=n_years))
+        return (_date_join(b, d_year0, 1, years=years)
+                .measure("lo_revenue")
+                .group_by(cdim * cdim * n_years).build())
 
-    years_92_97 = [1992, 1993, 1994, 1995, 1996, 1997]
+    years_92_97 = (1992, 1993, 1994, 1995, 1996, 1997)
     q["q3.1"] = flight3(
         "q3.1",
-        _region_filter("c_region", ssb.ASIA),
-        lambda t: np.asarray(t["c_nation"]) - 10,
-        _region_filter("s_region", ssb.ASIA),
-        lambda t: np.asarray(t["s_nation"]) - 10,
+        EqPred("c_region", ssb.ASIA), AffineExpr("c_nation", 1, -10),
+        EqPred("s_region", ssb.ASIA), AffineExpr("s_nation", 1, -10),
         5, years_92_97)
     q["q3.2"] = flight3(
         "q3.2",
-        lambda t: np.asarray(t["c_nation"]) == ssb.NATION_US,
-        lambda t: np.asarray(t["c_city"]) - ssb.NATION_US * 10,
-        lambda t: np.asarray(t["s_nation"]) == ssb.NATION_US,
-        lambda t: np.asarray(t["s_city"]) - ssb.NATION_US * 10,
+        EqPred("c_nation", ssb.NATION_US),
+        AffineExpr("c_city", 1, -ssb.NATION_US * 10),
+        EqPred("s_nation", ssb.NATION_US),
+        AffineExpr("s_city", 1, -ssb.NATION_US * 10),
         10, years_92_97)
     two_cities = (ssb.CITY_UKI1, ssb.CITY_UKI5)
+    uki5_flag = FlagExpr(EqPred("c_city", ssb.CITY_UKI5))
+    s_uki5_flag = FlagExpr(EqPred("s_city", ssb.CITY_UKI5))
     q["q3.3"] = flight3(
         "q3.3",
-        lambda t: np.isin(np.asarray(t["c_city"]), two_cities),
-        lambda t: (np.asarray(t["c_city"]) == ssb.CITY_UKI5).astype(np.int32),
-        lambda t: np.isin(np.asarray(t["s_city"]), two_cities),
-        lambda t: (np.asarray(t["s_city"]) == ssb.CITY_UKI5).astype(np.int32),
+        InPred("c_city", two_cities), uki5_flag,
+        InPred("s_city", two_cities), s_uki5_flag,
         2, years_92_97)
     q["q3.4"] = flight3(
         "q3.4",
-        lambda t: np.isin(np.asarray(t["c_city"]), two_cities),
-        lambda t: (np.asarray(t["c_city"]) == ssb.CITY_UKI5).astype(np.int32),
-        lambda t: np.isin(np.asarray(t["s_city"]), two_cities),
-        lambda t: (np.asarray(t["s_city"]) == ssb.CITY_UKI5).astype(np.int32),
-        2, years_92_97, date_days=(datekey(1997, 11 * 31), datekey(1997, 364)))
+        InPred("c_city", two_cities), uki5_flag,
+        InPred("s_city", two_cities), s_uki5_flag,
+        2, years_92_97, date_days=(dk(1997, 11 * 31), dk(1997, 364)))
 
-    # --- flight 4 ---
-    q["q4.1"] = QuerySpec(
-        "q4.1", preds=[],
-        joins=[
-            JoinSpec("lo_custkey", "customer", "c_custkey",
-                     _region_filter("c_region", ssb.AMERICA),
-                     lambda t: np.asarray(t["c_nation"]) - 5, 7),
-            JoinSpec("lo_suppkey", "supplier", "s_suppkey",
-                     _region_filter("s_region", ssb.AMERICA), ONE, 0),
-            JoinSpec("lo_partkey", "part", "p_partkey",
-                     lambda t: np.asarray(t["p_mfgr"]) <= 1, ONE, 0),
-            date_join(lambda t: np.asarray(t["d_year"]) - 1992, 1),
-        ],
-        m1="lo_revenue", m2="lo_supplycost", measure_op="sub", n_groups=35)
-    q["q4.2"] = QuerySpec(
-        "q4.2", preds=[],
-        joins=[
-            JoinSpec("lo_custkey", "customer", "c_custkey",
-                     _region_filter("c_region", ssb.AMERICA), ONE, 0),
-            JoinSpec("lo_suppkey", "supplier", "s_suppkey",
-                     _region_filter("s_region", ssb.AMERICA),
-                     lambda t: np.asarray(t["s_nation"]) - 5, 10),
-            JoinSpec("lo_partkey", "part", "p_partkey",
-                     lambda t: np.asarray(t["p_mfgr"]) <= 1,
-                     lambda t: np.asarray(t["p_category"]), 1),
-            date_join(lambda t: np.asarray(t["d_year"]) - 1997, 50,
-                      years=[1997, 1998]),
-        ],
-        m1="lo_revenue", m2="lo_supplycost", measure_op="sub", n_groups=100)
-    q["q4.3"] = QuerySpec(
-        "q4.3", preds=[],
-        joins=[
-            JoinSpec("lo_custkey", "customer", "c_custkey",
-                     _region_filter("c_region", ssb.AMERICA), ONE, 0),
-            JoinSpec("lo_suppkey", "supplier", "s_suppkey",
-                     lambda t: np.asarray(t["s_nation"]) == ssb.NATION_US,
-                     lambda t: np.asarray(t["s_city"])
-                     - ssb.NATION_US * 10, 40),
-            JoinSpec("lo_partkey", "part", "p_partkey",
-                     lambda t: np.asarray(t["p_category"]) == 3,
-                     lambda t: np.asarray(t["p_brand1"]) - 120, 1),
-            date_join(lambda t: np.asarray(t["d_year"]) - 1997, 400,
-                      years=[1997, 1998]),
-        ],
-        m1="lo_revenue", m2="lo_supplycost", measure_op="sub", n_groups=800)
+    # --- flight 4: profit queries, SUM(revenue - supplycost) ---
+    q["q4.1"] = (
+        QueryBuilder("q4.1").scan("lineorder")
+        .hash_join("lo_custkey", "customer", "c_custkey",
+                   dim_filter=EqPred("c_region", ssb.AMERICA),
+                   payload=AffineExpr("c_nation", 1, -5), mult=7)
+        .hash_join("lo_suppkey", "supplier", "s_suppkey",
+                   dim_filter=EqPred("s_region", ssb.AMERICA))
+        .hash_join("lo_partkey", "part", "p_partkey",
+                   dim_filter=RangePred("p_mfgr", 0, 1))
+        .hash_join("lo_orderdate", "date", "d_datekey",
+                   payload=d_year0, mult=1)
+        .measure("lo_revenue", "lo_supplycost", "sub")
+        .group_by(35).build())
+    q["q4.2"] = (
+        QueryBuilder("q4.2").scan("lineorder")
+        .hash_join("lo_custkey", "customer", "c_custkey",
+                   dim_filter=EqPred("c_region", ssb.AMERICA))
+        .hash_join("lo_suppkey", "supplier", "s_suppkey",
+                   dim_filter=EqPred("s_region", ssb.AMERICA),
+                   payload=AffineExpr("s_nation", 1, -5), mult=10)
+        .hash_join("lo_partkey", "part", "p_partkey",
+                   dim_filter=RangePred("p_mfgr", 0, 1),
+                   payload=ColExpr("p_category"), mult=1)
+        .hash_join("lo_orderdate", "date", "d_datekey",
+                   dim_filter=InPred("d_year", (1997, 1998)),
+                   payload=AffineExpr("d_year", 1, -1997), mult=50)
+        .measure("lo_revenue", "lo_supplycost", "sub")
+        .group_by(100).build())
+    q["q4.3"] = (
+        QueryBuilder("q4.3").scan("lineorder")
+        .hash_join("lo_custkey", "customer", "c_custkey",
+                   dim_filter=EqPred("c_region", ssb.AMERICA))
+        .hash_join("lo_suppkey", "supplier", "s_suppkey",
+                   dim_filter=EqPred("s_nation", ssb.NATION_US),
+                   payload=AffineExpr("s_city", 1, -ssb.NATION_US * 10),
+                   mult=40)
+        .hash_join("lo_partkey", "part", "p_partkey",
+                   dim_filter=EqPred("p_category", 3),
+                   payload=AffineExpr("p_brand1", 1, -120), mult=1)
+        .hash_join("lo_orderdate", "date", "d_datekey",
+                   dim_filter=InPred("d_year", (1997, 1998)),
+                   payload=AffineExpr("d_year", 1, -1997), mult=400)
+        .measure("lo_revenue", "lo_supplycost", "sub")
+        .group_by(800).build())
     return q
 
 
 # ---------------------------------------------------------------------------
-# execution
+# execution wrappers
 # ---------------------------------------------------------------------------
 
 
-def build_join_tables(db: Database, spec: QuerySpec):
-    """Build (filtered) dim hash tables.  Probe miss == row filtered."""
+def build_join_tables(db: Database, plan: Plan):
+    """Build (filtered) dim hash tables for a plan's joins (legacy view:
+    flat [htk0, htv0, htk1, htv1, ...])."""
     tables = []
-    for j in spec.joins:
-        dim: ssb.Table = getattr(db, j.dim)
-        mask = np.asarray(j.filter(dim)).astype(bool)
-        keys = np.asarray(dim[j.key_col])[mask].astype(np.int32)
-        vals = np.asarray(j.payload(dim)).astype(np.int32)[mask]
-        n_slots = next_pow2(max(len(keys), 1))
-        htk, htv = np_build(keys, vals, n_slots)
-        tables.extend([jnp.asarray(htk), jnp.asarray(htv)])
+    for j in plan.joins:
+        tables.extend(build_dim_table(db, j))
     return tables
 
 
-def run_query(db: Database, spec: QuerySpec, mode: str = "ref",
+def run_query(db: Database, plan: Plan, mode: str = "ref",
               tile: int = 2048) -> np.ndarray:
-    """Execute through the Crystal fused-SPJA pipeline. -> (n_groups,) f32"""
-    lo = db.lineorder
-    pred_cols = [jnp.asarray(lo[c]) for c, _, _ in spec.preds]
-    pred_bounds = jnp.asarray(
-        np.array([[l, h] for _, l, h in spec.preds], np.int32).reshape(
-            len(spec.preds), 2))
-    join_keys = [jnp.asarray(lo[j.fact_col]) for j in spec.joins]
-    join_tables = build_join_tables(db, spec)
-    mults = jnp.asarray(np.array([j.mult for j in spec.joins], np.int32))
-    m1 = jnp.asarray(lo[spec.m1]).astype(jnp.float32)
-    m2 = None if spec.m2 is None else jnp.asarray(lo[spec.m2]).astype(
-        jnp.float32)
-    out = ops.spja(pred_cols, pred_bounds, join_keys, join_tables, mults,
-                   m1, m2, measure_op=spec.measure_op,
-                   n_groups=spec.n_groups, mode=mode, tile=tile)
-    return np.asarray(out)
+    """Execute through the Crystal fused-SPJA lowering. -> (n_groups,) f32"""
+    return compile_plan(plan, "fused").execute(db, mode=mode, tile=tile)
 
 
 def order_by(table: ssb.Table, key_col: str, mode: str = "ref"):
     """ORDER BY via the paper's §4.4 LSB radix sort (stable): returns the
-    table's columns reordered by key_col ascending."""
-    from repro.kernels import ops
-    keys = jnp.asarray(np.asarray(table[key_col], np.int32))
-    idx = jnp.arange(table.n_rows, dtype=jnp.int32)
-    _, perm = ops.radix_sort(keys, idx, mode=mode)
-    perm = np.asarray(perm)
+    table's columns reordered by key_col ascending.  Lowers a
+    Scan -> OrderBy row plan operator-at-a-time."""
+    plan = (QueryBuilder(f"orderby_{table.name}_{key_col}")
+            .scan(table.name).order_by(key_col).build())
+    shim = SimpleNamespace(**{table.name: table})
+    perm = np.asarray(
+        compile_plan(plan, "opat").execute(shim, mode=mode))
     return {c: np.asarray(v)[perm] for c, v in table.columns.items()}
 
 
-def run_query_oracle(db: Database, spec: QuerySpec) -> np.ndarray:
-    """Independent pure-numpy implementation (mask + np.add.at)."""
-    lo = db.lineorder
+def run_query_oracle(db: Database, plan: Plan) -> np.ndarray:
+    """Independent pure-numpy plan interpreter (mask + np.add.at) — the
+    correctness ground truth for both lowering strategies (aggregate
+    plans; row plans are checked against numpy directly in tests)."""
+    if plan.project is None or plan.group is None:
+        raise ValueError(
+            f"{plan.name}: the oracle interprets aggregate plans "
+            "(Project + GroupAgg) only")
+    lo = getattr(db, plan.scan.table)
     n = lo.n_rows
     mask = np.ones(n, bool)
-    for col, l, h in spec.preds:
-        c = np.asarray(lo[col])
-        mask &= (c >= l) & (c <= h)
+    for pred in plan.filters:
+        mask &= P.pred_mask(pred, lo)
     group = np.zeros(n, np.int64)
-    for j in spec.joins:
+    for j in plan.joins:
         dim: ssb.Table = getattr(db, j.dim)
-        dmask = np.asarray(j.filter(dim)).astype(bool)
+        dmask = P.pred_mask(j.filter, dim)
         keys = np.asarray(dim[j.key_col])
-        payload = np.asarray(j.payload(dim)).astype(np.int64)
+        payload = P.expr_values(j.payload, dim).astype(np.int64)
         lut = np.full(int(keys.max()) + 2, -1, np.int64)
         lut[keys[dmask]] = payload[dmask]
         fk = np.asarray(lo[j.fact_col])
         pv = lut[fk]
         mask &= pv >= 0
         group = group + np.where(pv >= 0, pv, 0) * j.mult
-    m = np.asarray(lo[spec.m1]).astype(np.float64)
-    if spec.measure_op == "mul":
-        m = m * np.asarray(lo[spec.m2])
-    elif spec.measure_op == "sub":
-        m = m - np.asarray(lo[spec.m2])
-    out = np.zeros(spec.n_groups, np.float64)
+    proj = plan.project
+    m = np.asarray(lo[proj.m1]).astype(np.float64)
+    if proj.op == "mul":
+        m = m * np.asarray(lo[proj.m2])
+    elif proj.op == "sub":
+        m = m - np.asarray(lo[proj.m2])
+    out = np.zeros(plan.n_groups, np.float64)
     np.add.at(out, group[mask], m[mask])
     return out.astype(np.float32)

@@ -1,0 +1,145 @@
+"""Physical dimension hash tables: host-side build + cross-query cache.
+
+The build is the numpy parallel linear-probe placement (emulates the
+paper's CAS build; any placement satisfying the gapless-chain invariant is
+a valid linear-probing table).  Dimension tables are small relative to the
+fact table, so the build runs on the host and only the probe side is a
+device kernel — the paper makes the same split (§4.3: build time is noise
+at SSB dimension cardinalities).
+
+``HashTableCache`` keys built tables by the *logical* identity of the
+build side — (dim table, key column, filter fingerprint, payload
+fingerprint) — so a query server can skip the build phase whenever two
+queries share a join build side (e.g. every SSB flight joins ``date`` on
+``d_datekey`` with the same payload).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.blocks import EMPTY   # probe kernels compare against this
+from repro.sql import plan as P
+from repro.sql import ssb
+
+
+def np_hash(keys: np.ndarray, n_slots: int) -> np.ndarray:
+    return ((keys.astype(np.uint32) * np.uint32(2654435761))
+            & np.uint32(n_slots - 1)).astype(np.int64)
+
+
+def np_build(keys: np.ndarray, vals: np.ndarray, n_slots: int
+             ) -> Tuple[np.ndarray, np.ndarray]:
+    htk = np.full(n_slots, EMPTY, np.int32)
+    htv = np.zeros(n_slots, np.int32)
+    slot = np_hash(keys, n_slots)
+    pending = np.arange(len(keys))
+    while len(pending):
+        s = slot[pending]
+        order = np.argsort(s, kind="stable")
+        s_sorted = s[order]
+        first = np.ones(len(s_sorted), bool)
+        first[1:] = s_sorted[1:] != s_sorted[:-1]
+        winner_rows = pending[order[first]]
+        winner_slots = s_sorted[first]
+        empty = htk[winner_slots] == EMPTY
+        placed = winner_rows[empty]
+        htk[winner_slots[empty]] = keys[placed]
+        htv[winner_slots[empty]] = vals[placed]
+        placed_mask = np.zeros(len(keys), bool)
+        placed_mask[placed] = True
+        rest = pending[~placed_mask[pending]]
+        slot[rest] = (slot[rest] + 1) & (n_slots - 1)
+        pending = rest
+    return htk, htv
+
+
+def next_pow2(n: int) -> int:
+    return 1 << max(4, int(np.ceil(np.log2(max(n * 2, 2)))))
+
+
+def build_dim_table(db: ssb.Database, join: P.HashJoin
+                    ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Build the (filtered) hash table for one join's dim side.
+    Probe miss == row filtered (selective-join pipelining)."""
+    dim: ssb.Table = getattr(db, join.dim)
+    mask = P.pred_mask(join.filter, dim)
+    keys = np.asarray(dim[join.key_col])[mask].astype(np.int32)
+    vals = P.expr_values(join.payload, dim)[mask]
+    if len(vals) and vals.min() < 0:
+        # non-negative payloads are the engine's contract: the numpy
+        # oracle marks probe misses with a negative sentinel, and negative
+        # group-id contributions would wrap in the scatter-add — a
+        # negative payload would silently diverge the three paths
+        raise ValueError(
+            f"join on {join.dim}.{join.key_col}: payload {join.payload!r} "
+            f"yields negative values (min {int(vals.min())}) on filtered "
+            "rows; payloads must be >= 0 after the dim filter")
+    n_slots = next_pow2(max(len(keys), 1))
+    htk, htv = np_build(keys, vals, n_slots)
+    return jnp.asarray(htk), jnp.asarray(htv)
+
+
+def join_cache_key(join: P.HashJoin) -> Tuple:
+    """Logical identity of a join's build side (mult is a probe-side
+    concern and deliberately excluded — same table, different group
+    multiplier still hits)."""
+    return (join.dim, join.key_col,
+            P.fingerprint(join.filter), P.fingerprint(join.payload))
+
+
+def _has_callable(part) -> bool:
+    if isinstance(part, tuple):
+        return (bool(part) and part[0] == "callable") or \
+            any(_has_callable(p) for p in part)
+    return False
+
+
+def _cacheable(key: Tuple) -> bool:
+    """Identity-fingerprinted (callable) build sides — at any nesting
+    depth, e.g. inside a FlagExpr — never re-hit across independently
+    built plans, so storing them only pins memory."""
+    return not _has_callable(key)
+
+
+@dataclass
+class HashTableCache:
+    """Keyed cache of built dimension hash tables with hit/miss stats.
+
+    Scoped to a single ``Database``: the cache key is the *logical* build
+    side, so entries built from one database must never answer for
+    another.  The first ``get_or_build`` binds the cache to its database;
+    a different one raises rather than serving wrong tables.
+    """
+    tables: Dict[Tuple, Tuple[jnp.ndarray, jnp.ndarray]] = \
+        field(default_factory=dict)
+    hits: int = 0
+    misses: int = 0
+    _db: object = None
+
+    def get_or_build(self, db: ssb.Database, join: P.HashJoin
+                     ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        if self._db is None:
+            self._db = db
+        elif self._db is not db:
+            raise ValueError(
+                "HashTableCache is scoped to one Database; use a fresh "
+                "cache per database")
+        key = join_cache_key(join)
+        hit = self.tables.get(key)
+        if hit is not None:
+            self.hits += 1
+            return hit
+        self.misses += 1
+        built = build_dim_table(db, join)
+        if _cacheable(key):
+            self.tables[key] = built
+        return built
+
+    @property
+    def hit_rate(self) -> float:
+        total = self.hits + self.misses
+        return self.hits / total if total else 0.0

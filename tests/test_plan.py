@@ -1,0 +1,121 @@
+"""Plan IR + compiler: all 13 SSB queries round-trip through both
+lowering strategies against the independent numpy oracle, fusability
+fallback is reported, and the builder/accessor surface stays stable."""
+import numpy as np
+import pytest
+
+from repro.sql import engine, ssb
+from repro.sql import plan as P
+from repro.sql.compile import classify, compile_plan, fusability
+from repro.sql.plan import QueryBuilder
+
+DB = ssb.generate(sf=0.01, seed=3)
+DB_SMALL = ssb.generate(sf=0.002, seed=5)
+QUERIES = engine.ssb_queries()
+
+
+@pytest.mark.parametrize("name", list(QUERIES))
+@pytest.mark.parametrize("strategy", ["fused", "opat"])
+def test_ssb_both_strategies_vs_oracle(name, strategy):
+    plan = QUERIES[name]
+    cq = compile_plan(plan, strategy)
+    assert cq.strategy == strategy      # SSB plans must not fall back
+    assert cq.fallback_reason is None
+    got = cq.execute(DB, mode="ref")
+    expect = engine.run_query_oracle(DB, plan)
+    np.testing.assert_allclose(got, expect, rtol=1e-5, atol=1e-3)
+
+
+@pytest.mark.parametrize("name", ["q1.2", "q2.1", "q4.3"])
+def test_opat_kernel_path_vs_oracle(name):
+    """opat lowering through the Pallas kernels (interpret on CPU)."""
+    plan = QUERIES[name]
+    got = compile_plan(plan, "opat").execute(DB_SMALL, mode="kernel",
+                                             tile=512)
+    expect = engine.run_query_oracle(DB_SMALL, plan)
+    np.testing.assert_allclose(got, expect, rtol=1e-5, atol=1e-3)
+
+
+def test_plan_accessors_match_legacy_shape():
+    plan = QUERIES["q2.1"]
+    assert plan.name == "q2.1"
+    assert [j.dim for j in plan.joins] == ["supplier", "part", "date"]
+    assert plan.joins[1].mult == 1
+    assert plan.m1 == "lo_revenue" and plan.m2 is None
+    assert plan.measure_op == "first"
+    assert plan.n_groups == 7000
+    assert QUERIES["q1.1"].preds[0][0] == "lo_orderdate"
+    assert classify(plan) == "agg"
+
+
+def test_builder_rejects_malformed_chains():
+    with pytest.raises(ValueError):
+        QueryBuilder("bad").filter(P.RangePred("x", 0, 1))  # no scan
+    lone_project = (QueryBuilder("bad2").scan("lineorder")
+                    .measure("lo_revenue").build())
+    with pytest.raises(ValueError):
+        classify(lone_project)          # Project without GroupAgg
+    with pytest.raises(ValueError, match="row-plan only"):
+        (QueryBuilder("bad3").scan("lineorder")
+         .measure("lo_revenue").group_by(4).order_by("lo_revenue"))
+
+
+def test_fused_falls_back_with_reason():
+    # row-returning plan: not expressible as one SPJA kernel
+    rows = (QueryBuilder("rows").scan("supplier")
+            .order_by("s_city").build())
+    cq = compile_plan(rows, "fused")
+    assert cq.strategy == "opat"
+    assert "row-returning" in cq.fallback_reason
+
+    # callable fact predicate: bounds can't live in SMEM
+    odd = (QueryBuilder("odd").scan("lineorder")
+           .filter(lambda t: np.asarray(t["lo_quantity"]) % 2 == 0)
+           .measure("lo_revenue").group_by(1).build())
+    cq = compile_plan(odd, "fused")
+    assert cq.strategy == "opat"
+    assert "range predicate" in cq.fallback_reason
+    # ... and the fallback still computes the right answer
+    got = cq.execute(DB_SMALL, mode="ref")
+    lo = DB_SMALL.lineorder
+    mask = np.asarray(lo["lo_quantity"]) % 2 == 0
+    expect = np.asarray(lo["lo_revenue"], np.float64)[mask].sum()
+    np.testing.assert_allclose(got[0], expect, rtol=1e-5)
+
+
+def test_fusability_is_none_for_all_ssb():
+    for name, plan in QUERIES.items():
+        assert fusability(plan) is None, name
+
+
+def test_order_by_row_plan():
+    out = engine.order_by(DB_SMALL.supplier, "s_city")
+    assert (np.diff(out["s_city"]) >= 0).all()
+    # permutation: every original row present exactly once
+    np.testing.assert_array_equal(
+        np.sort(out["s_suppkey"]),
+        np.sort(np.asarray(DB_SMALL.supplier["s_suppkey"])))
+
+
+def test_negative_payload_rejected():
+    """Payloads must be >= 0 after the dim filter: the oracle's probe-miss
+    sentinel is negative, so a negative payload would silently diverge
+    the oracle from both lowerings.  q4.2's date payload without its year
+    filter is exactly that trap."""
+    bad = (QueryBuilder("bad_payload").scan("lineorder")
+           .hash_join("lo_orderdate", "date", "d_datekey",
+                      payload=P.AffineExpr("d_year", 1, -1997), mult=50)
+           .measure("lo_revenue").group_by(100).build())
+    for strategy in ("fused", "opat"):
+        with pytest.raises(ValueError, match="negative"):
+            compile_plan(bad, strategy).execute(DB_SMALL, mode="ref")
+
+
+def test_opat_empty_selection():
+    """A predicate selecting nothing must yield all-zero groups, not crash."""
+    empty = (QueryBuilder("empty").scan("lineorder")
+             .where_range("lo_quantity", 10_000, 20_000)
+             .measure("lo_revenue").group_by(4).build())
+    for strategy in ("fused", "opat"):
+        got = compile_plan(empty, strategy).execute(DB_SMALL, mode="ref")
+        np.testing.assert_array_equal(got, np.zeros(4, np.float32))

@@ -1,0 +1,144 @@
+"""Query server: results identical to direct run_query, dim-hash-table
+cache hits across repeated (and build-side-sharing) queries, wave
+bucketing by strategy."""
+import numpy as np
+
+from repro.sql import engine, ssb
+from repro.sql.hashtable import HashTableCache, join_cache_key
+from repro.sql.server import QueryServer
+
+DB = ssb.generate(sf=0.005, seed=11)
+QUERIES = engine.ssb_queries()
+
+
+def test_server_matches_direct_run_query():
+    server = QueryServer(DB, mode="ref")
+    rids = {name: server.submit(QUERIES[name])
+            for name in ("q1.1", "q2.1", "q3.2", "q4.1")}
+    results = server.run()
+    for name, rid in rids.items():
+        direct = engine.run_query(DB, QUERIES[name], mode="ref")
+        np.testing.assert_allclose(results[rid].result, direct,
+                                   rtol=1e-5, atol=1e-3)
+        assert results[rid].strategy == "fused"
+        assert results[rid].fallback_reason is None
+
+
+def test_repeated_query_hits_hash_table_cache():
+    server = QueryServer(DB, mode="ref")
+    r1 = server.submit(QUERIES["q2.1"])
+    out1 = server.run()
+    assert out1[r1].cache_misses == 3       # supplier, part, date built
+    assert out1[r1].cache_hits == 0
+    r2 = server.submit(QUERIES["q2.1"])
+    out2 = server.run()
+    assert out2[r2].cache_hits == 3         # all three builds skipped
+    assert out2[r2].cache_misses == 0
+    np.testing.assert_allclose(out1[r1].result, out2[r2].result)
+    assert server.cache.hit_rate == 0.5
+
+
+def test_distinct_queries_share_build_sides():
+    """q2.1 and q2.2 share the identical unfiltered date build side."""
+    server = QueryServer(DB, mode="ref")
+    server.submit(QUERIES["q2.1"])
+    server.submit(QUERIES["q2.2"])
+    results = server.run()
+    hits = sum(r.cache_hits for r in results.values())
+    assert hits >= 1
+    k1 = join_cache_key(QUERIES["q2.1"].joins[2])
+    k2 = join_cache_key(QUERIES["q2.2"].joins[2])
+    assert k1 == k2
+
+
+def test_opat_requests_run_and_match():
+    server = QueryServer(DB, mode="ref")
+    rf = server.submit(QUERIES["q3.1"], strategy="fused")
+    ro = server.submit(QUERIES["q3.1"], strategy="opat")
+    results = server.run()
+    assert results[rf].strategy == "fused"
+    assert results[ro].strategy == "opat"
+    np.testing.assert_allclose(results[rf].result, results[ro].result,
+                               rtol=1e-5, atol=1e-3)
+    # opat shares the same cache: its joins should all be hits
+    assert results[ro].cache_hits + results[rf].cache_hits >= 3
+    assert server.stats["waves"] == 2       # one wave per strategy bucket
+
+
+def test_wave_batching():
+    server = QueryServer(DB, mode="ref", max_batch=2)
+    for _ in range(3):
+        server.submit(QUERIES["q1.1"])
+    server.run()
+    assert server.stats["waves"] == 2
+    assert server.stats["occupancy"] == [1.0, 0.5]
+    assert server.stats["queries"] == 3
+
+
+def test_cache_standalone_stats():
+    cache = HashTableCache()
+    j = QUERIES["q4.2"].joins[3]
+    cache.get_or_build(DB, j)
+    cache.get_or_build(DB, j)
+    assert (cache.hits, cache.misses) == (1, 1)
+
+
+def test_cache_rejects_second_database():
+    cache = HashTableCache()
+    cache.get_or_build(DB, QUERIES["q2.1"].joins[0])
+    other = ssb.generate(sf=0.002, seed=99)
+    import pytest
+    with pytest.raises(ValueError, match="scoped to one Database"):
+        cache.get_or_build(other, QUERIES["q2.1"].joins[0])
+
+
+def test_bad_request_does_not_poison_batch():
+    """A failing plan yields an errored QueryResult; the rest of the wave
+    completes and the queue drains (server stays serviceable)."""
+    from repro.sql.plan import AffineExpr, QueryBuilder
+    bad = (QueryBuilder("bad_payload").scan("lineorder")
+           .hash_join("lo_orderdate", "date", "d_datekey",
+                      payload=AffineExpr("d_year", 1, -1997), mult=50)
+           .measure("lo_revenue").group_by(100).build())
+    server = QueryServer(DB, mode="ref")
+    r_good1 = server.submit(QUERIES["q1.1"])
+    r_bad = server.submit(bad)
+    r_good2 = server.submit(QUERIES["q1.2"])
+    results = server.run()
+    assert results[r_bad].result is None
+    assert "negative" in results[r_bad].error
+    for rid, name in ((r_good1, "q1.1"), (r_good2, "q1.2")):
+        np.testing.assert_allclose(
+            results[rid].result,
+            engine.run_query(DB, QUERIES[name], mode="ref"),
+            rtol=1e-5, atol=1e-3)
+    assert server.queue == []           # drained despite the failure
+    assert server.stats["errors"] == 1
+    # the server still serves afterwards
+    r_again = server.submit(QUERIES["q1.1"])
+    assert server.run()[r_again].error is None
+
+
+def test_nested_callable_payload_not_retained():
+    """A callable buried inside a FlagExpr must not be cached either."""
+    from repro.sql.plan import FlagExpr
+    import copy
+    cache = HashTableCache()
+    plan = copy.deepcopy(QUERIES["q3.3"])
+    plan.joins[0].payload = FlagExpr(lambda t: np.asarray(t["c_city"]) % 2
+                                     == 0)
+    cache.get_or_build(DB, plan.joins[0])
+    assert len(cache.tables) == 0
+
+
+def test_callable_build_sides_are_not_retained():
+    """Identity-fingerprinted (lambda) build sides never re-hit across
+    independently built plans, so the cache must not pin them."""
+    import copy
+    cache = HashTableCache()
+    plan = copy.deepcopy(QUERIES["q2.1"])
+    plan.joins[1].filter = lambda t: np.ones(t.n_rows, bool)
+    for j in plan.joins:
+        cache.get_or_build(DB, j)
+    assert len(cache.tables) == 2       # supplier + date only
+    assert cache.misses == 3
