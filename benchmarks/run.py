@@ -24,7 +24,10 @@ import numpy as np
 from repro.cost import model as M
 from repro.kernels import ref
 from repro.sql import engine, ssb
+from repro.sql import model as SM
 from repro.sql.compile import compile_plan
+from repro.sql.hashtable import HashTableCache
+from repro.sql.plan import ColExpr, QueryBuilder
 
 ROWS = []
 
@@ -58,6 +61,54 @@ def fig3_coprocessor():
          f"coprocessor_loses={cop > cpu}")
     emit("fig3.q1_gpu_resident_model", gpu,
          f"resident_speedup_vs_cpu={cpu / gpu:.1f}x")
+
+
+def _fig8_db(n_fact: int, n_dim: int, seed: int = 0) -> ssb.Database:
+    """Synthetic star join: fact FK uniform over a dim of n_dim rows."""
+    rng = np.random.default_rng(seed)
+    i32 = np.int32
+    fact = ssb.Table("lineorder", {
+        "lo_partkey": rng.integers(0, n_dim, n_fact, dtype=i32),
+        "lo_revenue": rng.integers(1, 1000, n_fact, dtype=i32)})
+    dim = ssb.Table("part", {
+        "p_partkey": np.arange(n_dim, dtype=i32),
+        "p_group": (np.arange(n_dim, dtype=i32) % 64)})
+    stub = ssb.Table("stub", {"x": np.zeros(1, i32)})
+    return ssb.Database(fact, stub, stub, stub, dim, sf=0.0)
+
+
+def fig8_partitioned_join(n_fact: int = 1 << 21):
+    """Fig. 8: join strategy vs build-side cardinality.  One FK join probed
+    through each physical strategy (fused / opat / part) as the dim table
+    grows past the cache, paired with the bandwidth cost model's predicted
+    seconds for the measuring host — the paper's claim is that the *model*
+    picks the right strategy, so every row reports whether the predicted
+    ranking matches the measured one (`auto` executes that prediction)."""
+    plan = (QueryBuilder("fig8").scan("lineorder")
+            .hash_join("lo_partkey", "part", "p_partkey",
+                       payload=ColExpr("p_group"), mult=1)
+            .measure("lo_revenue").group_by(64).build())
+    for log_dim in (12, 16, 20, 22):
+        db = _fig8_db(n_fact, 1 << log_dim)
+        measured = {}
+        for strat in ("fused", "opat", "part"):
+            cache = HashTableCache()        # warmup builds; timed = probes
+            cq = compile_plan(plan, strat)
+            measured[strat] = timeit(
+                lambda cq=cq, cache=cache: cq.execute(db, mode="ref",
+                                                      cache=cache),
+                warmup=1, iters=2)
+        # same Hardware the execute path sizes part_bits with, so the
+        # model prices exactly the partitioning that ran
+        preds = SM.predict(plan, db, SM.default_hardware())
+        meas_rank = sorted(measured, key=measured.get)
+        pred_rank = sorted(preds, key=preds.get)
+        emit(f"fig8.join_dim2e{log_dim}", measured[meas_rank[0]],
+             ";".join(f"{s}_us={measured[s]:.0f}" for s in sorted(measured))
+             + ";" + ";".join(f"model_{s}_us={preds[s] * 1e6:.0f}"
+                              for s in sorted(preds))
+             + f";measured_best={meas_rank[0]};model_best={pred_rank[0]}"
+             + f";ranking_match={meas_rank == pred_rank}")
 
 
 def fig9_tile_sweep():
@@ -230,6 +281,7 @@ def table3_cost():
 
 ALL = {
     "fig3": fig3_coprocessor,
+    "fig8": fig8_partitioned_join,
     "fig9": fig9_tile_sweep,
     "fig10": fig10_project,
     "fig12": fig12_select,

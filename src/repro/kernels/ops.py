@@ -83,6 +83,18 @@ def radix_partition(keys, vals, start_bit, r, mode: str = "auto",
     return _ref.partition(keys, vals, start_bit, r)
 
 
+def radix_partition_multi(keys, vals, start_bit, r, mode: str = "auto",
+                          tile: int = DEFAULT_TILE):
+    """Stable partition pass with N payload columns riding the key
+    (keys', (vals0', ...)) — the partitioned-join shuffle."""
+    vals = tuple(vals)
+    if keys.shape[0] == 0:
+        return keys, vals
+    if _use_kernel(mode):
+        return _radix.partition_multi(keys, vals, start_bit, r, tile=tile)
+    return _ref.partition_multi(keys, vals, start_bit, r)
+
+
 def reduce_sum(x, mode: str = "auto", tile: int = DEFAULT_TILE):
     if _use_kernel(mode):
         return _agg.reduce_sum(x, tile=tile)

@@ -69,11 +69,22 @@ def histogram(keys: jax.Array, start_bit: int, r: int,
     )(nv, kp).reshape(nt, 1 << r)
 
 
-def _shuffle_kernel(n_ref, keys_ref, vals_ref, off_ref, outk_ref, outv_ref,
-                    *, tile: int, start_bit: int, r: int):
+def _shuffle_kernel(n_ref, *refs, tile: int, start_bit: int, r: int,
+                    n_vals: int):
+    """Scatter keys + ``n_vals`` payload columns to their bucket runs.
+
+    refs layout: keys_ref, val_ref*n_vals, off_ref, outk_ref,
+    outv_ref*n_vals — the multi-payload shuffle lets row ids and running
+    group ids ride the partition pass together with the key (what the
+    partitioned-join lowering needs: one pass, all live columns)."""
     i = pl.program_id(0)
+    keys_ref = refs[0]
+    val_refs = refs[1:1 + n_vals]
+    off_ref = refs[1 + n_vals]
+    outk_ref = refs[2 + n_vals]
+    outv_refs = refs[3 + n_vals:]
     keys = keys_ref[...]
-    vals = vals_ref[...]
+    vals = [v[...] for v in val_refs]
     offs = off_ref[...]  # (1, 2^r) this tile's global bucket offsets
     base = i * tile
     valid = (lane_iota(tile) + base) < n_ref[0]
@@ -88,7 +99,8 @@ def _shuffle_kernel(n_ref, keys_ref, vals_ref, off_ref, outk_ref, outv_ref,
         @pl.when(valid[j])
         def _():
             outk_ref[pos[j]] = keys[j]
-            outv_ref[pos[j]] = vals[j]
+            for v, ov in zip(vals, outv_refs):
+                ov[pos[j]] = v[j]
         return 0
 
     jax.lax.fori_loop(0, tile, write, 0)
@@ -96,10 +108,14 @@ def _shuffle_kernel(n_ref, keys_ref, vals_ref, off_ref, outk_ref, outv_ref,
 
 @functools.partial(jax.jit,
                    static_argnames=("start_bit", "r", "tile", "interpret"))
-def partition(keys: jax.Array, vals: jax.Array, start_bit: int, r: int,
-              tile: int = DEFAULT_TILE, interpret: bool | None = None
-              ) -> Tuple[jax.Array, jax.Array]:
-    """One stable radix-partition pass: returns (keys', vals')."""
+def partition_multi(keys: jax.Array, vals: Tuple[jax.Array, ...],
+                    start_bit: int, r: int, tile: int = DEFAULT_TILE,
+                    interpret: bool | None = None
+                    ) -> Tuple[jax.Array, Tuple[jax.Array, ...]]:
+    """One stable radix-partition pass carrying N payload columns:
+    returns (keys', (vals0', vals1', ...)), every column permuted by the
+    same stable bucket order."""
+    vals = tuple(vals)
     interpret = INTERPRET if interpret is None else interpret
     n = keys.shape[0]
     hist = histogram(keys, start_bit, r, tile=tile, interpret=interpret)
@@ -108,24 +124,32 @@ def partition(keys: jax.Array, vals: jax.Array, start_bit: int, r: int,
     flat = hist.T.reshape(-1)                           # bucket-major
     offsets = (jnp.cumsum(flat) - flat).reshape(nb, nt).T  # (nt, nb)
     kp = pad_to_tile(keys, tile, 0)
-    vp = pad_to_tile(vals, tile, 0)
+    vps = [pad_to_tile(v, tile, 0) for v in vals]
     nv = jnp.array([n], jnp.int32)
-    outk, outv = pl.pallas_call(
+    outs = pl.pallas_call(
         functools.partial(_shuffle_kernel, tile=tile, start_bit=start_bit,
-                          r=r),
+                          r=r, n_vals=len(vals)),
         grid=(nt,),
-        in_specs=[
-            pl.BlockSpec(memory_space=pltpu.SMEM),
-            pl.BlockSpec((tile,), lambda i: (i,)),
-            pl.BlockSpec((tile,), lambda i: (i,)),
-            pl.BlockSpec((1, nb), lambda i: (i, 0)),
-        ],
-        out_specs=[pl.BlockSpec(memory_space=pl.ANY),
-                   pl.BlockSpec(memory_space=pl.ANY)],
-        out_shape=[jax.ShapeDtypeStruct((n,), keys.dtype),
-                   jax.ShapeDtypeStruct((n,), vals.dtype)],
+        in_specs=(
+            [pl.BlockSpec(memory_space=pltpu.SMEM),
+             pl.BlockSpec((tile,), lambda i: (i,))]
+            + [pl.BlockSpec((tile,), lambda i: (i,)) for _ in vals]
+            + [pl.BlockSpec((1, nb), lambda i: (i, 0))]),
+        out_specs=[pl.BlockSpec(memory_space=pl.ANY)
+                   for _ in range(1 + len(vals))],
+        out_shape=([jax.ShapeDtypeStruct((n,), keys.dtype)]
+                   + [jax.ShapeDtypeStruct((n,), v.dtype) for v in vals]),
         interpret=interpret,
-    )(nv, kp, vp, offsets.astype(jnp.int32))
+    )(nv, kp, *vps, offsets.astype(jnp.int32))
+    return outs[0], tuple(outs[1:])
+
+
+def partition(keys: jax.Array, vals: jax.Array, start_bit: int, r: int,
+              tile: int = DEFAULT_TILE, interpret: bool | None = None
+              ) -> Tuple[jax.Array, jax.Array]:
+    """One stable radix-partition pass: returns (keys', vals')."""
+    outk, (outv,) = partition_multi(keys, (vals,), start_bit, r, tile=tile,
+                                    interpret=interpret)
     return outk, outv
 
 

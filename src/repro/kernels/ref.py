@@ -73,6 +73,14 @@ def partition(keys, vals, start_bit, r) -> Tuple[jax.Array, jax.Array]:
     return keys[order], vals[order]
 
 
+def partition_multi(keys, vals, start_bit, r):
+    """Stable radix-partition pass carrying N payload columns: one stable
+    argsort of the bucket ids, every column gathered through it."""
+    b = jax.lax.shift_right_logical(keys, start_bit) & ((1 << r) - 1)
+    order = jnp.argsort(b, stable=True)
+    return keys[order], tuple(v[order] for v in vals)
+
+
 def radix_sort(keys, vals) -> Tuple[jax.Array, jax.Array]:
     order = jnp.argsort(keys, stable=True)
     return keys[order], vals[order]

@@ -1,4 +1,4 @@
-"""Plan compiler: lower a logical plan to one of two physical strategies.
+"""Plan compiler: lower a logical plan to one of the physical strategies.
 
 ``fused``  — collapse the whole SPJA subtree into the single-pass
              ``kernels/ssb_fused.spja`` kernel (the paper's Crystal model,
@@ -14,17 +14,34 @@
              memory traffic is exactly the overhead Fig. 16/§5.3
              attributes to non-fused engines, and
              ``benchmarks/run.py fig17`` measures it.
+``part``   — radix-partitioned hash join (paper §4.4, Fig. 8): opat's
+             chain, but every join partitions probe side *and* build side
+             by the key's low radix bits — the multi-payload shuffle
+             carries row ids and the running group id along with the key
+             — then builds one small hash table per partition and probes
+             partition-at-a-time, so each table is cache/VMEM-resident
+             while it is probed.  The extra partition pass buys probes
+             that never miss to device memory; ``benchmarks/run.py fig8``
+             measures the crossover against build-side cardinality.
+``auto``   — pick one of the above per query from the bandwidth cost
+             model (``repro.sql.model``): predicted bytes moved per
+             strategy, argmin at execute time (when the database — and
+             therefore the cardinalities — is known).
 
 ``compile_plan(plan, "fused")`` validates fusability first; plans the
 fused kernel cannot express (non-range fact predicates, row-returning
 roots, OrderBy) *fall back* to ``opat`` with the reason recorded on the
 ``CompiledQuery`` so callers and the query server can report it.
+``part`` falls back the same way on plans with nothing to partition
+(row-returning plans, no joins).
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
-from typing import List, Optional, Tuple
+import functools
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -34,7 +51,7 @@ from repro.sql import hashtable as HT
 from repro.sql import plan as P
 from repro.sql import ssb
 
-STRATEGIES = ("fused", "opat")
+STRATEGIES = ("fused", "opat", "part", "auto")
 
 
 # ---------------------------------------------------------------------------
@@ -83,6 +100,18 @@ def fusability(plan: P.Plan) -> Optional[str]:
     return None
 
 
+def partability(plan: P.Plan) -> Optional[str]:
+    """None if the plan benefits from the radix-partitioned join lowering,
+    else the reason it lowers operator-at-a-time instead."""
+    kind = classify(plan)
+    if kind != "agg":
+        return ("row-returning plan: partition-at-a-time probes reorder "
+                "surviving rows, so row plans lower operator-at-a-time")
+    if not plan.joins:
+        return "no joins to partition; plan lowers operator-at-a-time"
+    return None
+
+
 # ---------------------------------------------------------------------------
 # fused lowering (Crystal model)
 # ---------------------------------------------------------------------------
@@ -115,14 +144,108 @@ def _execute_fused(plan: P.Plan, db: ssb.Database, mode: str, tile: int,
 
 
 # ---------------------------------------------------------------------------
-# operator-at-a-time lowering (materializing CPU-engine model)
+# operator-at-a-time / partitioned lowering (materializing engine model)
 # ---------------------------------------------------------------------------
 
 
-def _execute_opat(plan: P.Plan, db: ssb.Database, mode: str, tile: int,
-                  cache: Optional[HT.HashTableCache]) -> np.ndarray:
+def _probe_whole(node: P.HashJoin, fact, db, rowids, group, mode, tile,
+                 cache) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """opat join: one probe of the monolithic dim table; matched positions
+    come back as a selection vector and the live columns are gathered
+    through it."""
+    htk, htv = (cache.get_or_build(db, node) if cache is not None
+                else HT.build_dim_table(db, node))
+    keys = jnp.asarray(fact[node.fact_col])[rowids]
+    payload, sel, cnt = ops.probe_join(
+        keys, jnp.arange(rowids.shape[0], dtype=jnp.int32),
+        htk, htv, mode=mode, tile=tile)
+    cnt = int(cnt)
+    sel = sel[:cnt]
+    return rowids[sel], group[sel] + payload[:cnt] * jnp.int32(node.mult)
+
+
+@functools.partial(jax.jit, static_argnames=("mode", "tile"))
+def _probe_join_jit(keys, vals, htk, htv, mode, tile):
+    """probe_join under jit: the ref path's eager ``lax.while_loop``
+    dispatches every probe iteration separately, which multiplied by
+    2^bits partitions dominates the partitioned join; jitting collapses
+    each (shape, table-size) combination to one cached executable."""
+    return ops.probe_join(keys, vals, htk, htv, mode=mode, tile=tile)
+
+
+def _probe_partitioned(node: P.HashJoin, fact, db, rowids, group, mode,
+                       tile, cache) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """part join (paper §4.4): bucket both sides by the key's low radix
+    bits, then probe partition-at-a-time so each partition's hash table is
+    cache/VMEM-resident.  The probe side moves in ONE multi-payload
+    shuffle pass — row ids and the running group id ride along with the
+    key — then each partition is a contiguous run of the shuffled arrays.
+
+    The per-partition loop is host orchestration (the paper dispatches
+    partition-at-a-time from the host too): probe batches are padded to a
+    power of two so XLA compiles O(log n) probe shapes instead of one per
+    partition, and pad rows are discarded by position (they sit at the
+    tail of the stable selection vector, so any phantom pad hit is
+    filtered regardless of the pad key's value).  Surviving rows come
+    back partition-major (fine for aggregates; row plans never take this
+    lowering — see ``partability``)."""
+    from repro.sql import model as M
+    if cache is not None:
+        n_build = cache.get_build_count(db, node)
+        bits = M.part_bits(n_build)
+        parts = cache.get_or_build_parts(db, node, bits)
+    else:
+        side = HT.filtered_build_side(db, node)
+        bits = M.part_bits(len(side[0]))
+        parts = HT.build_dim_partitions(db, node, bits, side=side)
+    keys = jnp.asarray(fact[node.fact_col])[rowids]
+    outk, (orow, ogrp) = ops.radix_partition_multi(
+        keys, (rowids, group), 0, bits, mode=mode, tile=tile)
+    outk_h = np.asarray(outk)
+    orow_h = np.asarray(orow)
+    ogrp_h = np.asarray(ogrp)
+    # partition boundaries: host-side bucket counts of the shuffled keys
+    counts = np.bincount(outk_h & ((1 << bits) - 1), minlength=1 << bits)
+    ends = np.cumsum(counts)
+    mult = np.int32(node.mult)
+    out_rows, out_grps = [], []
+    for p in range(1 << bits):
+        s, e = int(ends[p] - counts[p]), int(ends[p])
+        if s == e:
+            continue
+        n_real = e - s
+        n_pad = 1 << (n_real - 1).bit_length()      # smallest pow2 >= n
+        pk = np.zeros(n_pad, np.int32)
+        pk[:n_real] = outk_h[s:e]
+        htk, htv = parts[p]
+        payload, sel, cnt = _probe_join_jit(
+            jnp.asarray(pk), jnp.arange(n_pad, dtype=jnp.int32),
+            htk, htv, mode=mode, tile=tile)
+        cnt = int(cnt)
+        if cnt == 0:
+            continue
+        sel_h = np.asarray(sel)[:cnt]
+        pay_h = np.asarray(payload)[:cnt]
+        real = sel_h < n_real           # drop phantom pad-row hits
+        sel_h = sel_h[real]
+        out_rows.append(orow_h[s:e][sel_h])
+        out_grps.append(ogrp_h[s:e][sel_h] + pay_h[real] * mult)
+    if not out_rows:
+        z = jnp.zeros((0,), jnp.int32)
+        return z, z
+    return (jnp.asarray(np.concatenate(out_rows)),
+            jnp.asarray(np.concatenate(out_grps)))
+
+
+def _execute_chain(plan: P.Plan, db: ssb.Database, mode: str, tile: int,
+                   cache: Optional[HT.HashTableCache],
+                   partitioned: bool = False) -> np.ndarray:
+    """Shared operator-at-a-time chain walker; ``partitioned`` selects the
+    radix-partitioned join lowering for HashJoin nodes (everything else —
+    filters, projection, aggregation, ordering — is identical)."""
     fact = getattr(db, plan.scan.table)
     n = fact.n_rows
+    join_fn = _probe_partitioned if partitioned else _probe_whole
     # live intermediate state, re-materialized by every operator:
     rowids = jnp.arange(n, dtype=jnp.int32)
     group = jnp.zeros((n,), jnp.int32)
@@ -153,18 +276,8 @@ def _execute_opat(plan: P.Plan, db: ssb.Database, mode: str, tile: int,
         elif isinstance(node, P.HashJoin):
             if empty:
                 continue
-            htk, htv = (cache.get_or_build(db, node) if cache is not None
-                        else HT.build_dim_table(db, node))
-            keys = jnp.asarray(fact[node.fact_col])[rowids]
-            # one probe; matched positions come back as a selection
-            # vector and the live columns are gathered through it
-            payload, sel, cnt = ops.probe_join(
-                keys, jnp.arange(rowids.shape[0], dtype=jnp.int32),
-                htk, htv, mode=mode, tile=tile)
-            cnt = int(cnt)
-            sel = sel[:cnt]
-            rowids = rowids[sel]
-            group = group[sel] + payload[:cnt] * jnp.int32(node.mult)
+            rowids, group = join_fn(node, fact, db, rowids, group, mode,
+                                    tile, cache)
         elif isinstance(node, P.Project):
             m = jnp.asarray(fact[node.m1]).astype(jnp.float32)[rowids]
             if node.op == "mul":
@@ -204,20 +317,37 @@ class CompiledQuery:
     """An executable lowering of a logical plan.
 
     ``strategy`` is the strategy that will actually run; when the caller
-    asked for ``fused`` on an unfusable plan, ``strategy == "opat"`` and
-    ``fallback_reason`` says why.
+    asked for ``fused``/``part`` on a plan that lowering cannot express,
+    ``strategy == "opat"`` and ``fallback_reason`` says why.
+
+    ``strategy == "auto"`` defers the choice to the bandwidth cost model
+    at execute time (cardinalities need the database); after ``execute``,
+    ``decided`` holds the strategy that ran and ``predictions`` the
+    model's per-strategy predicted seconds (for "fixed" strategies,
+    ``decided`` is just the strategy).
     """
     plan: P.Plan
     strategy: str
     requested: str
     fallback_reason: Optional[str] = None
+    decided: Optional[str] = None
+    predictions: Optional[Dict[str, float]] = field(default=None,
+                                                    repr=False)
 
     def execute(self, db: ssb.Database, mode: str = "auto",
                 tile: int = DEFAULT_TILE,
                 cache: Optional[HT.HashTableCache] = None) -> np.ndarray:
-        if self.strategy == "fused":
+        strategy = self.strategy
+        if strategy == "auto":
+            from repro.sql import model as M
+            choice = M.choose(self.plan, db)
+            strategy = choice.strategy
+            self.predictions = choice.predictions
+        self.decided = strategy
+        if strategy == "fused":
             return _execute_fused(self.plan, db, mode, tile, cache)
-        return _execute_opat(self.plan, db, mode, tile, cache)
+        return _execute_chain(self.plan, db, mode, tile, cache,
+                              partitioned=(strategy == "part"))
 
     __call__ = execute
 
@@ -228,6 +358,10 @@ def compile_plan(plan: P.Plan, strategy: str = "fused") -> CompiledQuery:
     * ``fused`` — Crystal single-kernel lowering; falls back to ``opat``
       (with ``fallback_reason`` set) when the plan is not fusable.
     * ``opat``  — force operator-at-a-time lowering.
+    * ``part``  — radix-partitioned joins, partition-at-a-time probes;
+      falls back to ``opat`` (reason set) when nothing is partitionable.
+    * ``auto``  — defer to the bandwidth cost model per database at
+      execute time.
     """
     if strategy not in STRATEGIES:
         raise ValueError(f"unknown strategy {strategy!r}; "
@@ -237,5 +371,10 @@ def compile_plan(plan: P.Plan, strategy: str = "fused") -> CompiledQuery:
         if reason is None:
             return CompiledQuery(plan, "fused", "fused")
         return CompiledQuery(plan, "opat", "fused", fallback_reason=reason)
+    if strategy == "part":
+        reason = partability(plan)      # classifies; raises on malformed
+        if reason is None:
+            return CompiledQuery(plan, "part", "part")
+        return CompiledQuery(plan, "opat", "part", fallback_reason=reason)
     classify(plan)                      # raise on malformed chains
-    return CompiledQuery(plan, "opat", "opat")
+    return CompiledQuery(plan, strategy, strategy)

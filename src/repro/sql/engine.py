@@ -226,11 +226,26 @@ def run_query_oracle(db: Database, plan: Plan) -> np.ndarray:
         dim: ssb.Table = getattr(db, j.dim)
         dmask = P.pred_mask(j.filter, dim)
         keys = np.asarray(dim[j.key_col])
+        if keys.size == 0 or not dmask.any():
+            mask &= False               # empty build side: every probe misses
+            continue
         payload = P.expr_values(j.payload, dim).astype(np.int64)
-        lut = np.full(int(keys.max()) + 2, -1, np.int64)
-        lut[keys[dmask]] = payload[dmask]
-        fk = np.asarray(lo[j.fact_col])
-        pv = lut[fk]
+        # offset-based lut over the surviving key range: negative dim
+        # keys index correctly (no python-wraparound corruption) and can
+        # be matched by negative fact FKs, like the real hash build
+        kmin = int(keys[dmask].min())
+        size = int(keys[dmask].max()) - kmin + 1
+        lut = np.full(size, -1, np.int64)
+        # reversed assignment: on duplicate dim keys the FIRST matching row
+        # wins, matching the linear-probe build (np_build places the lowest
+        # row index at the natural slot, where the probe finds it first)
+        sel = np.flatnonzero(dmask)[::-1]
+        lut[keys[sel].astype(np.int64) - kmin] = payload[sel]
+        # a fact FK outside the dim key range is a probe miss, not an
+        # out-of-bounds read of the lut
+        idx = np.asarray(lo[j.fact_col]).astype(np.int64) - kmin
+        in_range = (idx >= 0) & (idx < size)
+        pv = np.where(in_range, lut[np.clip(idx, 0, size - 1)], -1)
         mask &= pv >= 0
         group = group + np.where(pv >= 0, pv, 0) * j.mult
     proj = plan.project

@@ -15,8 +15,9 @@ queries share a join build side (e.g. every SSB flight joins ``date`` on
 """
 from __future__ import annotations
 
+import zlib
 from dataclasses import dataclass, field
-from typing import Dict, Tuple
+from typing import Dict, List, Optional, Tuple
 
 import jax.numpy as jnp
 import numpy as np
@@ -61,10 +62,13 @@ def next_pow2(n: int) -> int:
     return 1 << max(4, int(np.ceil(np.log2(max(n * 2, 2)))))
 
 
-def build_dim_table(db: ssb.Database, join: P.HashJoin
-                    ) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """Build the (filtered) hash table for one join's dim side.
-    Probe miss == row filtered (selective-join pipelining)."""
+def filtered_build_side(db: ssb.Database, join: P.HashJoin
+                        ) -> Tuple[np.ndarray, np.ndarray]:
+    """(keys, payload vals) of one join's dim side after the dim filter —
+    the logical build side shared by the monolithic and the partitioned
+    physical builds.  May be empty (filter drops every row): the builds
+    below must then yield valid all-EMPTY tables, and every probe misses
+    (the query's result is zero, not a crash)."""
     dim: ssb.Table = getattr(db, join.dim)
     mask = P.pred_mask(join.filter, dim)
     keys = np.asarray(dim[join.key_col])[mask].astype(np.int32)
@@ -78,9 +82,42 @@ def build_dim_table(db: ssb.Database, join: P.HashJoin
             f"join on {join.dim}.{join.key_col}: payload {join.payload!r} "
             f"yields negative values (min {int(vals.min())}) on filtered "
             "rows; payloads must be >= 0 after the dim filter")
+    return keys, vals
+
+
+def build_dim_table(db: ssb.Database, join: P.HashJoin
+                    ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Build the (filtered) hash table for one join's dim side.
+    Probe miss == row filtered (selective-join pipelining)."""
+    keys, vals = filtered_build_side(db, join)
     n_slots = next_pow2(max(len(keys), 1))
     htk, htv = np_build(keys, vals, n_slots)
     return jnp.asarray(htk), jnp.asarray(htv)
+
+
+def build_dim_partitions(db: ssb.Database, join: P.HashJoin, bits: int,
+                         side: Optional[Tuple[np.ndarray, np.ndarray]]
+                         = None) -> List[Tuple[jnp.ndarray, jnp.ndarray]]:
+    """Radix-partitioned build: 2^bits per-partition hash tables, bucketed
+    by the key's low ``bits`` bits (the probe side partitions by the same
+    rule).  Each table is sized to its own partition, so with bits chosen
+    from the cost model every table is cache/VMEM-resident during its
+    partition's probe pass (paper §4.4, Fig. 8).  ``side`` lets a caller
+    that already filtered the build side pass it in instead of filtering
+    the dim table a second time."""
+    keys, vals = side if side is not None else filtered_build_side(db, join)
+    bucket = keys & ((1 << bits) - 1)
+    order = np.argsort(bucket, kind="stable")   # one pass, then slice
+    keys, vals = keys[order], vals[order]       # contiguous bucket runs
+    ends = np.cumsum(np.bincount(bucket, minlength=1 << bits))
+    parts: List[Tuple[jnp.ndarray, jnp.ndarray]] = []
+    start = 0
+    for p in range(1 << bits):
+        kp, vp = keys[start:ends[p]], vals[start:ends[p]]
+        start = int(ends[p])
+        htk, htv = np_build(kp, vp, next_pow2(max(len(kp), 1)))
+        parts.append((jnp.asarray(htk), jnp.asarray(htv)))
+    return parts
 
 
 def join_cache_key(join: P.HashJoin) -> Tuple:
@@ -105,29 +142,68 @@ def _cacheable(key: Tuple) -> bool:
     return not _has_callable(key)
 
 
+def db_fingerprint(db) -> Tuple:
+    """Cheap data identity of a Database: per table, (name, n_rows, crc32
+    of every column's data).  Build sides depend on *non*-key columns too
+    (dim filters and payloads read attributes like ``s_region``), so all
+    columns participate — two databases with equal fingerprints produce
+    identical build sides and an equal-but-reloaded database may keep
+    serving a warmed cache.  crc32 streams at GB/s and this only runs
+    when the cache meets an unfamiliar Database object, not per query."""
+    items = []
+    for t in vars(db).values():
+        if not isinstance(t, ssb.Table):
+            continue
+        crc = 0
+        for c in sorted(t.columns):
+            crc = zlib.crc32(np.ascontiguousarray(t[c]).tobytes(), crc)
+        items.append((t.name, t.n_rows, crc))
+    return tuple(sorted(items))
+
+
 @dataclass
 class HashTableCache:
     """Keyed cache of built dimension hash tables with hit/miss stats.
 
-    Scoped to a single ``Database``: the cache key is the *logical* build
-    side, so entries built from one database must never answer for
+    Scoped to a single *logical* database: the cache key is the logical
+    build side, so entries built from one database must never answer for
     another.  The first ``get_or_build`` binds the cache to its database;
-    a different one raises rather than serving wrong tables.
+    later calls with a different object first compare ``db_fingerprint``
+    — an equal-but-reloaded database (same tables, rows and key columns)
+    rebinds and keeps the warmed entries, a genuinely different one
+    raises rather than serving wrong tables.  ``reset()`` drops the
+    entries and the binding for an explicit data reload.
     """
-    tables: Dict[Tuple, Tuple[jnp.ndarray, jnp.ndarray]] = \
-        field(default_factory=dict)
+    tables: Dict[Tuple, object] = field(default_factory=dict)
     hits: int = 0
     misses: int = 0
     _db: object = None
+    _db_fp: Optional[Tuple] = None
+
+    def _bind(self, db) -> None:
+        if self._db is db:
+            return
+        if self._db is None:
+            self._db = db           # fingerprint deferred: the common
+            return                  # never-reloaded case pays nothing
+        if self._db_fp is None:
+            self._db_fp = db_fingerprint(self._db)
+        if db_fingerprint(db) == self._db_fp:
+            self._db = db           # reloaded copy of the same data
+            return
+        raise ValueError(
+            "HashTableCache is scoped to one Database; call reset() (or "
+            "use a fresh cache) before serving a different database")
+
+    def reset(self) -> None:
+        """Drop all entries and the database binding (data reload)."""
+        self.tables.clear()
+        self._db = None
+        self._db_fp = None
 
     def get_or_build(self, db: ssb.Database, join: P.HashJoin
                      ) -> Tuple[jnp.ndarray, jnp.ndarray]:
-        if self._db is None:
-            self._db = db
-        elif self._db is not db:
-            raise ValueError(
-                "HashTableCache is scoped to one Database; use a fresh "
-                "cache per database")
+        self._bind(db)
         key = join_cache_key(join)
         hit = self.tables.get(key)
         if hit is not None:
@@ -135,6 +211,39 @@ class HashTableCache:
             return hit
         self.misses += 1
         built = build_dim_table(db, join)
+        if _cacheable(key):
+            self.tables[key] = built
+        return built
+
+    def get_build_count(self, db: ssb.Database, join: P.HashJoin) -> int:
+        """Filtered build-side row count, memoized under the join's
+        logical key (the partitioned lowering needs it on every execute
+        to size ``part_bits``; re-filtering the dim per request would
+        waste the warm-cache path).  Not a build, so it does not touch
+        the hit/miss stats."""
+        self._bind(db)
+        key = ("n_build", join_cache_key(join))
+        hit = self.tables.get(key)
+        if hit is not None:
+            return hit
+        n = len(filtered_build_side(db, join)[0])
+        if _cacheable(key):
+            self.tables[key] = n
+        return n
+
+    def get_or_build_parts(self, db: ssb.Database, join: P.HashJoin,
+                           bits: int
+                           ) -> List[Tuple[jnp.ndarray, jnp.ndarray]]:
+        """Partitioned analogue of ``get_or_build``: 2^bits per-partition
+        tables, cached under the build side's logical key + bits."""
+        self._bind(db)
+        key = (join_cache_key(join), "part", bits)
+        hit = self.tables.get(key)
+        if hit is not None:
+            self.hits += 1
+            return hit
+        self.misses += 1
+        built = build_dim_partitions(db, join, bits)
         if _cacheable(key):
             self.tables[key] = built
         return built

@@ -16,7 +16,11 @@ dimension builds are amortizable setup rather than per-query cost.
 
 Per-request metrics (latency, strategy actually used, fallback reason)
 ride back on the ``QueryResult`` so a traffic driver can tell fused
-executions from materializing fallbacks.
+executions from materializing fallbacks.  ``strategy="auto"`` routes the
+choice through the bandwidth cost model (``repro.sql.model``); the
+result then also reports the model's choice and its predicted time next
+to the measured latency, so the model's calibration is observable in
+production traffic.
 """
 from __future__ import annotations
 
@@ -52,6 +56,9 @@ class QueryResult:
     cache_hits: int                     # dim-table builds skipped
     cache_misses: int                   # dim-table builds performed
     error: Optional[str] = None         # failed request: message, result=None
+    model_choice: Optional[str] = None  # auto requests: model's pick
+    predicted_s: Optional[float] = None  # model's time for the strategy run
+    predictions: Optional[Dict[str, float]] = None  # full per-strategy model
 
 
 class QueryServer:
@@ -72,7 +79,8 @@ class QueryServer:
         self.queue: List[QueryRequest] = []
         self._next_rid = 0
         self.stats = {"queries": 0, "waves": 0, "occupancy": [],
-                      "fused": 0, "opat": 0, "fallbacks": 0, "errors": 0}
+                      "fused": 0, "opat": 0, "part": 0, "auto": 0,
+                      "fallbacks": 0, "errors": 0}
 
     def submit(self, plan: Plan, strategy: str = "fused") -> int:
         rid = self._next_rid
@@ -111,6 +119,8 @@ class QueryServer:
         def errored(strategy, fallback_reason, exc):
             self.stats["queries"] += 1
             self.stats["errors"] += 1
+            if req.strategy == "auto":
+                self.stats["auto"] += 1
             if fallback_reason is not None:
                 self.stats["fallbacks"] += 1
             return QueryResult(
@@ -130,14 +140,23 @@ class QueryServer:
             result = cq.execute(self.db, mode=self.mode, tile=self.tile,
                                 cache=self.cache)
         except Exception as e:                  # noqa: BLE001 — isolate
-            return errored(cq.strategy, cq.fallback_reason, e)
+            # auto requests that fail mid-execute report the strategy the
+            # model actually dispatched, not the "auto" placeholder
+            return errored(cq.decided or cq.strategy, cq.fallback_reason, e)
         dt = time.perf_counter() - t0
+        ran = cq.decided or cq.strategy         # auto: model's pick ran
         self.stats["queries"] += 1
-        self.stats[cq.strategy] += 1
+        self.stats[ran] += 1
+        if req.strategy == "auto":
+            self.stats["auto"] += 1
         if cq.fallback_reason is not None:
             self.stats["fallbacks"] += 1
+        preds = cq.predictions
         return QueryResult(
             rid=req.rid, name=req.plan.name, result=result,
-            strategy=cq.strategy, fallback_reason=cq.fallback_reason,
+            strategy=ran, fallback_reason=cq.fallback_reason,
             latency_s=dt, cache_hits=self.cache.hits - h0,
-            cache_misses=self.cache.misses - m0)
+            cache_misses=self.cache.misses - m0,
+            model_choice=ran if req.strategy == "auto" else None,
+            predicted_s=None if preds is None else preds.get(ran),
+            predictions=preds)

@@ -88,3 +88,52 @@ def test_ssb_engine_matches_oracle(seed):
         got = engine.run_query(db, spec, mode="ref")
         expect = engine.run_query_oracle(db, spec)
         np.testing.assert_allclose(got, expect, rtol=1e-5, atol=1e-3)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.lists(st.integers(0, 2**31 - 1), min_size=1, max_size=400),
+       st.integers(1, 8))
+def test_radix_partition_properties(keys, r):
+    """One stable partition pass: bucket-sorted, stable within buckets,
+    key-payload binding preserved — duplicate keys and non-power-of-two
+    lengths included by construction."""
+    k = jnp.asarray(np.array(keys, np.int32))
+    v = jnp.arange(len(keys), dtype=jnp.int32)
+    ok, ov = ops.radix_partition(k, v, 0, r, mode="kernel", tile=128)
+    ok, ov = np.asarray(ok), np.asarray(ov)
+    kk = np.array(keys, np.int32)
+    order = np.argsort(kk & ((1 << r) - 1), kind="stable")
+    np.testing.assert_array_equal(ok, kk[order])        # stable partition
+    np.testing.assert_array_equal(ov, order)            # binding preserved
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.lists(st.integers(0, 255), min_size=1, max_size=300),
+       st.integers(1, 6))
+def test_radix_partition_multi_properties(keys, r):
+    """Multi-payload shuffle: every payload column moves through the same
+    stable permutation as the key."""
+    kk = np.array(keys, np.int32)
+    v0 = np.arange(len(keys), dtype=np.int32)
+    v1 = (kk * 3 + 1).astype(np.int32)
+    ok, (o0, o1) = ops.radix_partition_multi(
+        jnp.asarray(kk), (jnp.asarray(v0), jnp.asarray(v1)), 0, r,
+        mode="kernel", tile=128)
+    order = np.argsort(kk & ((1 << r) - 1), kind="stable")
+    np.testing.assert_array_equal(np.asarray(ok), kk[order])
+    np.testing.assert_array_equal(np.asarray(o0), order)
+    np.testing.assert_array_equal(np.asarray(o1), v1[order])
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.lists(st.integers(0, 2**31 - 1), min_size=1, max_size=300))
+def test_radix_sort_duplicates_non_pow2(keys):
+    """radix_sort on adversarial lengths (hypothesis rarely picks powers
+    of two) with duplicate keys: sorted, stable for equal keys."""
+    kk = np.array(keys, np.int32) % 17          # force many duplicates
+    sk, sv = ops.radix_sort(jnp.asarray(kk),
+                            jnp.arange(len(kk), dtype=jnp.int32),
+                            mode="kernel", tile=128)
+    sk, sv = np.asarray(sk), np.asarray(sv)
+    np.testing.assert_array_equal(sk, np.sort(kk))
+    np.testing.assert_array_equal(sv, np.argsort(kk, kind="stable"))

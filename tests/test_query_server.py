@@ -142,3 +142,36 @@ def test_callable_build_sides_are_not_retained():
         cache.get_or_build(DB, j)
     assert len(cache.tables) == 2       # supplier + date only
     assert cache.misses == 3
+
+
+def test_auto_strategy_reports_model_choice():
+    """auto requests run the cost model's pick and report the predicted
+    time next to the measured latency."""
+    server = QueryServer(DB, mode="ref")
+    ra = server.submit(QUERIES["q2.1"], strategy="auto")
+    rf = server.submit(QUERIES["q2.1"], strategy="fused")
+    results = server.run()
+    auto = results[ra]
+    assert auto.model_choice in ("fused", "opat", "part")
+    assert auto.strategy == auto.model_choice
+    assert auto.predicted_s is not None and auto.predicted_s > 0
+    assert set(auto.predictions) >= {"fused", "opat"}
+    np.testing.assert_allclose(auto.result, results[rf].result,
+                               rtol=1e-5, atol=1e-3)
+    assert server.stats["auto"] == 1
+    # fixed-strategy requests carry no model fields
+    assert results[rf].model_choice is None
+
+
+def test_server_survives_equal_data_reload():
+    """An equal-but-reloaded Database keeps the warmed hash-table cache
+    (fingerprint rebind) instead of raising."""
+    server = QueryServer(DB, mode="ref")
+    r1 = server.submit(QUERIES["q2.1"])
+    out1 = server.run()
+    server.db = ssb.generate(sf=0.005, seed=11)     # reload, same data
+    r2 = server.submit(QUERIES["q2.1"])
+    out2 = server.run()
+    assert out2[r2].error is None
+    assert out2[r2].cache_hits == 3                 # builds all skipped
+    np.testing.assert_allclose(out1[r1].result, out2[r2].result)

@@ -1,0 +1,330 @@
+"""Strategy equivalence + partitioned-join machinery + hardening fixes.
+
+* all 13 SSB queries agree across fused/opat/part/auto vs the numpy oracle
+* partition_multi kernel == ref on duplicate keys / non-power-of-two sizes
+* oracle regressions: out-of-range fact FKs, empty dim build sides,
+  duplicate dim keys (first-wins, matching the linear-probe build)
+* HashTableCache: fingerprint rebind across an equal data reload, reset()
+* cost model: sane predictions, auto executes the argmin
+"""
+import numpy as np
+import pytest
+
+from repro.kernels import ops
+from repro.sql import engine, ssb
+from repro.sql import model as M
+from repro.sql import plan as P
+from repro.sql.compile import compile_plan, partability
+from repro.sql.hashtable import (HashTableCache, build_dim_partitions,
+                                 build_dim_table, db_fingerprint, np_build,
+                                 next_pow2)
+from repro.sql.plan import ColExpr, EqPred, QueryBuilder
+from repro.core.blocks import EMPTY
+
+DB = ssb.generate(sf=0.01, seed=3)
+DB_SMALL = ssb.generate(sf=0.002, seed=5)
+QUERIES = engine.ssb_queries()
+
+
+# ---------------------------------------------------------------------------
+# strategy equivalence: the acceptance suite
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", list(QUERIES))
+@pytest.mark.parametrize("strategy", ["part", "auto"])
+def test_ssb_part_auto_vs_oracle(name, strategy):
+    """fused/opat are covered in test_plan.py; part/auto complete the
+    four-way equivalence against the independent numpy oracle."""
+    plan = QUERIES[name]
+    cq = compile_plan(plan, strategy)
+    got = cq.execute(DB, mode="ref")
+    expect = engine.run_query_oracle(DB, plan)
+    np.testing.assert_allclose(got, expect, rtol=1e-5, atol=1e-3)
+    if strategy == "auto":
+        assert cq.decided in ("fused", "opat", "part")
+        assert cq.predictions and cq.decided in cq.predictions
+
+
+def test_part_falls_back_without_joins():
+    cq = compile_plan(QUERIES["q1.1"], "part")
+    assert cq.strategy == "opat" and cq.requested == "part"
+    assert "no joins" in cq.fallback_reason
+    assert partability(QUERIES["q2.1"]) is None
+
+
+@pytest.mark.parametrize("name", ["q2.1", "q4.3"])
+def test_part_kernel_path_vs_oracle(name):
+    """part lowering through the Pallas kernels (interpret on CPU):
+    multi-payload shuffle + per-partition probes."""
+    got = compile_plan(QUERIES[name], "part").execute(
+        DB_SMALL, mode="kernel", tile=512)
+    expect = engine.run_query_oracle(DB_SMALL, QUERIES[name])
+    np.testing.assert_allclose(got, expect, rtol=1e-5, atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# partition_multi: kernel vs ref, duplicates, non-power-of-two lengths
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n", [1, 127, 777, 2048])
+@pytest.mark.parametrize("r", [1, 3, 8])
+def test_partition_multi_kernel_matches_numpy(n, r):
+    rng = np.random.default_rng(n * 31 + r)
+    keys = rng.integers(0, 50, n).astype(np.int32)     # many duplicates
+    v0 = np.arange(n, dtype=np.int32)
+    v1 = rng.integers(0, 9, n).astype(np.int32)
+    order = np.argsort(keys & ((1 << r) - 1), kind="stable")
+    for mode in ("ref", "kernel"):
+        ok, (o0, o1) = ops.radix_partition_multi(
+            keys, (v0, v1), 0, r, mode=mode, tile=128)
+        np.testing.assert_array_equal(np.asarray(ok), keys[order])
+        np.testing.assert_array_equal(np.asarray(o0), v0[order])
+        np.testing.assert_array_equal(np.asarray(o1), v1[order])
+
+
+def test_partition_multi_empty():
+    z = np.zeros(0, np.int32)
+    ok, (ov,) = ops.radix_partition_multi(z, (z,), 0, 4, mode="ref")
+    assert ok.shape == (0,) and ov.shape == (0,)
+
+
+# ---------------------------------------------------------------------------
+# oracle hardening regressions
+# ---------------------------------------------------------------------------
+
+
+class _TinyDB:
+    """Minimal database shim: any attribute-addressable set of Tables."""
+    def __init__(self, **tables):
+        for k, v in tables.items():
+            setattr(self, k, v)
+
+
+def _tiny_join_plan(name="tiny"):
+    return (QueryBuilder(name).scan("lineorder")
+            .hash_join("lo_fk", "dim", "d_key",
+                       payload=ColExpr("d_pay"), mult=1)
+            .measure("lo_rev").group_by(8).build())
+
+
+def test_oracle_out_of_range_fk_is_a_miss():
+    """A fact FK beyond the dim key range (or negative) must read as a
+    probe miss, not out of the lut's bounds."""
+    lo = ssb.Table("lineorder", {
+        "lo_fk": np.array([0, 1, 2, 999, 5000, -3], np.int32),
+        "lo_rev": np.array([1, 2, 4, 8, 16, 32], np.int32)})
+    dim = ssb.Table("dim", {"d_key": np.arange(3, dtype=np.int32),
+                            "d_pay": np.arange(3, dtype=np.int32)})
+    db = _TinyDB(lineorder=lo, dim=dim)
+    plan = _tiny_join_plan("oob")
+    out = engine.run_query_oracle(db, plan)
+    np.testing.assert_allclose(out, [1, 2, 4, 0, 0, 0, 0, 0])
+    for strategy in ("fused", "opat", "part"):
+        got = compile_plan(plan, strategy).execute(db, mode="ref")
+        np.testing.assert_allclose(got, out)
+
+
+def test_oracle_negative_dim_keys():
+    """Negative dim keys must not wrap the oracle's lut (python negative
+    indexing would corrupt another key's entry), and a negative fact FK
+    matches a negative dim key exactly like the real hash build does."""
+    lo = ssb.Table("lineorder", {
+        "lo_fk": np.array([-3, 0, 2, 5], np.int32),
+        "lo_rev": np.array([1, 2, 4, 8], np.int32)})
+    dim = ssb.Table("dim", {"d_key": np.array([-3, 0, 1, 2], np.int32),
+                            "d_pay": np.array([7, 0, 1, 2], np.int32)})
+    db = _TinyDB(lineorder=lo, dim=dim)
+    plan = _tiny_join_plan("negkey")
+    out = engine.run_query_oracle(db, plan)
+    # fk=-3 -> pay 7 (rev 1); fk=0 -> pay 0 (rev 2); fk=2 -> pay 2 (rev 4);
+    # fk=5 -> miss; and lut[size-3] is NOT silently overwritten by key -3
+    np.testing.assert_allclose(out, [2, 0, 4, 0, 0, 0, 0, 1])
+    for strategy in ("fused", "opat", "part"):
+        got = compile_plan(plan, strategy).execute(db, mode="ref")
+        np.testing.assert_allclose(got, out, err_msg=strategy)
+
+
+def test_oracle_empty_dim_table():
+    """An empty dim table must yield a zero result, not crash keys.max()."""
+    lo = ssb.Table("lineorder", {
+        "lo_fk": np.array([0, 1], np.int32),
+        "lo_rev": np.array([3, 5], np.int32)})
+    dim = ssb.Table("dim", {"d_key": np.zeros(0, np.int32),
+                            "d_pay": np.zeros(0, np.int32)})
+    out = engine.run_query_oracle(_TinyDB(lineorder=lo, dim=dim),
+                                  _tiny_join_plan("emptydim"))
+    assert (out == 0).all()
+
+
+@pytest.mark.parametrize("strategy", ["fused", "opat", "part", "auto"])
+def test_empty_build_side_zero_result(strategy):
+    """A dim filter that drops every row: valid all-EMPTY table, zero
+    result, on every strategy and the oracle."""
+    plan = (QueryBuilder("allfiltered").scan("lineorder")
+            .hash_join("lo_suppkey", "supplier", "s_suppkey",
+                       dim_filter=EqPred("s_region", 99))
+            .measure("lo_revenue").group_by(4).build())
+    expect = engine.run_query_oracle(DB_SMALL, plan)
+    assert (expect == 0).all()
+    got = compile_plan(plan, strategy).execute(DB_SMALL, mode="ref")
+    np.testing.assert_allclose(got, expect)
+    htk, htv = build_dim_table(DB_SMALL, plan.joins[0])
+    assert htk.shape[0] >= 16 and (np.asarray(htk) == EMPTY).all()
+
+
+def test_np_build_empty_and_duplicates():
+    htk, htv = np_build(np.zeros(0, np.int32), np.zeros(0, np.int32), 16)
+    assert (htk == EMPTY).all() and (htv == 0).all()
+    # duplicate keys: both rows placed, lookup resolves to the FIRST
+    keys = np.array([7, 7, 3], np.int32)
+    vals = np.array([10, 20, 30], np.int32)
+    htk, htv = np_build(keys, vals, next_pow2(3))
+    import jax.numpy as jnp
+    from repro.core import blocks as B
+    payload, found = B.block_lookup(
+        jnp.array([7, 3, 4], jnp.int32), jnp.asarray(htk), jnp.asarray(htv))
+    np.testing.assert_array_equal(np.asarray(found), [1, 1, 0])
+    assert int(np.asarray(payload)[0]) == 10    # first dup row wins
+    assert int(np.asarray(payload)[1]) == 30
+
+
+def test_duplicate_dim_keys_all_strategies_agree():
+    lo = ssb.Table("lineorder", {
+        "lo_fk": np.array([0, 1, 1, 2], np.int32),
+        "lo_rev": np.array([1, 2, 4, 8], np.int32)})
+    dim = ssb.Table("dim", {"d_key": np.array([0, 1, 1, 2], np.int32),
+                            "d_pay": np.array([3, 1, 5, 0], np.int32)})
+    db = _TinyDB(lineorder=lo, dim=dim)
+    plan = _tiny_join_plan("dup")
+    expect = engine.run_query_oracle(db, plan)
+    assert expect[1] == 6.0             # payload 1 (first dup row), not 5
+    for strategy in ("fused", "opat", "part"):
+        got = compile_plan(plan, strategy).execute(db, mode="ref")
+        np.testing.assert_allclose(got, expect)
+
+
+# ---------------------------------------------------------------------------
+# partitioned build
+# ---------------------------------------------------------------------------
+
+
+def test_build_dim_partitions_cover_all_keys():
+    join = QUERIES["q2.1"].joins[1]     # filtered part join
+    bits = 3
+    parts = build_dim_partitions(DB_SMALL, join, bits)
+    assert len(parts) == 1 << bits
+    dim = DB_SMALL.part
+    mask = P.pred_mask(join.filter, dim)
+    keys = np.asarray(dim[join.key_col])[mask]
+    total = sum(int((np.asarray(htk) != EMPTY).sum()) for htk, _ in parts)
+    assert total == len(keys)
+    for p, (htk, _) in enumerate(parts):
+        got = np.asarray(htk)
+        got = got[got != EMPTY]
+        assert ((got & ((1 << bits) - 1)) == p).all()
+
+
+# ---------------------------------------------------------------------------
+# cache fingerprint / rebind / reset
+# ---------------------------------------------------------------------------
+
+
+def test_cache_survives_equal_reload():
+    cache = HashTableCache()
+    join = QUERIES["q2.1"].joins[0]
+    cache.get_or_build(DB_SMALL, join)
+    reloaded = ssb.generate(sf=0.002, seed=5)   # same data, new object
+    assert reloaded is not DB_SMALL
+    assert db_fingerprint(reloaded) == db_fingerprint(DB_SMALL)
+    cache.get_or_build(reloaded, join)
+    assert (cache.hits, cache.misses) == (1, 1)
+
+
+def test_fingerprint_sees_non_key_columns():
+    """Dim filters/payloads read attribute columns, so a reload with the
+    same keys but different attributes must NOT fingerprint as equal
+    (stale hash tables would silently serve wrong results)."""
+    import copy
+    mutated = copy.deepcopy(DB_SMALL)
+    mutated.supplier.columns["s_region"] = \
+        (np.asarray(mutated.supplier["s_region"]) + 1).astype(np.int32)
+    assert db_fingerprint(mutated) != db_fingerprint(DB_SMALL)
+    cache = HashTableCache()
+    cache.get_or_build(DB_SMALL, QUERIES["q2.1"].joins[0])
+    with pytest.raises(ValueError, match="scoped to one Database"):
+        cache.get_or_build(mutated, QUERIES["q2.1"].joins[0])
+
+
+def test_cache_build_count_memoized():
+    cache = HashTableCache()
+    join = QUERIES["q2.1"].joins[1]
+    n1 = cache.get_build_count(DB_SMALL, join)
+    n2 = cache.get_build_count(DB_SMALL, join)
+    dim = DB_SMALL.part
+    assert n1 == n2 == int(P.pred_mask(join.filter, dim).sum())
+    assert (cache.hits, cache.misses) == (0, 0)     # counts aren't builds
+
+
+def test_cache_still_rejects_different_database():
+    cache = HashTableCache()
+    cache.get_or_build(DB_SMALL, QUERIES["q2.1"].joins[0])
+    other = ssb.generate(sf=0.002, seed=99)
+    with pytest.raises(ValueError, match="scoped to one Database"):
+        cache.get_or_build(other, QUERIES["q2.1"].joins[0])
+    cache.reset()                       # explicit reload path
+    cache.get_or_build(other, QUERIES["q2.1"].joins[0])
+    assert cache.misses == 2 and len(cache.tables) == 1
+
+
+def test_cache_partitioned_entries():
+    cache = HashTableCache()
+    join = QUERIES["q2.1"].joins[1]
+    cache.get_or_build_parts(DB_SMALL, join, 2)
+    cache.get_or_build_parts(DB_SMALL, join, 2)
+    assert (cache.hits, cache.misses) == (1, 1)
+    # different bits = different physical layout = separate entry
+    cache.get_or_build_parts(DB_SMALL, join, 3)
+    assert cache.misses == 2
+
+
+# ---------------------------------------------------------------------------
+# cost model
+# ---------------------------------------------------------------------------
+
+
+def test_model_predictions_shape():
+    preds = M.predict(QUERIES["q2.1"], DB, M.HOST)
+    assert set(preds) == {"fused", "opat", "part"}
+    assert all(v > 0 for v in preds.values())
+    # flight 1: unpartitionable (no joins) — part absent, fused present
+    preds1 = M.predict(QUERIES["q1.1"], DB, M.HOST)
+    assert "part" not in preds1 and "fused" in preds1
+
+
+def test_model_prefers_partitioned_past_the_cache():
+    """The paper's Fig. 8 crossover: once the monolithic table dwarfs the
+    cache, the partition pass pays for itself."""
+    hw = M.Hardware("toy", read_bw=10e9, write_bw=10e9, cache_bw=1e12,
+                    cache_size=1 << 16, line_bytes=64, mem_capacity=1e12)
+    rng = np.random.default_rng(0)
+    n_dim, n_fact = 1 << 20, 1 << 22
+    fact = ssb.Table("lineorder", {
+        "lo_fk": rng.integers(0, n_dim, n_fact).astype(np.int32),
+        "lo_rev": np.ones(n_fact, np.int32)})
+    dim = ssb.Table("dim", {
+        "d_key": np.arange(n_dim, dtype=np.int32),
+        "d_pay": np.zeros(n_dim, np.int32)})
+    db = _TinyDB(lineorder=fact, dim=dim)
+    preds = M.predict(_tiny_join_plan("big"), db, hw)
+    assert preds["part"] < preds["opat"]
+
+
+def test_auto_choice_is_argmin():
+    choice = M.choose(QUERIES["q2.1"], DB, M.HOST)
+    assert choice.strategy == min(choice.predictions,
+                                  key=choice.predictions.get)
+    cq = compile_plan(QUERIES["q2.1"], "auto")
+    cq.execute(DB, mode="ref")
+    assert cq.decided == choice.strategy
