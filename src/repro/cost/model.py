@@ -26,6 +26,12 @@ class Hardware:
     line_bytes: int          # random-access granule from device memory
     mem_capacity: float
     interconnect_bw: Optional[float] = None  # PCIe / ICI
+    # per-dispatch overhead of one kernel launch (host->device submit +
+    # executable lookup).  0 for the paper's pure-bandwidth targets; the
+    # measured value (repro.sql.calibrate) is what prices a
+    # partition-at-a-time loop's O(2^bits) dispatches against the fused
+    # single-launch probe.
+    launch_overhead_s: float = 0.0
 
 
 # Table 2 of the paper

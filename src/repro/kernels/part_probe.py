@@ -1,0 +1,143 @@
+"""Fused partitioned-probe kernel (paper §4.4, Fig. 8) — ONE launch per join.
+
+The ``part`` strategy's probe phase used to be host orchestration: one
+jitted ``probe_join`` per partition, O(2^bits) dispatches plus a host
+round-trip of the shuffled probe arrays to find partition boundaries.
+This kernel collapses that loop into a single Pallas grid whose steps ARE
+the partitions — the block-centric design Crystal uses on GPU, mapped to
+the TPU's sequential grid:
+
+  * the 2^bits per-partition hash tables are packed into dense
+    ``(P, S)`` arrays (S = one pow2 table size shared by every partition,
+    sized off the largest one), so partition p's table is the row ``p``
+    window and the BlockSpec index map DMAs exactly that table into VMEM
+    for grid step p — the "load the partition's table into the local
+    window" half of the paper's cache-resident probe;
+  * the probe side stays the flat partition-major layout the radix
+    shuffle already produces; per-partition ``offs``/``counts`` ride in
+    SMEM and each grid step walks its run in ``tile``-sized chunks with
+    dynamic slices (a fori_loop whose trip count is the partition's own
+    chunk count, so a skewed/hot partition costs exactly its length and
+    an empty partition costs nothing);
+  * matches are compacted tile-locally (BlockScan + BlockShuffle) and
+    streamed out at a sequential-grid offset carry, so the output is the
+    stable partition-major selection the per-partition loop produced —
+    bit-identical semantics, one launch.
+
+Payload semantics are the partitioned join's: the probe carries row ids
+and the running group id, and a match contributes ``payload * mult`` to
+the group id in-kernel — the full join step, not just a lookup.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core import blocks as B
+from repro.kernels.common import DEFAULT_TILE, INTERPRET, lane_iota, \
+    pad_to_tile
+
+
+def _part_probe_kernel(offs_ref, counts_ref, mult_ref, keys_ref, rows_ref,
+                       grps_ref, htk_ref, htv_ref, outr_ref, outg_ref,
+                       cnt_ref, off_ref, *, tile: int):
+    p = pl.program_id(0)
+
+    @pl.when(p == 0)
+    def _init():
+        off_ref[0] = 0
+
+    start = offs_ref[p]
+    count = counts_ref[p]
+    mult = mult_ref[0]
+    # this grid step's hash table: the (1, S) BlockSpec window already
+    # holds partition p's packed row in VMEM
+    htk = htk_ref[0, :]
+    htv = htv_ref[0, :]
+
+    def chunk(c, _):
+        base = start + c * tile
+        keys = keys_ref[pl.ds(base, tile)]
+        rows = rows_ref[pl.ds(base, tile)]
+        grps = grps_ref[pl.ds(base, tile)]
+        payload, found = B.block_lookup(keys, htk, htv)
+        valid = ((lane_iota(tile) + c * tile) < count).astype(jnp.int32)
+        # rows >= 0: negative rowids are dead rows (pow2 padding that
+        # rode through the shuffle) — they occupy real slots in the
+        # partition runs but must never match
+        found = found * valid * (rows >= 0).astype(jnp.int32)
+        offsets, total = B.block_scan(found)
+        comp_r = B.block_shuffle(rows, found, offsets)
+        comp_g = B.block_shuffle(grps + payload * mult, found, offsets)
+        obase = off_ref[0]
+        outr_ref[pl.ds(obase, tile)] = comp_r
+        outg_ref[pl.ds(obase, tile)] = comp_g
+        off_ref[0] = obase + total
+        return 0
+
+    # trip count is this partition's own chunk count (traced — lowers to
+    # a while_loop): empty partitions run zero chunks, a hot partition
+    # runs exactly its length.
+    jax.lax.fori_loop(0, pl.cdiv(count, tile), chunk, 0)
+
+    @pl.when(p == pl.num_programs(0) - 1)
+    def _fin():
+        cnt_ref[0] = off_ref[0]
+
+
+@functools.partial(jax.jit, static_argnames=("tile", "interpret"))
+def part_probe(keys: jax.Array, rowids: jax.Array, groups: jax.Array,
+               offs: jax.Array, counts: jax.Array, htk: jax.Array,
+               htv: jax.Array, mult, tile: int = DEFAULT_TILE,
+               interpret: bool | None = None
+               ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """One-launch partitioned probe.
+
+    keys/rowids/groups: flat partition-major probe side (the
+    ``radix_partition_multi`` output order); offs/counts: each
+    partition's (start, length) in that flat layout; htk/htv: packed
+    ``(P, S)`` per-partition tables (S pow2, shared).  Returns
+    ``(out_rowids, out_groups, count)`` — the stable partition-major
+    compaction of matches, ``out_groups`` already carrying
+    ``+ payload * mult``; only the first ``count`` entries are valid.
+    """
+    interpret = INTERPRET if interpret is None else interpret
+    n = keys.shape[0]
+    n_parts, n_slots = htk.shape
+    # one tile of slack: the last chunk of a partition whose run ends
+    # just past a tile boundary reads (masked) up to tile-1 rows beyond
+    # its end, and the final compacted store writes a full tile at the
+    # carry offset.
+    kp = jnp.pad(pad_to_tile(keys, tile, 0), (0, tile))
+    rp = jnp.pad(pad_to_tile(rowids, tile, 0), (0, tile))
+    gp = jnp.pad(pad_to_tile(groups, tile, 0), (0, tile))
+    meta = [offs.astype(jnp.int32), counts.astype(jnp.int32),
+            jnp.asarray(mult, jnp.int32).reshape(1)]
+    outr, outg, cnt = pl.pallas_call(
+        functools.partial(_part_probe_kernel, tile=tile),
+        grid=(n_parts,),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),      # offs
+            pl.BlockSpec(memory_space=pltpu.SMEM),      # counts
+            pl.BlockSpec(memory_space=pltpu.SMEM),      # mult
+            pl.BlockSpec(memory_space=pl.ANY),          # keys (flat)
+            pl.BlockSpec(memory_space=pl.ANY),          # rowids
+            pl.BlockSpec(memory_space=pl.ANY),          # groups
+            pl.BlockSpec((1, n_slots), lambda p: (p, 0)),   # table window
+            pl.BlockSpec((1, n_slots), lambda p: (p, 0)),
+        ],
+        out_specs=[pl.BlockSpec(memory_space=pl.ANY),
+                   pl.BlockSpec(memory_space=pl.ANY),
+                   pl.BlockSpec(memory_space=pltpu.SMEM)],
+        out_shape=[jax.ShapeDtypeStruct(kp.shape, rowids.dtype),
+                   jax.ShapeDtypeStruct(kp.shape, groups.dtype),
+                   jax.ShapeDtypeStruct((1,), jnp.int32)],
+        scratch_shapes=[pltpu.SMEM((1,), jnp.int32)],
+        interpret=interpret,
+    )(*meta, kp, rp, gp, htk, htv)
+    return outr[:n], outg[:n], cnt[0]

@@ -55,6 +55,61 @@ def probe_join(keys, vals, ht_keys, ht_vals):
     return outp, outv, count
 
 
+def part_probe(keys, rowids, groups, offs, counts, htk, htv, mult):
+    """Fused partitioned-probe oracle: probe every element of the flat
+    partition-major probe side against ITS partition's table in the
+    packed ``(P, S)`` layout, then stably compact the matches.
+
+    The element's partition is its key's low bits — the same rule that
+    packed the tables and shuffled the probe side — so the probe needs
+    no position bookkeeping beyond the run total; ``offs``/``counts``
+    bound the live region (rows beyond it are padding)."""
+    n_parts, n_slots = htk.shape
+    n = keys.shape[0]
+    total = (offs[-1] + counts[-1]).astype(jnp.int32) if n_parts else 0
+    pos = jnp.arange(n, dtype=jnp.int32)
+    pid = keys & jnp.int32(n_parts - 1)
+    base = pid * n_slots
+    flat_k = htk.reshape(-1)
+    flat_v = htv.reshape(-1)
+    slot0 = B.hash_fn(keys, n_slots)
+
+    # lock-step linear probe carrying only (slot, done, found): one
+    # gather per iteration; a finished lane parks its slot on the hit
+    # (or the chain-terminating empty) slot, so payloads are a single
+    # gather after the loop
+    def cond(state):
+        return ~jnp.all(state[1])
+
+    def body(state):
+        slot, done, found = state
+        k_at = flat_k[base + slot]
+        hit = (k_at == keys) & ~done
+        empty = k_at == B.EMPTY
+        found = found | hit
+        done = done | hit | empty
+        slot = jnp.where(done, slot, (slot + 1) & (n_slots - 1))
+        return slot, done, found
+
+    done0 = jnp.zeros(keys.shape, bool)
+    slot, _, found = jax.lax.while_loop(
+        cond, body, (slot0, done0, done0))
+    payload = jnp.where(found, flat_v[base + slot], 0)
+    # pad rows beyond the runs + dead rows (negative rowid sentinel)
+    # inside them both never match
+    found = found & (pos < total) & (rowids >= 0)
+    bitmap = found.astype(jnp.int32)
+    offsets = jnp.cumsum(bitmap) - bitmap
+    count = jnp.sum(bitmap)
+    grp_out = groups + payload * jnp.asarray(mult, groups.dtype)
+    idx = jnp.where(found, offsets, n)
+    outr = jnp.zeros((n + 1,), rowids.dtype).at[idx].set(
+        rowids, mode="drop")[:n]
+    outg = jnp.zeros((n + 1,), groups.dtype).at[idx].set(
+        grp_out, mode="drop")[:n]
+    return outr, outg, count
+
+
 def histogram(keys, start_bit, r, tile) -> jax.Array:
     """Per-tile histograms, matching the kernel's (n_tiles, 2^r) layout."""
     n = keys.shape[0]

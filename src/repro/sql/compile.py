@@ -18,12 +18,22 @@
              chain, but every join partitions probe side *and* build side
              by the key's low radix bits — the multi-payload shuffle
              carries row ids and the running group id along with the key
-             — then builds one small hash table per partition and probes
-             partition-at-a-time, so each table is cache/VMEM-resident
-             while it is probed.  The extra partition pass buys probes
-             that never miss to device memory; ``benchmarks/run.py fig8``
-             measures the crossover against build-side cardinality.
-``auto``   — pick one of the above per query from the bandwidth cost
+             — then probes each partition against its own small
+             cache/VMEM-resident hash table.  The probe phase is ONE
+             fused kernel launch (``kernels/part_probe.py``): the grid
+             iterates over partitions, each step windows its partition's
+             packed table and walks its slice of the shuffled probe
+             arrays.  The extra partition pass buys probes that never
+             miss to device memory; ``benchmarks/run.py fig8`` measures
+             the crossover against build-side cardinality.
+``part_loop`` — the same partitioned join, probe phase orchestrated from
+             the host partition-at-a-time (one jitted ``probe_join`` per
+             partition, O(2^bits) dispatches).  Kept as the A/B baseline
+             the fused kernel is measured against (fig8's
+             ``part_loop`` series); not a candidate for ``auto``'s
+             argmin in spirit, but priced by the model (launch overhead
+             included) so the comparison is honest.
+``auto``   — pick fused/opat/part per query from the bandwidth cost
              model (``repro.sql.model``): predicted bytes moved per
              strategy, argmin at execute time (when the database — and
              therefore the cardinalities — is known).
@@ -32,8 +42,14 @@
 fused kernel cannot express (non-range fact predicates, row-returning
 roots, OrderBy) *fall back* to ``opat`` with the reason recorded on the
 ``CompiledQuery`` so callers and the query server can report it.
-``part`` falls back the same way on plans with nothing to partition
-(row-returning plans, no joins).
+``part`` and ``part_loop`` fall back the same way on plans with nothing
+to partition (row-returning plans, no joins) — both paths carry the
+reason (the fused path included, so ``QueryResult`` reporting never goes
+stale on it).
+
+``LAUNCH_STATS`` counts probe/partition dispatches per process so the
+single-launch claim is *observable*: ``part`` issues exactly one probe
+launch per join, ``part_loop`` one per non-empty partition.
 """
 from __future__ import annotations
 
@@ -51,7 +67,22 @@ from repro.sql import hashtable as HT
 from repro.sql import plan as P
 from repro.sql import ssb
 
-STRATEGIES = ("fused", "opat", "part", "auto")
+STRATEGIES = ("fused", "opat", "part", "part_loop", "auto")
+
+# process-wide dispatch counters (reset via reset_launch_stats): kernel
+# launches on the join probe path, the overhead axis fig8 attributes the
+# fused-vs-loop win to.  "probe" counts probe-kernel dispatches, "partition"
+# counts radix-shuffle passes, "host_syncs" counts device->host round-trips
+# of probe-side arrays (the loop path's other hidden cost).
+LAUNCH_STATS = {"probe": 0, "partition": 0, "host_syncs": 0}
+
+
+def reset_launch_stats() -> Dict[str, int]:
+    """Zero ``LAUNCH_STATS`` and return the previous counts."""
+    prev = dict(LAUNCH_STATS)
+    for k in LAUNCH_STATS:
+        LAUNCH_STATS[k] = 0
+    return prev
 
 
 # ---------------------------------------------------------------------------
@@ -101,8 +132,9 @@ def fusability(plan: P.Plan) -> Optional[str]:
 
 
 def partability(plan: P.Plan) -> Optional[str]:
-    """None if the plan benefits from the radix-partitioned join lowering,
-    else the reason it lowers operator-at-a-time instead."""
+    """None if the plan benefits from the radix-partitioned join lowering
+    (fused ``part`` or host-orchestrated ``part_loop`` alike), else the
+    reason it lowers operator-at-a-time instead."""
     kind = classify(plan)
     if kind != "agg":
         return ("row-returning plan: partition-at-a-time probes reorder "
@@ -156,7 +188,8 @@ def _probe_whole(node: P.HashJoin, fact, db, rowids, group, mode, tile,
     htk, htv = (cache.get_or_build(db, node) if cache is not None
                 else HT.build_dim_table(db, node))
     keys = jnp.asarray(fact[node.fact_col])[rowids]
-    payload, sel, cnt = ops.probe_join(
+    LAUNCH_STATS["probe"] += 1
+    payload, sel, cnt = _probe_join_jit(
         keys, jnp.arange(rowids.shape[0], dtype=jnp.int32),
         htk, htv, mode=mode, tile=tile)
     cnt = int(cnt)
@@ -173,34 +206,70 @@ def _probe_join_jit(keys, vals, htk, htv, mode, tile):
     return ops.probe_join(keys, vals, htk, htv, mode=mode, tile=tile)
 
 
-def _probe_partitioned(node: P.HashJoin, fact, db, rowids, group, mode,
-                       tile, cache) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """part join (paper §4.4): bucket both sides by the key's low radix
-    bits, then probe partition-at-a-time so each partition's hash table is
-    cache/VMEM-resident.  The probe side moves in ONE multi-payload
-    shuffle pass — row ids and the running group id ride along with the
-    key — then each partition is a contiguous run of the shuffled arrays.
+def _part_bits_of(node: P.HashJoin, db, cache) -> Tuple[int, Optional[tuple]]:
+    """Radix bits for one join's partitioned lowering (+ the filtered
+    build side when it had to be computed because no cache was given)."""
+    from repro.sql import model as M
+    if cache is not None:
+        return M.part_bits(cache.get_build_count(db, node)), None
+    side = HT.filtered_build_side(db, node)
+    return M.part_bits(len(side[0])), side
 
-    The per-partition loop is host orchestration (the paper dispatches
-    partition-at-a-time from the host too): probe batches are padded to a
+
+def _probe_part_fused(node: P.HashJoin, fact, db, rowids, group, mode,
+                      tile, cache) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """part join (paper §4.4), fused probe: bucket both sides by the
+    key's low radix bits, then probe every partition in ONE kernel launch
+    — the grid iterates over partitions, each step windows its
+    partition's table from the packed ``(P, S)`` layout and walks its
+    slice of the shuffled probe arrays (``kernels/part_probe.py``).
+
+    The probe side moves in one multi-payload shuffle pass (row ids and
+    the running group id ride along with the key); partition boundaries
+    are a device-side bincount of the shuffled keys' low bits; shuffle,
+    histogram and probe are traced as ONE executable
+    (``ops.part_join``) — no host round-trip anywhere between the
+    fact-column gather and the final count read.  Surviving rows come
+    back partition-major, exactly the order the host loop produced."""
+    bits, side = _part_bits_of(node, db, cache)
+    packed = (cache.get_or_build_parts(db, node, bits, packed=True)
+              if cache is not None else
+              HT.build_dim_partitions(db, node, bits, side=side,
+                                      packed=True))
+    col = jnp.asarray(fact[node.fact_col])
+    LAUNCH_STATS["partition"] += 1      # the shuffle pass inside part_join
+    LAUNCH_STATS["probe"] += 1          # the single fused probe launch
+    outr, outg, cnt = ops.part_join(
+        col, rowids, group, packed.htk, packed.htv, node.mult, bits,
+        mode=mode, tile=tile)
+    LAUNCH_STATS["host_syncs"] += 1
+    cnt = int(cnt)                      # the one device->host sync
+    return outr[:cnt], outg[:cnt]
+
+
+def _probe_part_loop(node: P.HashJoin, fact, db, rowids, group, mode,
+                     tile, cache) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """part join, host-orchestrated probe loop — the pre-fusion baseline
+    (strategy ``part_loop``), kept for A/B measurement of the fused
+    kernel's dispatch-overhead win (fig8).
+
+    Bucketing is identical to ``_probe_part_fused``; the probe phase then
+    runs partition-at-a-time from the host: probe batches are padded to a
     power of two so XLA compiles O(log n) probe shapes instead of one per
     partition, and pad rows are discarded by position (they sit at the
     tail of the stable selection vector, so any phantom pad hit is
     filtered regardless of the pad key's value).  Surviving rows come
     back partition-major (fine for aggregates; row plans never take this
     lowering — see ``partability``)."""
-    from repro.sql import model as M
-    if cache is not None:
-        n_build = cache.get_build_count(db, node)
-        bits = M.part_bits(n_build)
-        parts = cache.get_or_build_parts(db, node, bits)
-    else:
-        side = HT.filtered_build_side(db, node)
-        bits = M.part_bits(len(side[0]))
-        parts = HT.build_dim_partitions(db, node, bits, side=side)
+    bits, side = _part_bits_of(node, db, cache)
+    parts = (cache.get_or_build_parts(db, node, bits)
+             if cache is not None else
+             HT.build_dim_partitions(db, node, bits, side=side))
     keys = jnp.asarray(fact[node.fact_col])[rowids]
+    LAUNCH_STATS["partition"] += 1
     outk, (orow, ogrp) = ops.radix_partition_multi(
         keys, (rowids, group), 0, bits, mode=mode, tile=tile)
+    LAUNCH_STATS["host_syncs"] += 3
     outk_h = np.asarray(outk)
     orow_h = np.asarray(orow)
     ogrp_h = np.asarray(ogrp)
@@ -218,9 +287,11 @@ def _probe_partitioned(node: P.HashJoin, fact, db, rowids, group, mode,
         pk = np.zeros(n_pad, np.int32)
         pk[:n_real] = outk_h[s:e]
         htk, htv = parts[p]
+        LAUNCH_STATS["probe"] += 1
         payload, sel, cnt = _probe_join_jit(
             jnp.asarray(pk), jnp.arange(n_pad, dtype=jnp.int32),
             htk, htv, mode=mode, tile=tile)
+        LAUNCH_STATS["host_syncs"] += 3
         cnt = int(cnt)
         if cnt == 0:
             continue
@@ -237,15 +308,24 @@ def _probe_partitioned(node: P.HashJoin, fact, db, rowids, group, mode,
             jnp.asarray(np.concatenate(out_grps)))
 
 
+_JOIN_LOWERINGS = {
+    "opat": _probe_whole,
+    "part": _probe_part_fused,
+    "part_loop": _probe_part_loop,
+}
+
+
 def _execute_chain(plan: P.Plan, db: ssb.Database, mode: str, tile: int,
                    cache: Optional[HT.HashTableCache],
-                   partitioned: bool = False) -> np.ndarray:
-    """Shared operator-at-a-time chain walker; ``partitioned`` selects the
-    radix-partitioned join lowering for HashJoin nodes (everything else —
-    filters, projection, aggregation, ordering — is identical)."""
+                   join_mode: str = "opat") -> np.ndarray:
+    """Shared operator-at-a-time chain walker; ``join_mode`` selects the
+    HashJoin lowering — monolithic probe (``opat``), fused partitioned
+    probe (``part``), or the host partition loop (``part_loop``);
+    everything else — filters, projection, aggregation, ordering — is
+    identical."""
     fact = getattr(db, plan.scan.table)
     n = fact.n_rows
-    join_fn = _probe_partitioned if partitioned else _probe_whole
+    join_fn = _JOIN_LOWERINGS[join_mode]
     # live intermediate state, re-materialized by every operator:
     rowids = jnp.arange(n, dtype=jnp.int32)
     group = jnp.zeros((n,), jnp.int32)
@@ -347,7 +427,8 @@ class CompiledQuery:
         if strategy == "fused":
             return _execute_fused(self.plan, db, mode, tile, cache)
         return _execute_chain(self.plan, db, mode, tile, cache,
-                              partitioned=(strategy == "part"))
+                              join_mode=(strategy if strategy in
+                                         _JOIN_LOWERINGS else "opat"))
 
     __call__ = execute
 
@@ -358,8 +439,12 @@ def compile_plan(plan: P.Plan, strategy: str = "fused") -> CompiledQuery:
     * ``fused`` — Crystal single-kernel lowering; falls back to ``opat``
       (with ``fallback_reason`` set) when the plan is not fusable.
     * ``opat``  — force operator-at-a-time lowering.
-    * ``part``  — radix-partitioned joins, partition-at-a-time probes;
-      falls back to ``opat`` (reason set) when nothing is partitionable.
+    * ``part``  — radix-partitioned joins, single fused probe launch per
+      join; falls back to ``opat`` (reason set) when nothing is
+      partitionable.
+    * ``part_loop`` — radix-partitioned joins, host partition-at-a-time
+      probe loop (the fused kernel's A/B baseline); same fallback rule
+      and reason reporting as ``part``.
     * ``auto``  — defer to the bandwidth cost model per database at
       execute time.
     """
@@ -371,10 +456,11 @@ def compile_plan(plan: P.Plan, strategy: str = "fused") -> CompiledQuery:
         if reason is None:
             return CompiledQuery(plan, "fused", "fused")
         return CompiledQuery(plan, "opat", "fused", fallback_reason=reason)
-    if strategy == "part":
+    if strategy in ("part", "part_loop"):
         reason = partability(plan)      # classifies; raises on malformed
         if reason is None:
-            return CompiledQuery(plan, "part", "part")
-        return CompiledQuery(plan, "opat", "part", fallback_reason=reason)
+            return CompiledQuery(plan, strategy, strategy)
+        return CompiledQuery(plan, "opat", strategy,
+                             fallback_reason=reason)
     classify(plan)                      # raise on malformed chains
     return CompiledQuery(plan, strategy, strategy)

@@ -17,7 +17,7 @@ from __future__ import annotations
 
 import zlib
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, Iterable, List, Optional, Set, Tuple
 
 import jax.numpy as jnp
 import numpy as np
@@ -95,29 +95,73 @@ def build_dim_table(db: ssb.Database, join: P.HashJoin
     return jnp.asarray(htk), jnp.asarray(htv)
 
 
-def build_dim_partitions(db: ssb.Database, join: P.HashJoin, bits: int,
-                         side: Optional[Tuple[np.ndarray, np.ndarray]]
-                         = None) -> List[Tuple[jnp.ndarray, jnp.ndarray]]:
-    """Radix-partitioned build: 2^bits per-partition hash tables, bucketed
-    by the key's low ``bits`` bits (the probe side partitions by the same
-    rule).  Each table is sized to its own partition, so with bits chosen
-    from the cost model every table is cache/VMEM-resident during its
-    partition's probe pass (paper §4.4, Fig. 8).  ``side`` lets a caller
-    that already filtered the build side pass it in instead of filtering
-    the dim table a second time."""
-    keys, vals = side if side is not None else filtered_build_side(db, join)
+@dataclass(frozen=True)
+class PackedParts:
+    """Dense packed layout of 2^bits per-partition hash tables: one
+    ``(P, S)`` key array + one ``(P, S)`` value array, ``S`` a single
+    power-of-two slot count shared by every partition (sized off the
+    fullest partition, >=50% empty like the monolithic build).  Row ``p``
+    IS partition p's table, so a Pallas grid over partitions can window
+    it with a plain BlockSpec index map — the layout the fused
+    single-launch probe kernel (``kernels/part_probe.py``) consumes."""
+    htk: jnp.ndarray                    # (P, S) int32, EMPTY-filled slots
+    htv: jnp.ndarray                    # (P, S) int32
+
+    @property
+    def n_parts(self) -> int:
+        return self.htk.shape[0]
+
+    @property
+    def n_slots(self) -> int:
+        return self.htk.shape[1]
+
+    @property
+    def nbytes(self) -> int:
+        return int(self.htk.size + self.htv.size) * 4
+
+
+def _bucket_runs(keys: np.ndarray, vals: np.ndarray, bits: int):
+    """Sort the build side into contiguous low-bit bucket runs; yields
+    (keys_run, vals_run) per partition."""
     bucket = keys & ((1 << bits) - 1)
     order = np.argsort(bucket, kind="stable")   # one pass, then slice
     keys, vals = keys[order], vals[order]       # contiguous bucket runs
     ends = np.cumsum(np.bincount(bucket, minlength=1 << bits))
-    parts: List[Tuple[jnp.ndarray, jnp.ndarray]] = []
     start = 0
     for p in range(1 << bits):
-        kp, vp = keys[start:ends[p]], vals[start:ends[p]]
+        yield keys[start:ends[p]], vals[start:ends[p]]
         start = int(ends[p])
-        htk, htv = np_build(kp, vp, next_pow2(max(len(kp), 1)))
-        parts.append((jnp.asarray(htk), jnp.asarray(htv)))
-    return parts
+
+
+def build_dim_partitions(db: ssb.Database, join: P.HashJoin, bits: int,
+                         side: Optional[Tuple[np.ndarray, np.ndarray]]
+                         = None, packed: bool = False):
+    """Radix-partitioned build: 2^bits per-partition hash tables, bucketed
+    by the key's low ``bits`` bits (the probe side partitions by the same
+    rule).  With bits chosen from the cost model every table is
+    cache/VMEM-resident during its partition's probe pass (paper §4.4,
+    Fig. 8).  ``side`` lets a caller that already filtered the build side
+    pass it in instead of filtering the dim table a second time.
+
+    ``packed=False`` returns the loop layout — a list of per-partition
+    (htk, htv) pairs, each sized to its own partition — consumed by the
+    host-orchestrated ``part_loop`` strategy.  ``packed=True`` returns
+    :class:`PackedParts`, the dense uniform-slot layout the fused
+    single-launch kernel windows with its grid."""
+    keys, vals = side if side is not None else filtered_build_side(db, join)
+    if not packed:
+        parts: List[Tuple[jnp.ndarray, jnp.ndarray]] = []
+        for kp, vp in _bucket_runs(keys, vals, bits):
+            htk, htv = np_build(kp, vp, next_pow2(max(len(kp), 1)))
+            parts.append((jnp.asarray(htk), jnp.asarray(htv)))
+        return parts
+    counts = np.bincount(keys & ((1 << bits) - 1), minlength=1 << bits)
+    n_slots = next_pow2(max(int(counts.max()) if len(keys) else 0, 1))
+    htk = np.full((1 << bits, n_slots), EMPTY, np.int32)
+    htv = np.zeros((1 << bits, n_slots), np.int32)
+    for p, (kp, vp) in enumerate(_bucket_runs(keys, vals, bits)):
+        htk[p], htv[p] = np_build(kp, vp, n_slots)
+    return PackedParts(jnp.asarray(htk), jnp.asarray(htv))
 
 
 def join_cache_key(join: P.HashJoin) -> Tuple:
@@ -142,22 +186,30 @@ def _cacheable(key: Tuple) -> bool:
     return not _has_callable(key)
 
 
-def db_fingerprint(db) -> Tuple:
-    """Cheap data identity of a Database: per table, (name, n_rows, crc32
-    of every column's data).  Build sides depend on *non*-key columns too
-    (dim filters and payloads read attributes like ``s_region``), so all
-    columns participate — two databases with equal fingerprints produce
-    identical build sides and an equal-but-reloaded database may keep
-    serving a warmed cache.  crc32 streams at GB/s and this only runs
-    when the cache meets an unfamiliar Database object, not per query."""
+def db_fingerprint(db, tables: Optional[Iterable[str]] = None) -> Tuple:
+    """Cheap data identity of a Database: per table, (attr, name, n_rows,
+    crc32 of every column's data).  Build sides depend on *non*-key
+    columns too (dim filters and payloads read attributes like
+    ``s_region``), so all columns participate — two databases with equal
+    fingerprints produce identical build sides and an equal-but-reloaded
+    database may keep serving a warmed cache.
+
+    ``tables`` restricts the fingerprint to the named database
+    *attributes*: the cache only ever builds from dimension tables, so
+    scoping the comparison to the dims its entries actually reference
+    skips streaming the (orders-of-magnitude larger) fact table on every
+    reload.  ``None`` fingerprints everything."""
+    names = None if tables is None else set(tables)
     items = []
-    for t in vars(db).values():
+    for attr, t in vars(db).items():
         if not isinstance(t, ssb.Table):
+            continue
+        if names is not None and attr not in names:
             continue
         crc = 0
         for c in sorted(t.columns):
             crc = zlib.crc32(np.ascontiguousarray(t[c]).tobytes(), crc)
-        items.append((t.name, t.n_rows, crc))
+        items.append((attr, t.name, t.n_rows, crc))
     return tuple(sorted(items))
 
 
@@ -171,14 +223,18 @@ class HashTableCache:
     later calls with a different object first compare ``db_fingerprint``
     — an equal-but-reloaded database (same tables, rows and key columns)
     rebinds and keeps the warmed entries, a genuinely different one
-    raises rather than serving wrong tables.  ``reset()`` drops the
-    entries and the binding for an explicit data reload.
+    raises rather than serving wrong tables.  The comparison is scoped to
+    the dim tables the cached entries actually reference (``_dims``):
+    only those tables can serve stale data, and fingerprinting just them
+    avoids streaming the fact table's crc on every reload.  ``reset()``
+    drops the entries and the binding for an explicit data reload.
     """
     tables: Dict[Tuple, object] = field(default_factory=dict)
     hits: int = 0
     misses: int = 0
     _db: object = None
-    _db_fp: Optional[Tuple] = None
+    _dims: Set[str] = field(default_factory=set)
+    _db_fp: Optional[Tuple] = None      # (dims scope, fingerprint) memo
 
     def _bind(self, db) -> None:
         if self._db is db:
@@ -186,9 +242,10 @@ class HashTableCache:
         if self._db is None:
             self._db = db           # fingerprint deferred: the common
             return                  # never-reloaded case pays nothing
-        if self._db_fp is None:
-            self._db_fp = db_fingerprint(self._db)
-        if db_fingerprint(db) == self._db_fp:
+        dims = frozenset(self._dims)
+        if self._db_fp is None or self._db_fp[0] != dims:
+            self._db_fp = (dims, db_fingerprint(self._db, dims))
+        if db_fingerprint(db, dims) == self._db_fp[1]:
             self._db = db           # reloaded copy of the same data
             return
         raise ValueError(
@@ -198,6 +255,7 @@ class HashTableCache:
     def reset(self) -> None:
         """Drop all entries and the database binding (data reload)."""
         self.tables.clear()
+        self._dims.clear()
         self._db = None
         self._db_fp = None
 
@@ -213,6 +271,7 @@ class HashTableCache:
         built = build_dim_table(db, join)
         if _cacheable(key):
             self.tables[key] = built
+            self._dims.add(join.dim)
         return built
 
     def get_build_count(self, db: ssb.Database, join: P.HashJoin) -> int:
@@ -229,23 +288,27 @@ class HashTableCache:
         n = len(filtered_build_side(db, join)[0])
         if _cacheable(key):
             self.tables[key] = n
+            self._dims.add(join.dim)
         return n
 
     def get_or_build_parts(self, db: ssb.Database, join: P.HashJoin,
-                           bits: int
-                           ) -> List[Tuple[jnp.ndarray, jnp.ndarray]]:
+                           bits: int, packed: bool = False):
         """Partitioned analogue of ``get_or_build``: 2^bits per-partition
-        tables, cached under the build side's logical key + bits."""
+        tables, cached under the build side's logical key + bits +
+        physical layout (the loop's per-partition list and the fused
+        kernel's :class:`PackedParts` are distinct entries)."""
         self._bind(db)
-        key = (join_cache_key(join), "part", bits)
+        key = (join_cache_key(join), "part", bits,
+               "packed" if packed else "list")
         hit = self.tables.get(key)
         if hit is not None:
             self.hits += 1
             return hit
         self.misses += 1
-        built = build_dim_partitions(db, join, bits)
+        built = build_dim_partitions(db, join, bits, packed=packed)
         if _cacheable(key):
             self.tables[key] = built
+            self._dims.add(join.dim)
         return built
 
     @property

@@ -79,8 +79,8 @@ class QueryServer:
         self.queue: List[QueryRequest] = []
         self._next_rid = 0
         self.stats = {"queries": 0, "waves": 0, "occupancy": [],
-                      "fused": 0, "opat": 0, "part": 0, "auto": 0,
-                      "fallbacks": 0, "errors": 0}
+                      "fused": 0, "opat": 0, "part": 0, "part_loop": 0,
+                      "auto": 0, "fallbacks": 0, "errors": 0}
 
     def submit(self, plan: Plan, strategy: str = "fused") -> int:
         rid = self._next_rid

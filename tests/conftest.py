@@ -1,12 +1,21 @@
 """Shared fixtures.  NOTE: no XLA_FLAGS device-count override here — smoke
 tests and benches must see the real single CPU device; only
 launch/dryrun.py (its own process) forces 512 host devices."""
+import os
+import tempfile
 import warnings
 
 import numpy as np
 import pytest
 
 warnings.filterwarnings("ignore", category=DeprecationWarning)
+
+# hermetic cost-model predictions: a developer's (or CI's) on-disk
+# bandwidth calibration must not leak into test expectations — point the
+# calibration cache at a fresh empty dir unconditionally (tests that
+# need their own use monkeypatch).
+os.environ["REPRO_CALIB_CACHE"] = tempfile.mkdtemp(
+    prefix="repro-calib-test-")
 
 
 @pytest.fixture(scope="session")

@@ -1,0 +1,310 @@
+"""Fused partitioned-probe kernel + packed layout + calibration.
+
+* part_probe kernel == jnp oracle == numpy brute force on skewed key
+  distributions (one hot partition), empty partitions, duplicate build
+  keys, non-pow2 probe lengths, empty build sides
+* part_join (gather + shuffle + probe as one executable) matches the
+  same brute force from unshuffled inputs
+* PackedParts layout invariants (uniform pow2 slots, per-row buckets)
+* launch accounting: the fused path issues ONE probe launch per join
+* calibrate: microbenchmark sanity, disk cache roundtrip, Hardware
+  integration, model pickup
+"""
+import json
+import os
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.blocks import EMPTY
+from repro.kernels import ops
+from repro.kernels import ref as kref
+from repro.sql import calibrate
+from repro.sql import engine, ssb
+from repro.sql import model as M
+from repro.sql import plan as P
+from repro.sql.compile import (LAUNCH_STATS, compile_plan,
+                               reset_launch_stats)
+from repro.sql.hashtable import (PackedParts, build_dim_partitions,
+                                 next_pow2, np_build)
+from repro.sql.plan import ColExpr, QueryBuilder
+
+
+# ---------------------------------------------------------------------------
+# helpers: packed tables + numpy brute force
+# ---------------------------------------------------------------------------
+
+
+def pack_tables(build_keys, build_vals, bits):
+    """Uniform-slot packed layout, built per bucket with np_build."""
+    n_parts = 1 << bits
+    bucket = build_keys & (n_parts - 1)
+    counts = np.bincount(bucket, minlength=n_parts)
+    n_slots = next_pow2(max(int(counts.max()) if len(build_keys) else 0, 1))
+    htk = np.full((n_parts, n_slots), EMPTY, np.int32)
+    htv = np.zeros((n_parts, n_slots), np.int32)
+    for p in range(n_parts):
+        m = bucket == p
+        htk[p], htv[p] = np_build(build_keys[m], build_vals[m], n_slots)
+    return jnp.asarray(htk), jnp.asarray(htv)
+
+
+def first_wins_lut(build_keys, build_vals):
+    lut = {}
+    for k, v in zip(build_keys.tolist(), build_vals.tolist()):
+        lut.setdefault(k, v)
+    return lut
+
+
+def brute_force(keys, rowids, groups, lut, mult):
+    """Expected (rows, grps) in input order, dead rows (rowid<0) dropped."""
+    rows, grps = [], []
+    for k, r, g in zip(keys.tolist(), rowids.tolist(), groups.tolist()):
+        if r < 0 or k not in lut:
+            continue
+        rows.append(r)
+        grps.append(g + lut[k] * mult)
+    return np.array(rows, np.int32), np.array(grps, np.int32)
+
+
+def shuffled(keys, rowids, groups, bits):
+    """Partition-major stable order + (offs, counts), like part_join."""
+    bucket = keys & ((1 << bits) - 1)
+    order = np.argsort(bucket, kind="stable")
+    counts = np.bincount(bucket, minlength=1 << bits).astype(np.int32)
+    offs = (np.cumsum(counts) - counts).astype(np.int32)
+    return (keys[order], rowids[order], groups[order],
+            jnp.asarray(offs), jnp.asarray(counts))
+
+
+def run_part_probe(mode, keys, rowids, groups, bits, bk, bv, mult=3):
+    htk, htv = pack_tables(bk, bv, bits)
+    sk, sr, sg, offs, counts = shuffled(keys, rowids, groups, bits)
+    outr, outg, cnt = ops.part_probe(
+        jnp.asarray(sk), jnp.asarray(sr), jnp.asarray(sg), offs, counts,
+        htk, htv, mult, mode=mode, tile=128)
+    cnt = int(cnt)
+    er, eg = brute_force(sk, sr, sg, first_wins_lut(bk, bv), mult)
+    np.testing.assert_array_equal(np.asarray(outr)[:cnt], er)
+    np.testing.assert_array_equal(np.asarray(outg)[:cnt], eg)
+
+
+# ---------------------------------------------------------------------------
+# kernel vs oracle vs brute force
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("mode", ["ref", "kernel"])
+@pytest.mark.parametrize("n", [1, 127, 777, 1024])
+@pytest.mark.parametrize("bits", [1, 3])
+def test_part_probe_uniform(mode, n, bits):
+    rng = np.random.default_rng(n * 7 + bits)
+    bk = np.unique(rng.integers(0, 200, 64)).astype(np.int32)
+    bv = (np.arange(len(bk)) % 7).astype(np.int32)
+    keys = rng.integers(0, 250, n).astype(np.int32)
+    rowids = np.arange(n, dtype=np.int32)
+    groups = rng.integers(0, 5, n).astype(np.int32)
+    run_part_probe(mode, keys, rowids, groups, bits, bk, bv)
+
+
+@pytest.mark.parametrize("mode", ["ref", "kernel"])
+def test_part_probe_skewed_hot_partition(mode):
+    """90% of probe keys land in one partition: the grid step for the
+    hot partition walks many chunks, every other step almost none."""
+    rng = np.random.default_rng(0)
+    bits, n = 3, 700
+    bk = (np.arange(80, dtype=np.int32) * 8)        # all bucket 0
+    bv = np.arange(80, dtype=np.int32)
+    hot = (rng.integers(0, 80, (n * 9) // 10) * 8).astype(np.int32)
+    cold = rng.integers(0, 640, n - len(hot)).astype(np.int32)
+    keys = np.concatenate([hot, cold]).astype(np.int32)
+    rng.shuffle(keys)
+    run_part_probe(mode, keys, np.arange(n, dtype=np.int32),
+                   np.zeros(n, np.int32), bits, bk, bv)
+
+
+@pytest.mark.parametrize("mode", ["ref", "kernel"])
+def test_part_probe_empty_partitions_and_build(mode):
+    """Buckets with no probe rows and buckets with no build rows both
+    behave (miss, not crash); a fully empty build side yields zero."""
+    bits, n = 2, 333
+    rng = np.random.default_rng(1)
+    bk = np.array([0, 4, 8], np.int32)              # only bucket 0
+    bv = np.array([5, 6, 7], np.int32)
+    keys = rng.integers(0, 16, n).astype(np.int32)  # all 4 buckets probed
+    run_part_probe(mode, keys, np.arange(n, dtype=np.int32),
+                   np.zeros(n, np.int32), bits, bk, bv)
+    # empty build side: every probe misses
+    run_part_probe(mode, keys, np.arange(n, dtype=np.int32),
+                   np.zeros(n, np.int32), bits,
+                   np.zeros(0, np.int32), np.zeros(0, np.int32))
+
+
+@pytest.mark.parametrize("mode", ["ref", "kernel"])
+def test_part_probe_duplicate_build_keys(mode):
+    """Duplicate build keys: lookups resolve to the FIRST build row,
+    matching the monolithic linear-probe build."""
+    bits = 1
+    bk = np.array([3, 3, 5, 5, 5], np.int32)
+    bv = np.array([10, 20, 30, 40, 50], np.int32)
+    keys = np.array([3, 5, 3, 7, 5], np.int32)
+    n = len(keys)
+    run_part_probe(mode, keys, np.arange(n, dtype=np.int32),
+                   np.zeros(n, np.int32), bits, bk, bv)
+    lut = first_wins_lut(bk, bv)
+    assert lut[3] == 10 and lut[5] == 30
+
+
+@pytest.mark.parametrize("mode", ["ref", "kernel"])
+def test_part_join_end_to_end(mode):
+    """part_join from UNSHUFFLED inputs (gather + shuffle + probe in one
+    executable) produces the brute-force match set."""
+    rng = np.random.default_rng(2)
+    bits, n_col, n_live = 2, 500, 301
+    col = rng.integers(0, 100, n_col).astype(np.int32)
+    rowids = np.sort(rng.choice(n_col, n_live, replace=False)).astype(
+        np.int32)
+    groups = rng.integers(0, 4, n_live).astype(np.int32)
+    bk = np.unique(rng.integers(0, 100, 40)).astype(np.int32)
+    bv = (np.arange(len(bk)) % 9).astype(np.int32)
+    htk, htv = pack_tables(bk, bv, bits)
+    outr, outg, cnt = ops.part_join(
+        jnp.asarray(col), jnp.asarray(rowids), jnp.asarray(groups),
+        htk, htv, 2, bits, mode=mode, tile=128)
+    cnt = int(cnt)
+    keys = col[rowids]
+    sk, sr, sg, _, _ = shuffled(keys, rowids, groups, bits)
+    er, eg = brute_force(sk, sr, sg, first_wins_lut(bk, bv), 2)
+    np.testing.assert_array_equal(np.asarray(outr)[:cnt], er)
+    np.testing.assert_array_equal(np.asarray(outg)[:cnt], eg)
+
+
+def test_part_probe_empty_probe_side():
+    z = jnp.zeros((0,), jnp.int32)
+    htk, htv = pack_tables(np.array([1], np.int32),
+                           np.array([2], np.int32), 1)
+    outr, outg, cnt = ops.part_probe(z, z, z, jnp.zeros((2,), jnp.int32),
+                                     jnp.zeros((2,), jnp.int32),
+                                     htk, htv, 1, mode="ref")
+    assert int(cnt) == 0 and outr.shape == (0,)
+    outr, outg, cnt = ops.part_join(jnp.asarray([1, 2], jnp.int32), z, z,
+                                    htk, htv, 1, 1, mode="ref")
+    assert int(cnt) == 0 and outr.shape == (0,)
+
+
+# ---------------------------------------------------------------------------
+# packed layout invariants
+# ---------------------------------------------------------------------------
+
+
+DB_SMALL = ssb.generate(sf=0.002, seed=5)
+QUERIES = engine.ssb_queries()
+
+
+def test_packed_parts_layout():
+    join = QUERIES["q2.1"].joins[1]
+    bits = 3
+    packed = build_dim_partitions(DB_SMALL, join, bits, packed=True)
+    assert isinstance(packed, PackedParts)
+    assert packed.n_parts == 1 << bits
+    assert packed.n_slots & (packed.n_slots - 1) == 0    # pow2
+    htk = np.asarray(packed.htk)
+    dim = DB_SMALL.part
+    mask = P.pred_mask(join.filter, dim)
+    keys = np.asarray(dim[join.key_col])[mask]
+    assert int((htk != EMPTY).sum()) == len(keys)
+    for p in range(1 << bits):
+        row = htk[p][htk[p] != EMPTY]
+        assert ((row & ((1 << bits) - 1)) == p).all()
+    # every partition leaves probe headroom (same >=50%-empty rule as
+    # the monolithic build)
+    per_part = (htk != EMPTY).sum(axis=1)
+    assert (per_part * 2 <= packed.n_slots).all()
+
+
+def test_packed_parts_match_list_layout():
+    """Row p of the packed layout holds exactly the keys of list-layout
+    partition p (slot positions may differ: uniform vs per-part size)."""
+    join = QUERIES["q2.1"].joins[0]
+    bits = 2
+    packed = build_dim_partitions(DB_SMALL, join, bits, packed=True)
+    parts = build_dim_partitions(DB_SMALL, join, bits)
+    for p, (htk, _) in enumerate(parts):
+        a = np.sort(np.asarray(htk)[np.asarray(htk) != EMPTY])
+        b = np.asarray(packed.htk[p])
+        b = np.sort(b[b != EMPTY])
+        np.testing.assert_array_equal(a, b)
+
+
+# ---------------------------------------------------------------------------
+# launch accounting
+# ---------------------------------------------------------------------------
+
+
+def test_fused_part_single_probe_launch_per_join():
+    plan = QUERIES["q2.1"]              # 3 joins, none empties the chain
+    reset_launch_stats()
+    compile_plan(plan, "part").execute(DB_SMALL, mode="ref")
+    assert LAUNCH_STATS["probe"] == len(plan.joins)
+    assert LAUNCH_STATS["partition"] == len(plan.joins)
+    reset_launch_stats()
+    compile_plan(plan, "part_loop").execute(DB_SMALL, mode="ref")
+    # the loop dispatches one probe per non-empty partition: strictly
+    # more than one launch per join whenever anything was partitioned
+    assert LAUNCH_STATS["probe"] > len(plan.joins)
+    reset_launch_stats()
+
+
+# ---------------------------------------------------------------------------
+# calibration
+# ---------------------------------------------------------------------------
+
+
+def _tiny_calibration():
+    return calibrate.measure(stream_elems=1 << 16, table_elems=1 << 10,
+                             probes=1 << 14)
+
+
+def test_calibrate_measures_positive(tmp_path, monkeypatch):
+    calib = _tiny_calibration()
+    assert calib.read_bw > 0 and calib.write_bw > 0
+    assert calib.cache_bw > 0 and calib.launch_overhead_s > 0
+    assert calib.backend == "cpu"
+
+
+def test_calibrate_cache_roundtrip(tmp_path, monkeypatch):
+    monkeypatch.setenv("REPRO_CALIB_CACHE", str(tmp_path))
+    assert calibrate.load_cached() is None
+    calib = _tiny_calibration()
+    path = calibrate.save(calib)
+    assert os.path.exists(path) and str(tmp_path) in path
+    loaded = calibrate.load_cached()
+    assert loaded == calib
+    with open(path) as f:
+        assert set(json.load(f)) >= {"backend", "read_bw", "write_bw",
+                                     "cache_bw", "launch_overhead_s"}
+
+
+def test_calibrated_hardware_feeds_model(tmp_path, monkeypatch):
+    monkeypatch.setenv("REPRO_CALIB_CACHE", str(tmp_path))
+    # no cache -> model falls back to constants
+    assert M.default_hardware() is M.HOST
+    calib = _tiny_calibration()
+    calibrate.save(calib)
+    hw = M.default_hardware()
+    assert hw.name == "host-cpu-calibrated"
+    assert hw.read_bw == calib.read_bw
+    assert hw.launch_overhead_s == calib.launch_overhead_s
+    # geometry stays from the base description
+    assert hw.cache_size == M.HOST.cache_size
+    assert hw.line_bytes == M.HOST.line_bytes
+
+
+def test_part_loop_priced_above_part():
+    """The model must charge the loop its 2^bits dispatches: part_loop
+    predicted strictly slower than part, and auto never picks it."""
+    preds = M.predict(QUERIES["q2.1"], DB_SMALL, M.HOST)
+    assert preds["part_loop"] > preds["part"]
+    choice = M.choose(QUERIES["q2.1"], DB_SMALL, M.HOST)
+    assert choice.strategy != "part_loop"

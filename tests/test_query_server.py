@@ -175,3 +175,31 @@ def test_server_survives_equal_data_reload():
     assert out2[r2].error is None
     assert out2[r2].cache_hits == 3                 # builds all skipped
     np.testing.assert_allclose(out1[r1].result, out2[r2].result)
+
+
+def test_part_fallback_reason_reported_both_paths():
+    """When a partitioned request cannot partition (row plan / no
+    joins), the QueryResult carries the fallback reason for the fused
+    ``part`` path AND the ``part_loop`` baseline alike."""
+    server = QueryServer(DB, mode="ref")
+    rp = server.submit(QUERIES["q1.1"], strategy="part")
+    rl = server.submit(QUERIES["q1.1"], strategy="part_loop")
+    results = server.run()
+    for rid in (rp, rl):
+        assert results[rid].strategy == "opat"
+        assert "no joins" in results[rid].fallback_reason
+        assert results[rid].error is None
+    assert server.stats["fallbacks"] == 2
+    assert server.stats["opat"] == 2
+
+
+def test_part_loop_requests_run_and_match():
+    server = QueryServer(DB, mode="ref")
+    rp = server.submit(QUERIES["q2.1"], strategy="part")
+    rl = server.submit(QUERIES["q2.1"], strategy="part_loop")
+    results = server.run()
+    assert results[rp].strategy == "part"
+    assert results[rl].strategy == "part_loop"
+    np.testing.assert_allclose(results[rp].result, results[rl].result,
+                               rtol=1e-5, atol=1e-3)
+    assert server.stats["part"] == 1 and server.stats["part_loop"] == 1

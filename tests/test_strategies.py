@@ -32,10 +32,11 @@ QUERIES = engine.ssb_queries()
 
 
 @pytest.mark.parametrize("name", list(QUERIES))
-@pytest.mark.parametrize("strategy", ["part", "auto"])
+@pytest.mark.parametrize("strategy", ["part", "part_loop", "auto"])
 def test_ssb_part_auto_vs_oracle(name, strategy):
-    """fused/opat are covered in test_plan.py; part/auto complete the
-    four-way equivalence against the independent numpy oracle."""
+    """fused/opat are covered in test_plan.py; part (fused single-launch
+    probe), part_loop (host A/B baseline) and auto complete the five-way
+    equivalence against the independent numpy oracle."""
     plan = QUERIES[name]
     cq = compile_plan(plan, strategy)
     got = cq.execute(DB, mode="ref")
@@ -46,9 +47,13 @@ def test_ssb_part_auto_vs_oracle(name, strategy):
         assert cq.predictions and cq.decided in cq.predictions
 
 
-def test_part_falls_back_without_joins():
-    cq = compile_plan(QUERIES["q1.1"], "part")
-    assert cq.strategy == "opat" and cq.requested == "part"
+@pytest.mark.parametrize("strategy", ["part", "part_loop"])
+def test_part_falls_back_without_joins(strategy):
+    """Both partitioned paths — the fused kernel AND the loop baseline —
+    fall back with the reason recorded (the QueryResult reporting
+    contract)."""
+    cq = compile_plan(QUERIES["q1.1"], strategy)
+    assert cq.strategy == "opat" and cq.requested == strategy
     assert "no joins" in cq.fallback_reason
     assert partability(QUERIES["q2.1"]) is None
 
@@ -257,6 +262,31 @@ def test_fingerprint_sees_non_key_columns():
         cache.get_or_build(mutated, QUERIES["q2.1"].joins[0])
 
 
+def test_fingerprint_scoped_to_referenced_dims():
+    """The rebind comparison only fingerprints the dim tables the cached
+    entries were built from: a reload whose FACT table changed (the
+    usual case — new data appended) keeps the warmed dim tables instead
+    of streaming the fact crc32 and refusing."""
+    import copy
+    cache = HashTableCache()
+    join = QUERIES["q2.1"].joins[0]         # supplier build side
+    cache.get_or_build(DB_SMALL, join)
+    grown = copy.deepcopy(DB_SMALL)
+    grown.lineorder.columns["lo_revenue"] = \
+        (np.asarray(grown.lineorder["lo_revenue"]) + 1).astype(np.int32)
+    assert db_fingerprint(grown) != db_fingerprint(DB_SMALL)
+    assert (db_fingerprint(grown, {"supplier"})
+            == db_fingerprint(DB_SMALL, {"supplier"}))
+    cache.get_or_build(grown, join)         # rebinds, keeps entries
+    assert (cache.hits, cache.misses) == (1, 1)
+    # ...but a reload that mutated the REFERENCED dim still refuses
+    mutated = copy.deepcopy(DB_SMALL)
+    mutated.supplier.columns["s_region"] = \
+        (np.asarray(mutated.supplier["s_region"]) + 1).astype(np.int32)
+    with pytest.raises(ValueError, match="scoped to one Database"):
+        cache.get_or_build(mutated, join)
+
+
 def test_cache_build_count_memoized():
     cache = HashTableCache()
     join = QUERIES["q2.1"].joins[1]
@@ -296,11 +326,12 @@ def test_cache_partitioned_entries():
 
 def test_model_predictions_shape():
     preds = M.predict(QUERIES["q2.1"], DB, M.HOST)
-    assert set(preds) == {"fused", "opat", "part"}
+    assert set(preds) == {"fused", "opat", "part", "part_loop"}
     assert all(v > 0 for v in preds.values())
     # flight 1: unpartitionable (no joins) — part absent, fused present
     preds1 = M.predict(QUERIES["q1.1"], DB, M.HOST)
-    assert "part" not in preds1 and "fused" in preds1
+    assert "part" not in preds1 and "part_loop" not in preds1
+    assert "fused" in preds1
 
 
 def test_model_prefers_partitioned_past_the_cache():
