@@ -1,0 +1,108 @@
+"""Benchmark regression gate: fresh ``BENCH_*.json`` vs committed baseline.
+
+CI runs a benchmark smoke (``benchmarks.run --json bench_out <table>``)
+and then gates on this script: every timed entry of the fresh record is
+compared against the committed baseline under ``benchmarks/baselines/``
+and the gate FAILS when any entry slowed down by more than the threshold
+(default 2.5x — wide enough to absorb runner-to-runner variance, tight
+enough to catch a lowering regression that reintroduces a full
+materialization pass or a per-partition dispatch loop).
+
+  python benchmarks/compare.py bench_out/BENCH_fig17.json
+  python benchmarks/compare.py bench_out/BENCH_*.json --threshold 2.5
+  python benchmarks/compare.py bench_out/BENCH_fig17.json --update
+      # refresh (or create) the committed baseline from the fresh record
+
+Rules:
+  * entries are matched by row ``name``; rows untimed in the baseline
+    (``us_per_call == 0`` — model-only rows) are not gated, but a row
+    timed in the baseline that comes back untimed FAILS (the benchmark
+    silently stopped measuring it);
+  * a fresh row missing from the baseline is reported but passes (it is
+    adopted on the next ``--update``); a baseline row missing from the
+    fresh record FAILS — a silently dropped benchmark must not pass;
+  * a missing baseline file fails unless ``--update`` creates it.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import shutil
+import sys
+
+DEFAULT_BASELINE_DIR = os.path.join(os.path.dirname(__file__), "baselines")
+DEFAULT_THRESHOLD = 2.5
+
+
+def load_rows(path: str):
+    with open(path) as f:
+        payload = json.load(f)
+    return {r["name"]: float(r["us_per_call"]) for r in payload["rows"]}
+
+
+def compare_one(fresh_path: str, baseline_dir: str, threshold: float,
+                update: bool) -> int:
+    """Gate one fresh record; returns the number of failures."""
+    base_path = os.path.join(baseline_dir, os.path.basename(fresh_path))
+    if update:
+        os.makedirs(baseline_dir, exist_ok=True)
+        shutil.copyfile(fresh_path, base_path)
+        print(f"updated baseline {base_path}")
+        return 0
+    if not os.path.exists(base_path):
+        print(f"FAIL {fresh_path}: no baseline {base_path} "
+              "(run with --update to create it)")
+        return 1
+    fresh = load_rows(fresh_path)
+    base = load_rows(base_path)
+    failures = 0
+    for name in sorted(base):
+        if name not in fresh:
+            print(f"FAIL {name}: present in baseline, missing from fresh "
+                  "record (renamed/dropped rows need --update)")
+            failures += 1
+            continue
+        old, new = base[name], fresh[name]
+        if old <= 0:                    # model-only rows are not gated
+            continue
+        if new <= 0:                    # a timed row must stay timed
+            print(f"FAIL {name}: timed in baseline ({old:.1f}us) but "
+                  "untimed (0) in fresh record — benchmark silently "
+                  "stopped measuring")
+            failures += 1
+            continue
+        ratio = new / old
+        verdict = "FAIL" if ratio > threshold else "ok"
+        print(f"{verdict:4} {name}: {old:.1f}us -> {new:.1f}us "
+              f"({ratio:.2f}x, threshold {threshold}x)")
+        if ratio > threshold:
+            failures += 1
+    for name in sorted(set(fresh) - set(base)):
+        print(f"new  {name}: {fresh[name]:.1f}us (no baseline yet)")
+    return failures
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("fresh", nargs="+",
+                    help="fresh BENCH_*.json record(s) to gate")
+    ap.add_argument("--baseline-dir", default=DEFAULT_BASELINE_DIR)
+    ap.add_argument("--threshold", type=float, default=DEFAULT_THRESHOLD,
+                    help="max allowed per-entry slowdown (new/old)")
+    ap.add_argument("--update", action="store_true",
+                    help="refresh the committed baselines instead of gating")
+    args = ap.parse_args()
+    failures = 0
+    for path in args.fresh:
+        failures += compare_one(path, args.baseline_dir, args.threshold,
+                                args.update)
+    if failures:
+        print(f"{failures} benchmark regression(s) above "
+              f"{args.threshold}x — failing the gate", file=sys.stderr)
+        sys.exit(1)
+    print("benchmark gate green")
+
+
+if __name__ == "__main__":
+    main()

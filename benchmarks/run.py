@@ -306,6 +306,78 @@ def fig17_fusion(sf: float = 0.05):
              f"n_joins={len(plan.joins)}")
 
 
+def shared_throughput(sf: float = 0.02):
+    """Wave-serving throughput: queries/sec vs concurrency, the shared
+    single-pass wave (strategy ``shared``) against per-query solo fused
+    execution — the serving analogue of the paper's fusion result.  At
+    concurrency c the wave is the 13 SSB queries round-robin (so small
+    waves are all-distinct and only c > 13 repeats a member); solo-fused
+    streams the fact table once per QUERY, the shared wave once per WAVE
+    with every deduplicated dim table probed once for all members.
+
+    The JSON ``extra`` records wave occupancy, the model's bytes-moved
+    ratio (union fact columns read once + deduplicated probe streams vs
+    Σ per-query full scans), and the probe-stream dedup factor."""
+    from repro.sql.server import QueryServer
+    db = ssb.generate(sf=sf, seed=7)
+    n = db.lineorder.n_rows
+    qs = engine.ssb_queries()
+    names = list(qs)
+    max_batch = 16
+    for conc in (1, 2, 4, 8, 16):
+        batch = [qs[names[i % len(names)]] for i in range(conc)]
+
+        def run_wave(strategy):
+            server = QueryServer(db, mode="ref", max_batch=max_batch)
+            iters, warmup = 3, 1
+            for it in range(warmup + iters):
+                if it == warmup:
+                    t0 = time.perf_counter()
+                for plan in batch:
+                    server.submit(plan, strategy=strategy)
+                results = server.run()
+            dt = (time.perf_counter() - t0) / iters
+            assert all(r.error is None for r in results.values())
+            return dt, server, results
+
+        dt_shared, sserver, sres = run_wave("shared")
+        dt_solo, _, fres = run_wave("fused")
+        for rid, r in sres.items():     # shared must match solo fused
+            np.testing.assert_allclose(r.result, fres[rid].result,
+                                       rtol=1e-5, atol=1e-3)
+        qps_shared = conc / dt_shared
+        qps_solo = conc / dt_solo
+        # model bytes-moved: the wave's union streams (predicate / FK /
+        # measure columns, deduplicated within their role exactly as the
+        # kernel loads them — compile.shared_footprint is the single
+        # owner of that rule) once per wave, vs Σ per-query full scans
+        col_ix, join_nodes, mcol_ix = C.shared_footprint(batch)
+        solo_bytes = sum(SM._scan_cols(p) * SM.W * n for p in batch)
+        shared_bytes = (len(col_ix) + len(join_nodes)
+                        + len(mcol_ix)) * SM.W * n
+        n_solo_probes = sum(len(p.joins) for p in batch)
+        occupancy = sserver.stats["occupancy"]
+        emit(f"shared_throughput.c{conc}", dt_shared / conc * 1e6,
+             f"qps_shared={qps_shared:.1f};qps_solo={qps_solo:.1f};"
+             f"shared_speedup={qps_shared / qps_solo:.2f}x;"
+             f"bytes_ratio={shared_bytes / solo_bytes:.2f};"
+             f"probe_streams={len(join_nodes)}v{n_solo_probes};"
+             f"wave_size={max(r.shared_wave_size or 0 for r in sres.values())}",
+             extra={
+                 "sf": sf, "n_fact": n, "concurrency": conc,
+                 "qps_shared": qps_shared, "qps_solo": qps_solo,
+                 "shared_speedup": qps_shared / qps_solo,
+                 "wave_occupancy": occupancy,
+                 "shared_wave_sizes": sorted(
+                     {r.shared_wave_size for r in sres.values()}),
+                 "bytes_moved_ratio": shared_bytes / solo_bytes,
+                 "fact_bytes_shared": shared_bytes,
+                 "fact_bytes_solo": solo_bytes,
+                 "probe_streams_shared": len(join_nodes),
+                 "probe_streams_solo": n_solo_probes,
+             })
+
+
 def table3_cost():
     """Table 3: cost effectiveness (renting)."""
     cpu_hr, gpu_hr = 0.504, 3.06
@@ -326,6 +398,7 @@ ALL = {
     "fig14": fig14_radix,
     "fig16": fig16_ssb,
     "fig17": fig17_fusion,
+    "shared_throughput": shared_throughput,
     "table3": table3_cost,
 }
 

@@ -1,0 +1,177 @@
+"""Multi-query fused SPJA kernel — one streamed fact-table pass per WAVE.
+
+The paper's headline fusion result (§5.3) streams the fact table once per
+*query*; this kernel is the serving-side generalization: one streamed
+traversal of the fact table evaluates EVERY member query of a wave.  Per
+grid step (one fact tile resident in VMEM):
+
+  BlockLoad(union of fact columns)        — each column DMA'd once
+  BlockLookup(union of dim hash tables)   — each table probed once,
+                                            payload/found shared by all
+                                            member queries
+  per member q:  BlockPred(q's bounds) -> bitmap
+                 group id from shared payloads x q's mults
+                 BlockAggregate into q's accumulator row
+
+so the HBM traffic is the *union* of the members' needs (fact bytes read
+once per wave), while only the cheap tile-local VPU work — predicate
+compares, bitmap algebra, the per-query scatter-add — fans out by Q.
+That is the wave-serving analogue of fusing chained operators: N
+concurrent queries stop costing N full scans.
+
+Member queries are *data*, not structure: all per-query parameters ride
+in stacked SMEM arrays (bounds (Q, C, 2), mults/use (Q, J), measure
+selectors (Q, 3), a validity mask (Q,)), so ONE jitted executable serves
+any member composition — and any member count up to the wave size, via
+padding slots with ``q_valid = 0`` — over the same union of columns and
+tables.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core import blocks as B
+from repro.kernels.common import DEFAULT_TILE, INTERPRET, pad_to_tile, \
+    valid_mask
+
+
+def _make_kernel(n_queries: int, n_preds: int, n_joins: int,
+                 n_measures: int, n_groups: int, tile: int):
+    Q, C, J, M = n_queries, n_preds, n_joins, n_measures
+
+    def kernel(*refs):
+        idx = 0
+        n_ref = refs[idx]; idx += 1
+        bounds_ref = refs[idx] if C else None
+        idx += 1 if C else 0
+        mults_ref = refs[idx] if J else None
+        idx += 1 if J else 0
+        use_ref = refs[idx] if J else None
+        idx += 1 if J else 0
+        qvalid_ref = refs[idx]; idx += 1
+        msel_ref = refs[idx]; idx += 1
+        pred_refs = refs[idx:idx + C]; idx += C
+        key_refs = refs[idx:idx + J]; idx += J
+        ht_refs = refs[idx:idx + 2 * J]; idx += 2 * J
+        m_refs = refs[idx:idx + M]; idx += M
+        out_ref = refs[idx]; idx += 1
+        acc_ref = refs[idx]
+
+        i = pl.program_id(0)
+
+        @pl.when(i == 0)
+        def _init():
+            acc_ref[...] = jnp.zeros((Q, n_groups), jnp.float32)
+
+        base = valid_mask(tile, n_ref[0])
+        # --- shared once-per-tile work: column loads + one probe per
+        # deduplicated dim table, payload/found reused by every member ---
+        cols = [pred_refs[c][...] for c in range(C)]
+        probes = []
+        for j in range(J):
+            payload, found = B.block_lookup(key_refs[j][...],
+                                            ht_refs[2 * j][...],
+                                            ht_refs[2 * j + 1][...])
+            probes.append((payload, found))
+        meas = [m_refs[m][...].astype(jnp.float32) for m in range(M)]
+
+        # --- per-member fan-out: bitmap, group id, aggregate ---
+        for q in range(Q):
+            bitmap = base * qvalid_ref[q]
+            for c in range(C):
+                bitmap = bitmap * B.block_pred_range(
+                    cols[c], bounds_ref[q, c, 0], bounds_ref[q, c, 1])
+            group = jnp.zeros((tile,), jnp.int32)
+            for j in range(J):
+                payload, found = probes[j]
+                use = use_ref[q, j]
+                bitmap = bitmap * (1 - use + use * found)
+                group = group + payload * mults_ref[q, j]
+            # measure selected by data (SMEM scalars), not structure
+            m1 = jnp.zeros((tile,), jnp.float32)
+            m2 = jnp.zeros((tile,), jnp.float32)
+            for m in range(M):
+                m1 = m1 + jnp.where(msel_ref[q, 0] == m, meas[m], 0.0)
+                m2 = m2 + jnp.where(msel_ref[q, 1] == m, meas[m], 0.0)
+            op = msel_ref[q, 2]
+            mv = jnp.where(op == 1, m1 * m2,
+                           jnp.where(op == 2, m1 - m2, m1))
+            acc_ref[q, :] = acc_ref[q, :] + B.block_group_aggregate(
+                group, mv, bitmap, n_groups)
+
+        @pl.when(i == pl.num_programs(0) - 1)
+        def _fin():
+            out_ref[...] = acc_ref[...]
+
+    return kernel
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("n_groups", "tile", "interpret"))
+def multi_spja(pred_cols: Tuple[jax.Array, ...],
+               pred_bounds: jax.Array,              # (Q, C, 2) int32
+               join_keys: Tuple[jax.Array, ...],    # union of fact FK cols
+               join_tables: Tuple[jax.Array, ...],  # (htk0, htv0, ...)
+               join_mults: jax.Array,               # (Q, J) int32
+               join_use: jax.Array,                 # (Q, J) int32 0/1
+               q_valid: jax.Array,                  # (Q,) int32 0/1
+               measure_cols: Tuple[jax.Array, ...],  # union, f32
+               measure_sel: jax.Array,              # (Q, 3) int32
+               n_groups: int = 1,
+               tile: int = DEFAULT_TILE,
+               interpret: bool | None = None) -> jax.Array:
+    """Run a whole wave of SPJA queries in one fused kernel.  Returns
+    (Q, n_groups) f32 per-query group sums (semantics documented on
+    ``repro.kernels.ref.multi_spja``, the oracle)."""
+    interpret = INTERPRET if interpret is None else interpret
+    Q = pred_bounds.shape[0]
+    C = len(pred_cols)
+    J = len(join_keys)
+    M = len(measure_cols)
+    n = measure_cols[0].shape[0]
+
+    inputs = [jnp.array([n], jnp.int32)]
+    in_specs = [pl.BlockSpec(memory_space=pltpu.SMEM)]
+    if C:
+        inputs.append(pred_bounds.astype(jnp.int32))
+        in_specs.append(pl.BlockSpec(memory_space=pltpu.SMEM))
+    if J:
+        inputs.append(join_mults.astype(jnp.int32))
+        in_specs.append(pl.BlockSpec(memory_space=pltpu.SMEM))
+        inputs.append(join_use.astype(jnp.int32))
+        in_specs.append(pl.BlockSpec(memory_space=pltpu.SMEM))
+    inputs.append(q_valid.astype(jnp.int32))
+    in_specs.append(pl.BlockSpec(memory_space=pltpu.SMEM))
+    inputs.append(measure_sel.astype(jnp.int32))
+    in_specs.append(pl.BlockSpec(memory_space=pltpu.SMEM))
+    blocked = pl.BlockSpec((tile,), lambda i: (i,))
+    for c in pred_cols:
+        inputs.append(pad_to_tile(c, tile, 0))
+        in_specs.append(blocked)
+    for c in join_keys:
+        inputs.append(pad_to_tile(c, tile, 0))
+        in_specs.append(blocked)
+    for t in join_tables:
+        inputs.append(t)
+        in_specs.append(pl.BlockSpec(memory_space=pl.ANY))
+    for m in measure_cols:
+        inputs.append(pad_to_tile(m.astype(jnp.float32), tile, 0))
+        in_specs.append(blocked)
+
+    npad = pad_to_tile(measure_cols[0], tile, 0).shape[0]
+    out = pl.pallas_call(
+        _make_kernel(Q, C, J, M, n_groups, tile),
+        grid=(npad // tile,),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec(memory_space=pl.ANY),
+        out_shape=jax.ShapeDtypeStruct((Q, n_groups), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((Q, n_groups), jnp.float32)],
+        interpret=interpret,
+    )(*inputs)
+    return out

@@ -222,6 +222,32 @@ def group_sum(group_ids, vals, n_groups, mode: str = "auto",
     return _ref.group_sum(group_ids, vals, n_groups)
 
 
+# one jitted executable per wave *shape* (Q, C, J, M, n_groups, n): the
+# member queries themselves are data (stacked SMEM-style parameter
+# arrays), so re-running a wave of any composition over the same unions
+# hits the trace cache — the multi-query analogue of _part_probe_ref_jit
+_multi_spja_ref_jit = functools.partial(
+    jax.jit, static_argnames=("n_groups",))(_ref.multi_spja)
+
+
+def multi_spja(pred_cols, pred_bounds, join_keys, join_tables, join_mults,
+               join_use, q_valid, measure_cols, measure_sel, n_groups=1,
+               mode: str = "auto", tile: int = DEFAULT_TILE):
+    """Whole-wave shared-scan SPJA: Q stacked queries, one fact pass.
+    Argument semantics documented on ``repro.kernels.ref.multi_spja``
+    (the oracle); returns (Q, n_groups) f32."""
+    if _use_kernel(mode):
+        from repro.kernels import multi_fused
+        return multi_fused.multi_spja(
+            tuple(pred_cols), pred_bounds, tuple(join_keys),
+            tuple(join_tables), join_mults, join_use, q_valid,
+            tuple(measure_cols), measure_sel, n_groups=n_groups, tile=tile)
+    return _multi_spja_ref_jit(
+        tuple(pred_cols), pred_bounds, tuple(join_keys),
+        tuple(join_tables), join_mults, join_use, q_valid,
+        tuple(measure_cols), measure_sel, n_groups=n_groups)
+
+
 def spja(pred_cols, pred_bounds, join_keys, join_tables, group_mults,
          m1, m2=None, measure_op="first", n_groups=1, mode: str = "auto",
          tile: int = DEFAULT_TILE):

@@ -110,6 +110,71 @@ def part_probe(keys, rowids, groups, offs, counts, htk, htv, mult):
     return outr, outg, count
 
 
+def multi_spja(pred_cols, pred_bounds, join_keys, join_tables, join_mults,
+               join_use, q_valid, measure_cols, measure_sel,
+               n_groups=1) -> jax.Array:
+    """Multi-query SPJA oracle: Q queries evaluated in ONE pass over the
+    fact table.  Shared work is factored exactly the way the fused kernel
+    factors it — every predicate column is compared once per query against
+    that query's (lo, hi) bounds, every deduplicated dim hash table is
+    probed ONCE for all queries — and only the per-query bitmap / group-id
+    / aggregate work fans out by Q.
+
+    Stacked per-query parameters (Q = wave size, member q may be padding):
+      pred_bounds  (Q, C, 2) int32 — closed ranges per (query, column);
+                   a query that does not filter column c carries the
+                   all-pass range (INT32_MIN, INT32_MAX)
+      join_mults   (Q, J) int32 — group-id multiplier (0: unused payload)
+      join_use     (Q, J) int32 — 1 when a probe miss on join j filters
+                   query q's row, 0 when query q ignores join j
+      q_valid      (Q,)   int32 — 0 marks a padding slot (no contribution)
+      measure_sel  (Q, 3) int32 — (m1 idx, m2 idx, op) into measure_cols;
+                   op: 0 = m1, 1 = m1*m2, 2 = m1-m2
+    Returns (Q, n_groups) f32 per-query per-group sums."""
+    Q = pred_bounds.shape[0]
+    C = len(pred_cols)
+    J = len(join_keys)
+    M = len(measure_cols)
+    n = measure_cols[0].shape[0]
+
+    # --- shared once-per-wave work: column predicates stay per-query,
+    # but each dim table is probed exactly once for every member ---
+    payloads, founds = [], []
+    for j in range(J):
+        payload, found = B.block_lookup(join_keys[j], join_tables[2 * j],
+                                        join_tables[2 * j + 1])
+        payloads.append(payload)
+        founds.append(found)
+
+    rows = []
+    for q in range(Q):
+        bitmap = jnp.full((n,), q_valid[q], jnp.int32)
+        for c in range(C):
+            bitmap = bitmap * ((pred_cols[c] >= pred_bounds[q, c, 0])
+                               & (pred_cols[c] <= pred_bounds[q, c, 1])
+                               ).astype(jnp.int32)
+        group = jnp.zeros((n,), jnp.int32)
+        for j in range(J):
+            use = join_use[q, j]
+            bitmap = bitmap * (1 - use + use * founds[j])
+            group = group + payloads[j] * join_mults[q, j]
+        # measure: data-selected from the stacked measure columns so one
+        # trace serves any member composition
+        m1 = jnp.zeros((n,), jnp.float32)
+        m2 = jnp.zeros((n,), jnp.float32)
+        for m in range(M):
+            m1 = m1 + jnp.where(measure_sel[q, 0] == m,
+                                measure_cols[m], 0.0)
+            m2 = m2 + jnp.where(measure_sel[q, 1] == m,
+                                measure_cols[m], 0.0)
+        op = measure_sel[q, 2]
+        meas = jnp.where(op == 1, m1 * m2, jnp.where(op == 2, m1 - m2, m1))
+        contrib = jnp.where(bitmap > 0, meas, 0.0)
+        safe = jnp.where(bitmap > 0, group, 0)
+        rows.append(jnp.zeros((n_groups,), jnp.float32).at[safe].add(contrib))
+    return jnp.stack(rows)
+
+
 def histogram(keys, start_bit, r, tile) -> jax.Array:
     """Per-tile histograms, matching the kernel's (n_tiles, 2^r) layout."""
     n = keys.shape[0]

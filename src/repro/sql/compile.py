@@ -33,10 +33,20 @@
              ``part_loop`` series); not a candidate for ``auto``'s
              argmin in spirit, but priced by the model (launch overhead
              included) so the comparison is honest.
+``shared`` — shared-scan *group* lowering: a wave of fusable aggregate
+             plans over the same fact table executes as ONE fused pass
+             (``kernels/multi_fused.py``) — the fact table is streamed
+             once per wave, each deduplicated dim hash table is probed
+             once for every member, and only per-query bitmaps/group
+             ids/aggregates fan out.  ``execute_shared`` is the group
+             entry point; ``compile_plan(plan, "shared")`` is its
+             single-member degenerate form (a 1-wave).
 ``auto``   — pick fused/opat/part per query from the bandwidth cost
              model (``repro.sql.model``): predicted bytes moved per
              strategy, argmin at execute time (when the database — and
-             therefore the cardinalities — is known).
+             therefore the cardinalities — is known).  Group-level
+             shared-vs-solo arbitration lives in the query server (it
+             sees the wave); ``model.predict_shared`` prices it.
 
 ``compile_plan(plan, "fused")`` validates fusability first; plans the
 fused kernel cannot express (non-range fact predicates, row-returning
@@ -67,7 +77,10 @@ from repro.sql import hashtable as HT
 from repro.sql import plan as P
 from repro.sql import ssb
 
-STRATEGIES = ("fused", "opat", "part", "part_loop", "auto")
+STRATEGIES = ("fused", "opat", "part", "part_loop", "shared", "auto")
+
+_INT32_MIN, _INT32_MAX = -(1 << 31), (1 << 31) - 1
+_MEASURE_OP_CODE = {"first": 0, "mul": 1, "sub": 2}
 
 # process-wide dispatch counters (reset via reset_launch_stats): kernel
 # launches on the join probe path, the overhead axis fig8 attributes the
@@ -131,6 +144,17 @@ def fusability(plan: P.Plan) -> Optional[str]:
     return None
 
 
+def shareability(plan: P.Plan) -> Optional[str]:
+    """None if the plan can join a shared-scan wave, else the reason.
+    A shareable plan is exactly a fusable one — the multi-query kernel
+    generalizes the single-query fused kernel, so its constraints (SPJA
+    aggregate chain, range-expressible fact predicates, supported measure
+    ops) are inherited unchanged.  Group-level compatibility (every
+    member scanning the same fact table) is checked by
+    ``execute_shared``/the server, which see the whole wave."""
+    return fusability(plan)
+
+
 def partability(plan: P.Plan) -> Optional[str]:
     """None if the plan benefits from the radix-partitioned join lowering
     (fused ``part`` or host-orchestrated ``part_loop`` alike), else the
@@ -173,6 +197,163 @@ def _execute_fused(plan: P.Plan, db: ssb.Database, mode: str, tile: int,
                    m1, m2, measure_op=proj.op, n_groups=plan.n_groups,
                    mode=mode, tile=tile)
     return np.asarray(out)
+
+
+# ---------------------------------------------------------------------------
+# shared-scan group lowering (one fused pass per wave)
+# ---------------------------------------------------------------------------
+
+
+def shared_join_key(join: P.HashJoin) -> Tuple:
+    """Probe identity of a join inside a shared wave: the fact FK column
+    plus the logical build side.  Two members whose joins agree on both
+    share ONE probe stream (their ``mult``s may differ — the multiplier
+    is per-member data)."""
+    return (join.fact_col, HT.join_cache_key(join))
+
+
+def shared_footprint(plans: List[P.Plan]):
+    """The union streams of a shared wave, exactly as the kernel loads
+    them: predicate columns (deduplicated by name), joins (deduplicated
+    by :func:`shared_join_key`; two distinct build sides on the same
+    fact FK are two probe streams AND two key loads), measure columns
+    (deduplicated by name — a column that is both predicate and measure
+    is still two streams, matching the solo fused kernel's accounting).
+
+    Returns ``(col_ix, join_nodes, mcol_ix)`` — ordered name->index maps
+    for predicate/measure columns and the deduplicated join list.  The
+    single owner of the union/dedup rule: ``shared_params`` builds the
+    kernel parameters from it, ``model.predict_shared`` prices it, and
+    the ``shared_throughput`` benchmark reports it."""
+    col_ix: Dict[str, int] = {}
+    join_ix: Dict[Tuple, int] = {}
+    join_nodes: List[P.HashJoin] = []
+    mcol_ix: Dict[str, int] = {}
+    for plan in plans:
+        for col, _, _ in plan.preds:
+            col_ix.setdefault(col, len(col_ix))
+        for j in plan.joins:
+            k = shared_join_key(j)
+            if k not in join_ix:
+                join_ix[k] = len(join_nodes)
+                join_nodes.append(j)
+        proj = plan.project
+        mcol_ix.setdefault(proj.m1, len(mcol_ix))
+        if proj.m2 is not None:
+            mcol_ix.setdefault(proj.m2, len(mcol_ix))
+    return col_ix, join_nodes, mcol_ix
+
+
+def shared_params(plans: List[P.Plan], db: ssb.Database,
+                  cache: Optional[HT.HashTableCache] = None,
+                  pad_to: Optional[int] = None,
+                  prebuilt: Optional[Dict[Tuple, Tuple]] = None):
+    """Lower a group of shareable plans over one fact table to the
+    stacked parameter arrays of ``ops.multi_spja``.
+
+    Returns ``(fact, args, n_groups)`` where ``args`` are the positional
+    arguments of the kernel.  Raises on a group that is not
+    scan-compatible (different fact tables) or contains an unshareable
+    member — group validation is the caller's contract; the server
+    filters before calling.
+
+    ``prebuilt`` maps :func:`shared_join_key` to an already-built
+    ``(htk, htv)`` pair: a caller that built the wave's tables itself
+    (the server does, per member, for fault isolation and per-request
+    hit/miss attribution) passes them through so the lowering does not
+    re-fetch from the cache and double-count its hit stats."""
+    if not plans:
+        raise ValueError("shared wave must contain at least one plan")
+    table = plans[0].scan.table
+    for plan in plans:
+        if plan.scan.table != table:
+            raise ValueError(
+                f"shared wave is scan-incompatible: {plan.name} scans "
+                f"{plan.scan.table!r}, wave scans {table!r}")
+        reason = shareability(plan)
+        if reason is not None:
+            raise ValueError(f"{plan.name} cannot join a shared wave: "
+                             f"{reason}")
+    fact = getattr(db, table)
+    q_n = len(plans)
+    q_pad = max(q_n, pad_to or q_n)
+    col_ix, join_nodes, mcol_ix = shared_footprint(plans)
+    join_ix = {shared_join_key(j): ji for ji, j in enumerate(join_nodes)}
+
+    # per-member bounds over the union predicate columns, intersected
+    # when one member filters the same column twice; all-pass for
+    # non-filtering members (the kernel evaluates every union column for
+    # every member)
+    bounds = np.empty((q_pad, len(col_ix), 2), np.int32)
+    bounds[..., 0] = _INT32_MIN
+    bounds[..., 1] = _INT32_MAX
+    for qi, plan in enumerate(plans):
+        for col, lo, hi in plan.preds:
+            ci = col_ix[col]
+            bounds[qi, ci, 0] = max(bounds[qi, ci, 0], lo)
+            bounds[qi, ci, 1] = min(bounds[qi, ci, 1], hi)
+
+    # deduplicated joins: one probe stream per distinct (fact FK,
+    # logical build side), per-member use/mult as data
+    mults = np.zeros((q_pad, len(join_nodes)), np.int32)
+    use = np.zeros((q_pad, len(join_nodes)), np.int32)
+    for qi, plan in enumerate(plans):
+        for j in plan.joins:
+            ji = join_ix[shared_join_key(j)]
+            use[qi, ji] = 1
+            mults[qi, ji] += j.mult
+    join_keys = [jnp.asarray(fact[j.fact_col]) for j in join_nodes]
+    join_tables: List[jnp.ndarray] = []
+    for j in join_nodes:
+        k = shared_join_key(j)
+        if prebuilt is not None and k in prebuilt:
+            htk, htv = prebuilt[k]
+        elif cache is not None:
+            htk, htv = cache.get_or_build(db, j)
+        else:
+            htk, htv = HT.build_dim_table(db, j)
+        join_tables.extend([htk, htv])
+
+    # per-member (m1, m2, op) selectors into the union measure columns
+    msel = np.zeros((q_pad, 3), np.int32)
+    for qi, plan in enumerate(plans):
+        proj = plan.project
+        msel[qi, 0] = mcol_ix[proj.m1]
+        if proj.m2 is not None:
+            msel[qi, 1] = mcol_ix[proj.m2]
+        msel[qi, 2] = _MEASURE_OP_CODE[proj.op]
+    measure_cols = [jnp.asarray(fact[c]).astype(jnp.float32)
+                    for c in mcol_ix]
+
+    q_valid = np.zeros(q_pad, np.int32)
+    q_valid[:q_n] = 1
+    n_groups = max(plan.n_groups for plan in plans)
+    args = ([jnp.asarray(fact[c]) for c in col_ix], jnp.asarray(bounds),
+            join_keys, join_tables, jnp.asarray(mults), jnp.asarray(use),
+            jnp.asarray(q_valid), measure_cols, jnp.asarray(msel))
+    return fact, args, n_groups
+
+
+def execute_shared(plans: List[P.Plan], db: ssb.Database,
+                   mode: str = "auto", tile: int = DEFAULT_TILE,
+                   cache: Optional[HT.HashTableCache] = None,
+                   pad_to: Optional[int] = None,
+                   prebuilt: Optional[Dict[Tuple, Tuple]] = None
+                   ) -> List[np.ndarray]:
+    """Execute a scan-compatible group of aggregate plans as ONE shared
+    fused pass over their common fact table; returns each member's
+    ``(n_groups,)`` f32 result in submission order.
+
+    ``pad_to`` pads the stacked member dimension with inert slots so one
+    jitted executable serves any member count up to the wave size (the
+    padded members contribute nothing — their validity bit is 0)."""
+    _, args, n_groups = shared_params(plans, db, cache=cache,
+                                      pad_to=pad_to, prebuilt=prebuilt)
+    LAUNCH_STATS["probe"] += 1          # the single whole-wave launch
+    out = np.asarray(ops.multi_spja(*args, n_groups=n_groups, mode=mode,
+                                    tile=tile))
+    return [out[qi, :plan.n_groups].copy()
+            for qi, plan in enumerate(plans)]
 
 
 # ---------------------------------------------------------------------------
@@ -426,6 +607,9 @@ class CompiledQuery:
         self.decided = strategy
         if strategy == "fused":
             return _execute_fused(self.plan, db, mode, tile, cache)
+        if strategy == "shared":        # degenerate 1-member wave
+            return execute_shared([self.plan], db, mode=mode, tile=tile,
+                                  cache=cache)[0]
         return _execute_chain(self.plan, db, mode, tile, cache,
                               join_mode=(strategy if strategy in
                                          _JOIN_LOWERINGS else "opat"))
@@ -456,6 +640,12 @@ def compile_plan(plan: P.Plan, strategy: str = "fused") -> CompiledQuery:
         if reason is None:
             return CompiledQuery(plan, "fused", "fused")
         return CompiledQuery(plan, "opat", "fused", fallback_reason=reason)
+    if strategy == "shared":
+        reason = shareability(plan)     # classifies; raises on malformed
+        if reason is None:
+            return CompiledQuery(plan, "shared", "shared")
+        return CompiledQuery(plan, "opat", "shared",
+                             fallback_reason=reason)
     if strategy in ("part", "part_loop"):
         reason = partability(plan)      # classifies; raises on malformed
         if reason is None:

@@ -34,6 +34,12 @@ is noise for the single-launch strategies and the whole story for
 "Revisiting Query Performance in GPU Database Systems" attributes to
 kernel-launch overheads.
 
+``predict_shared(plans, db)`` prices a whole *wave*: one streamed pass
+over the union of the members' fact columns + one probe stream per
+deduplicated dim table + Σ per-member output payload bytes, against the
+Σ of per-member solo argmins — the term the query server's ``auto``
+arbitration uses to decide when shared-scan execution pays.
+
 ``choose(plan, db)`` returns the argmin strategy — what the ``auto``
 strategy in ``repro.sql.compile`` executes — plus the full prediction
 vector so servers/benchmarks can report predicted-vs-measured
@@ -257,6 +263,49 @@ def predict(plan: P.Plan, db: ssb.Database,
         out["part"] = part_t
         out["part_loop"] = part_loop_t
     return out
+
+
+def predict_shared(plans, db: ssb.Database,
+                   hw: Optional[Hardware] = None) -> Dict[str, float]:
+    """Shared-wave vs solo cost of a scan-compatible group of fusable
+    aggregate plans: ``{"shared": s, "solo": s}`` predicted seconds.
+
+    ``shared`` prices ONE streamed pass over the wave's *union* of fact
+    columns (fact bytes read once per wave), one probe stream per
+    deduplicated dim hash table (two members sharing a build side share
+    the probe), and the per-member output payload writes (Σ per-query
+    group vectors) — plus a single kernel dispatch.  ``solo`` is the
+    alternative the server would otherwise run: Σ over members of the
+    cost model's per-plan argmin (``choose``).  The server's ``auto``
+    arbitration runs the shared pass whenever ``shared < solo``."""
+    from repro.sql.compile import shareability, shared_footprint
+    hw = hw or default_hardware()
+    if not plans:
+        raise ValueError("predict_shared needs at least one plan")
+    table = plans[0].scan.table
+    fact: ssb.Table = getattr(db, table)
+    n = fact.n_rows
+    for plan in plans:
+        if plan.scan.table != table:
+            raise ValueError(f"{plan.name}: shared wave is "
+                             "scan-incompatible")
+        reason = shareability(plan)
+        if reason is not None:
+            raise ValueError(f"{plan.name}: {reason}")
+    # the union streams the kernel actually loads (same accounting as
+    # the solo fused model's _scan_cols: a column that is both predicate
+    # and measure is two streams, each deduplicated within its role)
+    col_ix, join_nodes, mcol_ix = shared_footprint(plans)
+    n_streams = len(col_ix) + len(join_nodes) + len(mcol_ix)
+    builds = [int(P.pred_mask(j.filter, getattr(db, j.dim)).sum())
+              for j in join_nodes]
+    out_payload = float(sum(plan.n_groups * W for plan in plans))
+    shared_t = (n_streams * W * n / hw.read_bw
+                + sum(_probe_time(n, ht_bytes(b), hw) for b in builds)
+                + out_payload / hw.write_bw
+                + hw.launch_overhead_s)
+    solo_t = sum(choose(plan, db, hw).predicted_s for plan in plans)
+    return {"shared": shared_t, "solo": solo_t}
 
 
 @dataclass(frozen=True)

@@ -2,17 +2,33 @@
 execute, with a keyed cache of built dimension hash tables.
 
 Mirrors the wave pattern of ``serve/engine.py`` (the LM batch server):
-submitted requests queue up, ``run()`` drains the queue in *waves* —
-batches bucketed so one wave shares a compilation strategy and a bounded
-batch size — and every wave executes against a shared
-``HashTableCache``.  Scheduling is sequential on the host (one device
-stream, like the LM server's wave loop): the concurrency story is
-many *queued* clients sharing one resident database, amortized builds,
-and per-wave batching — not thread-level overlap.  Repeated queries (or distinct queries sharing a
-join build side, e.g. every SSB flight's ``date`` join) skip the
-hash-table build phase entirely; the cache's hit/miss stats quantify the
-saved build work, the serving analogue of the paper's observation that
-dimension builds are amortizable setup rather than per-query cost.
+submitted requests queue up, ``run()`` drains the queue in *waves*, and
+every wave executes against a shared ``HashTableCache``.  Scheduling is
+sequential on the host (one device stream, like the LM server's wave
+loop): the concurrency story is many *queued* clients sharing one
+resident database, amortized builds, and per-wave batching — not
+thread-level overlap.
+
+Waves are bucketed by **scan-compatibility**, not just by requested
+strategy: requests whose strategy is ``shared`` (or ``auto``) and whose
+plan is shareable — an aggregate SPJA plan the fused kernel could run —
+are grouped by the fact table they scan, and a compatible wave executes
+as ONE shared fused pass (``compile.execute_shared``): the fact table is
+streamed once per wave, each deduplicated dim hash table is probed once
+for every member, and each member's ``QueryResult`` reports the wave it
+rode in via ``shared_wave_size``.  That is the serving analogue of the
+paper's operator-fusion result: N concurrent queries stop costing N full
+fact-table scans.  ``auto`` waves consult the cost model's
+shared-vs-solo term (``model.predict_shared``) and fall back to
+per-query execution when sharing does not pay (e.g. a single-member
+wave).  Everything else — fixed ``fused``/``opat``/``part`` requests,
+row plans, unshareable plans — buckets by strategy as before.
+
+Repeated queries (or distinct queries sharing a join build side, e.g.
+every SSB flight's ``date`` join) skip the hash-table build phase
+entirely; the cache's hit/miss stats quantify the saved build work, the
+serving analogue of the paper's observation that dimension builds are
+amortizable setup rather than per-query cost.
 
 Per-request metrics (latency, strategy actually used, fallback reason)
 ride back on the ``QueryResult`` so a traffic driver can tell fused
@@ -21,19 +37,25 @@ choice through the bandwidth cost model (``repro.sql.model``); the
 result then also reports the model's choice and its predicted time next
 to the measured latency, so the model's calibration is observable in
 production traffic.
+
+``stats`` is a ``defaultdict(int)``-backed counter: the per-strategy
+tallies (``stats[ran] += 1``) must never ``KeyError`` on a strategy the
+fixed seed dict didn't anticipate — that poisoned the request before
+the fix.
 """
 from __future__ import annotations
 
 import time
 from collections import defaultdict
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
 from repro.kernels.common import DEFAULT_TILE
+from repro.sql import compile as C
 from repro.sql import ssb
-from repro.sql.compile import compile_plan
+from repro.sql.compile import compile_plan, execute_shared, shareability
 from repro.sql.hashtable import HashTableCache
 from repro.sql.plan import Plan
 
@@ -59,6 +81,10 @@ class QueryResult:
     model_choice: Optional[str] = None  # auto requests: model's pick
     predicted_s: Optional[float] = None  # model's time for the strategy run
     predictions: Optional[Dict[str, float]] = None  # full per-strategy model
+    shared_wave_size: Optional[int] = None  # members of the shared pass
+    #   that produced this result (None: the request ran solo); for a
+    #   shared member, latency_s is the whole wave's wall time — the wave
+    #   IS the unit of execution
 
 
 class QueryServer:
@@ -78,9 +104,10 @@ class QueryServer:
         self.cache = HashTableCache()
         self.queue: List[QueryRequest] = []
         self._next_rid = 0
-        self.stats = {"queries": 0, "waves": 0, "occupancy": [],
-                      "fused": 0, "opat": 0, "part": 0, "part_loop": 0,
-                      "auto": 0, "fallbacks": 0, "errors": 0}
+        # defaultdict: unknown decided strategies tally instead of
+        # KeyError-poisoning the request; non-counter entries seeded
+        self.stats = defaultdict(int)
+        self.stats["occupancy"] = []
 
     def submit(self, plan: Plan, strategy: str = "fused") -> int:
         rid = self._next_rid
@@ -88,27 +115,161 @@ class QueryServer:
         self.queue.append(QueryRequest(rid, plan, strategy))
         return rid
 
-    def _waves(self) -> List[List[QueryRequest]]:
-        """Bucket by requested strategy (a wave is homogeneous, like the
-        LM server's length buckets), then chunk to the batch size."""
-        buckets: Dict[str, List[QueryRequest]] = defaultdict(list)
+    def _wave_key(self, req: QueryRequest) -> Tuple:
+        """Scan-compatibility bucketing: shareable plans requested as
+        ``shared``/``auto`` group by the fact table they scan (one shared
+        pass per wave); everything else buckets by requested strategy, as
+        before.  A malformed plan buckets solo so ``_execute`` can report
+        its error per-request."""
+        if req.strategy in ("shared", "auto"):
+            try:
+                shareable = shareability(req.plan) is None
+            except Exception:               # noqa: BLE001 — malformed plan
+                shareable = False
+            if shareable:
+                return ("scan", req.plan.scan.table, req.strategy)
+        return ("solo", req.strategy)
+
+    def _waves(self) -> List[Tuple[Tuple, List[QueryRequest]]]:
+        """Bucket by scan-compatibility key, then chunk to the batch
+        size (a wave is homogeneous, like the LM server's length
+        buckets)."""
+        buckets: Dict[Tuple, List[QueryRequest]] = defaultdict(list)
         for r in self.queue:
-            buckets[r.strategy].append(r)
+            buckets[self._wave_key(r)].append(r)
         waves = []
-        for _, rs in sorted(buckets.items()):
+        for key, rs in sorted(buckets.items()):
             for i in range(0, len(rs), self.max_batch):
-                waves.append(rs[i:i + self.max_batch])
+                waves.append((key, rs[i:i + self.max_batch]))
         return waves
 
     def run(self) -> Dict[int, QueryResult]:
         out: Dict[int, QueryResult] = {}
-        for wave in self._waves():
+        for key, wave in self._waves():
             self.stats["waves"] += 1
             self.stats["occupancy"].append(len(wave) / self.max_batch)
-            for req in wave:
-                out[req.rid] = self._execute(req)
+            if key[0] == "scan":
+                out.update(self._run_scan_wave(key, wave))
+            else:
+                for req in wave:
+                    out[req.rid] = self._execute(req)
         self.queue.clear()
         return out
+
+    # ------------------------------------------------------------------
+    # shared-scan wave path
+    # ------------------------------------------------------------------
+
+    def _run_scan_wave(self, key: Tuple,
+                       wave: List[QueryRequest]) -> Dict[int, QueryResult]:
+        """One scan-compatible wave.  ``shared`` requests always run the
+        shared pass; ``auto`` waves run it only when the cost model says
+        sharing beats the members' solo argmins (a 1-member wave never
+        does — shared is fused plus wave overhead)."""
+        strategy = key[2]
+        preds = None
+        if strategy == "auto":
+            from repro.sql import model as M
+            run_shared = False
+            if len(wave) > 1:
+                try:
+                    preds = M.predict_shared([r.plan for r in wave],
+                                             self.db)
+                    run_shared = preds["shared"] < preds["solo"]
+                except Exception:           # noqa: BLE001 — model failure
+                    run_shared = False      # falls back to solo execution
+                    # observable: a broken shared-cost model must not be
+                    # indistinguishable from "sharing does not pay"
+                    self.stats["shared_arbitration_errors"] += 1
+            if not run_shared:
+                return {req.rid: self._execute(req) for req in wave}
+        return self._run_shared(wave, model_predictions=preds)
+
+    def _run_shared(self, wave: List[QueryRequest],
+                    model_predictions: Optional[Dict[str, float]] = None
+                    ) -> Dict[int, QueryResult]:
+        """Execute one wave as a single shared fused pass, with member
+        fault isolation: a member whose join build sides fail to
+        construct (the per-member failure surface — predicate/measure
+        validation already passed at bucketing time) is excluded and
+        reported errored; the survivors still share one pass."""
+        out: Dict[int, QueryResult] = {}
+        t0 = time.perf_counter()
+        survivors: List[QueryRequest] = []
+        deltas: Dict[int, Tuple[int, int]] = {}
+        # built tables collected here ride into execute_shared as-is, so
+        # the lowering never re-fetches from the cache — every hit/miss
+        # the wave causes is attributed to exactly one member below
+        prebuilt: Dict[Tuple, Tuple] = {}
+        for req in wave:
+            h0, m0 = self.cache.hits, self.cache.misses
+            try:
+                for j in req.plan.joins:
+                    built = self.cache.get_or_build(self.db, j)
+                    prebuilt[C.shared_join_key(j)] = built
+            except Exception as e:          # noqa: BLE001 — isolate member
+                self.stats["queries"] += 1
+                self.stats["errors"] += 1
+                if req.strategy == "auto":
+                    self.stats["auto"] += 1
+                out[req.rid] = QueryResult(
+                    rid=req.rid, name=req.plan.name, result=None,
+                    strategy="shared", fallback_reason=None,
+                    latency_s=time.perf_counter() - t0,
+                    cache_hits=self.cache.hits - h0,
+                    cache_misses=self.cache.misses - m0,
+                    error=f"{type(e).__name__}: {e}")
+                continue
+            deltas[req.rid] = (self.cache.hits - h0,
+                               self.cache.misses - m0)
+            survivors.append(req)
+        if not survivors:
+            return out
+
+        def member_result(req, result, error, dt):
+            self.stats["queries"] += 1
+            if req.strategy == "auto":
+                self.stats["auto"] += 1
+            if error is None:
+                self.stats["shared"] += 1
+            else:
+                self.stats["errors"] += 1
+            hits, misses = deltas[req.rid]
+            return QueryResult(
+                rid=req.rid, name=req.plan.name, result=result,
+                strategy="shared", fallback_reason=None, latency_s=dt,
+                cache_hits=hits, cache_misses=misses, error=error,
+                model_choice="shared" if req.strategy == "auto" else None,
+                predicted_s=(None if model_predictions is None
+                             else model_predictions["shared"]),
+                predictions=model_predictions,
+                shared_wave_size=len(survivors))
+
+        # pow2 member-count buckets (like the LM server's length buckets):
+        # padded slots are inert but not free, so a small wave must not
+        # pay for max_batch — while any member count still maps onto
+        # O(log max_batch) cached executables per wave composition
+        pad_to = 1 << max(len(survivors) - 1, 0).bit_length()
+        try:
+            results = execute_shared(
+                [r.plan for r in survivors], self.db, mode=self.mode,
+                tile=self.tile, cache=self.cache, pad_to=pad_to,
+                prebuilt=prebuilt)
+        except Exception as e:              # noqa: BLE001 — isolate wave
+            dt = time.perf_counter() - t0
+            msg = f"{type(e).__name__}: {e}"
+            for req in survivors:
+                out[req.rid] = member_result(req, None, msg, dt)
+            return out
+        dt = time.perf_counter() - t0
+        self.stats["shared_waves"] += 1
+        for req, result in zip(survivors, results):
+            out[req.rid] = member_result(req, result, None, dt)
+        return out
+
+    # ------------------------------------------------------------------
+    # solo path
+    # ------------------------------------------------------------------
 
     def _execute(self, req: QueryRequest) -> QueryResult:
         """One request, fault-isolated: a bad plan yields an errored

@@ -18,6 +18,28 @@ os.environ["REPRO_CALIB_CACHE"] = tempfile.mkdtemp(
     prefix="repro-calib-test-")
 
 
+def pytest_addoption(parser):
+    parser.addoption(
+        "--deselect-from", action="store", default=None, metavar="FILE",
+        help="deselect every test node id listed in FILE (one per line, "
+             "# comments ignored).  tests/seed-skips.txt holds the "
+             "seed-failing set both CI and local runs skip: "
+             "pytest -q --deselect-from tests/seed-skips.txt")
+
+
+def pytest_collection_modifyitems(config, items):
+    path = config.getoption("--deselect-from")
+    if not path:
+        return
+    with open(path) as f:
+        skip_ids = {line.strip() for line in f
+                    if line.strip() and not line.strip().startswith("#")}
+    deselected = [it for it in items if it.nodeid in skip_ids]
+    if deselected:
+        config.hook.pytest_deselected(items=deselected)
+        items[:] = [it for it in items if it.nodeid not in skip_ids]
+
+
 @pytest.fixture(scope="session")
 def rng():
     return np.random.default_rng(0)

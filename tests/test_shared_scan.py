@@ -1,0 +1,321 @@
+"""Shared-scan wave execution (strategy ``shared``, kernels/multi_fused).
+
+Covers the whole stack: the stacked-parameter kernel against its jnp
+oracle and against per-query execution (deterministic random plans), the
+group executor, the server's scan-compatibility wave bucketing with
+fault isolation, the cost model's shared-vs-solo arbitration for
+``auto``, and the defaultdict stats regression (an unknown decided
+strategy used to KeyError and poison the request)."""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.kernels import ops
+from repro.sql import compile as C
+from repro.sql import engine, ssb
+from repro.sql import model as M
+from repro.sql.plan import (AffineExpr, ColExpr, EqPred, QueryBuilder,
+                            RangePred)
+from repro.sql.server import QueryServer
+
+DB = ssb.generate(sf=0.005, seed=11)
+QUERIES = engine.ssb_queries()
+
+
+def bad_payload_plan():
+    """A plan whose join build side fails validation (negative payload)."""
+    return (QueryBuilder("bad_payload").scan("lineorder")
+            .hash_join("lo_orderdate", "date", "d_datekey",
+                       payload=AffineExpr("d_year", 1, -1997), mult=50)
+            .measure("lo_revenue").group_by(100).build())
+
+
+# ---------------------------------------------------------------------------
+# server-level equivalence: mixed waves
+# ---------------------------------------------------------------------------
+
+
+def test_mixed_wave_all_13_shared_matches_fused_and_oracle():
+    """One shared wave of every SSB query: bit-identical to per-query
+    fused, allclose to the independent numpy oracle."""
+    server = QueryServer(DB, mode="ref", max_batch=16)
+    rids = {n: server.submit(p, strategy="shared")
+            for n, p in QUERIES.items()}
+    results = server.run()
+    for name, rid in rids.items():
+        r = results[rid]
+        assert r.error is None
+        assert r.strategy == "shared"
+        assert r.shared_wave_size == 13
+        fused = np.asarray(engine.run_query(DB, QUERIES[name], mode="ref"))
+        assert np.array_equal(r.result, fused), name
+        np.testing.assert_allclose(
+            r.result, engine.run_query_oracle(DB, QUERIES[name]),
+            rtol=1e-5, atol=1e-3)
+    assert server.stats["shared"] == 13
+    assert server.stats["shared_waves"] == 1
+    assert server.stats["waves"] == 1
+    # every hit/miss the wave caused is attributed to exactly one member
+    # (the lowering consumes the prebuilt tables, it does not re-fetch)
+    assert server.cache.hits == sum(r.cache_hits
+                                    for r in results.values())
+    assert server.cache.misses == sum(r.cache_misses
+                                      for r in results.values())
+
+
+def test_shared_wave_fault_isolation():
+    """An errored member (bad build side) is excluded and reported; the
+    surviving members still execute as one shared pass with correct
+    results and the survivor wave size."""
+    server = QueryServer(DB, mode="ref", max_batch=16)
+    good = ("q1.1", "q2.1", "q3.2", "q4.2")
+    rids = {n: server.submit(QUERIES[n], strategy="shared") for n in good}
+    r_bad = server.submit(bad_payload_plan(), strategy="shared")
+    results = server.run()
+    assert results[r_bad].result is None
+    assert "negative" in results[r_bad].error
+    assert results[r_bad].strategy == "shared"
+    for n in good:
+        r = results[rids[n]]
+        assert r.error is None
+        assert r.shared_wave_size == 4          # survivors only
+        fused = np.asarray(engine.run_query(DB, QUERIES[n], mode="ref"))
+        assert np.array_equal(r.result, fused), n
+    assert server.stats["errors"] == 1
+    assert server.stats["shared"] == 4
+    # the server still serves afterwards
+    again = server.submit(QUERIES["q1.1"], strategy="shared")
+    assert server.run()[again].error is None
+
+
+def test_shared_wave_chunks_to_max_batch():
+    server = QueryServer(DB, mode="ref", max_batch=4)
+    rids = [server.submit(QUERIES[n], strategy="shared")
+            for n in ("q1.1", "q1.2", "q1.3", "q2.1", "q2.2", "q2.3")]
+    results = server.run()
+    assert server.stats["waves"] == 2
+    assert server.stats["shared_waves"] == 2
+    sizes = sorted(results[r].shared_wave_size for r in rids)
+    assert sizes == [2, 2, 4, 4, 4, 4]
+
+
+def test_unshareable_shared_request_falls_back_per_query():
+    """A row plan submitted as ``shared`` buckets solo and lowers opat
+    with the fusability reason reported — scan-compatibility bucketing
+    only captures shareable aggregate plans."""
+    row_plan = (QueryBuilder("rows").scan("lineorder")
+                .where_range("lo_discount", 1, 3).build())
+    server = QueryServer(DB, mode="ref")
+    rr = server.submit(row_plan, strategy="shared")
+    ra = server.submit(QUERIES["q2.1"], strategy="shared")
+    results = server.run()
+    assert results[rr].strategy == "opat"
+    assert "row-returning" in results[rr].fallback_reason
+    assert results[rr].shared_wave_size is None
+    assert results[ra].strategy == "shared"
+    assert server.stats["waves"] == 2           # solo bucket + scan bucket
+
+
+def test_mixed_strategies_bucket_separately():
+    """fused/opat requests keep their per-strategy waves next to a shared
+    scan wave over the same queue."""
+    server = QueryServer(DB, mode="ref", max_batch=8)
+    rf = server.submit(QUERIES["q2.1"], strategy="fused")
+    ro = server.submit(QUERIES["q2.1"], strategy="opat")
+    r1 = server.submit(QUERIES["q2.1"], strategy="shared")
+    r2 = server.submit(QUERIES["q2.2"], strategy="shared")
+    results = server.run()
+    assert server.stats["waves"] == 3
+    assert results[r1].shared_wave_size == 2
+    for rid in (rf, ro, r1, r2):
+        np.testing.assert_allclose(
+            results[rid].result,
+            engine.run_query_oracle(DB, QUERIES[results[rid].name]),
+            rtol=1e-5, atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# auto arbitration via the cost model
+# ---------------------------------------------------------------------------
+
+
+def test_auto_wave_runs_shared_when_model_says_so():
+    server = QueryServer(DB, mode="ref", max_batch=16)
+    rids = [server.submit(QUERIES[n], strategy="auto")
+            for n in ("q2.1", "q2.2", "q2.3", "q4.1")]
+    results = server.run()
+    for rid in rids:
+        r = results[rid]
+        assert r.strategy == "shared"
+        assert r.model_choice == "shared"
+        assert r.shared_wave_size == 4
+        assert set(r.predictions) == {"shared", "solo"}
+        assert r.predicted_s == r.predictions["shared"]
+        assert r.predictions["shared"] < r.predictions["solo"]
+    assert server.stats["auto"] == 4
+
+
+def test_single_auto_request_stays_solo():
+    """A 1-member wave never runs shared (it is fused plus overhead) —
+    the per-query model path serves it."""
+    server = QueryServer(DB, mode="ref")
+    rid = server.submit(QUERIES["q2.1"], strategy="auto")
+    r = server.run()[rid]
+    assert r.shared_wave_size is None
+    assert r.model_choice in ("fused", "opat", "part")
+
+
+def test_predict_shared_terms():
+    plans = [QUERIES[n] for n in ("q2.1", "q2.2", "q2.3", "q4.1")]
+    preds = M.predict_shared(plans, DB)
+    assert preds["shared"] < preds["solo"]
+    # a single plan is never cheaper shared: the 1-wave streams exactly
+    # what solo fused streams (shared_footprint matches _scan_cols — a
+    # pred-also-measure column is two streams in both accountings) plus
+    # the output payload write, so shared > fused for every SSB query
+    for name, plan in QUERIES.items():
+        solo1 = M.predict_shared([plan], DB)
+        assert solo1["shared"] > M.predict(plan, DB)["fused"], name
+    # duplicated members amplify the win: solo pays N scans, shared one
+    dup = M.predict_shared([QUERIES["q2.1"]] * 8, DB)
+    assert dup["shared"] < dup["solo"] / 4
+    with pytest.raises(ValueError, match="scan-incompatible"):
+        shim = (QueryBuilder("other").scan("date")
+                .measure("d_year").group_by(1).build())
+        M.predict_shared([QUERIES["q2.1"], shim], DB)
+
+
+# ---------------------------------------------------------------------------
+# group executor / compile integration
+# ---------------------------------------------------------------------------
+
+
+def test_compile_plan_shared_singleton_matches_fused():
+    cq = C.compile_plan(QUERIES["q3.1"], "shared")
+    assert cq.strategy == "shared"
+    out = cq.execute(DB, mode="ref")
+    fused = engine.run_query(DB, QUERIES["q3.1"], mode="ref")
+    assert np.array_equal(out, np.asarray(fused))
+
+
+def test_execute_shared_padding_is_inert():
+    """pad_to pads the member dimension with invalid slots: results are
+    identical to the unpadded wave (one executable per pow2 bucket)."""
+    plans = [QUERIES[n] for n in ("q1.1", "q2.1", "q3.3")]
+    plain = C.execute_shared(plans, DB, mode="ref")
+    padded = C.execute_shared(plans, DB, mode="ref", pad_to=8)
+    for a, b in zip(plain, padded):
+        assert np.array_equal(a, b)
+
+
+def test_execute_shared_dedups_build_sides():
+    """q2.1/q2.2/q2.3 and q4.1 share the unfiltered date build side: the
+    wave probes it once, so the cache builds each distinct table once."""
+    from repro.sql.hashtable import HashTableCache
+    plans = [QUERIES[n] for n in ("q2.1", "q2.2", "q2.3", "q4.1")]
+    cache = HashTableCache()
+    C.execute_shared(plans, DB, mode="ref", cache=cache)
+    n_distinct = len({C.shared_join_key(j) for p in plans
+                      for j in p.joins})
+    assert cache.misses == n_distinct           # one build per distinct
+    solo_joins = sum(len(p.joins) for p in plans)
+    assert n_distinct < solo_joins              # dedup actually happened
+
+
+def test_execute_shared_rejects_incompatible_groups():
+    other = (QueryBuilder("dimscan").scan("date")
+             .measure("d_year").group_by(1).build())
+    with pytest.raises(ValueError, match="scan-incompatible"):
+        C.execute_shared([QUERIES["q1.1"], other], DB, mode="ref")
+    row_plan = (QueryBuilder("rows").scan("lineorder")
+                .where_range("lo_discount", 1, 3).build())
+    with pytest.raises(ValueError, match="cannot join a shared wave"):
+        C.execute_shared([QUERIES["q1.1"], row_plan], DB, mode="ref")
+
+
+# ---------------------------------------------------------------------------
+# stacked-predicate kernel vs oracle on random plans (property test)
+# ---------------------------------------------------------------------------
+
+
+def random_agg_plan(rng, name):
+    """A random shareable SPJA plan over the SSB schema."""
+    b = QueryBuilder(name).scan("lineorder")
+    pred_pool = (("lo_orderdate", 0, ssb.N_DATES - 1),
+                 ("lo_discount", 0, 10), ("lo_quantity", 1, 50),
+                 ("lo_extendedprice", 1, 999))
+    for col, lo, hi in pred_pool:
+        if rng.random() < 0.5:
+            a, c = sorted(rng.integers(lo, hi + 1, size=2))
+            b = b.where_range(col, int(a), int(c))
+    join_pool = (
+        ("lo_orderdate", "date", "d_datekey",
+         EqPred("d_year", int(rng.integers(1992, 1999))),
+         ColExpr("d_weeknuminyear")),
+        ("lo_suppkey", "supplier", "s_suppkey",
+         RangePred("s_region", 0, int(rng.integers(0, 5))),
+         ColExpr("s_nation")),
+        ("lo_partkey", "part", "p_partkey",
+         RangePred("p_mfgr", 0, int(rng.integers(0, 5))),
+         ColExpr("p_category")),
+    )
+    mult = 1
+    n_groups = 1
+    for fact_col, dim, key, filt, payload in join_pool:
+        if rng.random() < 0.6:
+            payload_max = {"d_weeknuminyear": 53, "s_nation": 24,
+                           "p_category": 24}[payload.col]
+            b = b.hash_join(fact_col, dim, key, dim_filter=filt,
+                            payload=payload, mult=mult)
+            n_groups = (payload_max + 1) * mult
+            mult = n_groups
+    measures = (("lo_revenue", None, "first"),
+                ("lo_extendedprice", "lo_discount", "mul"),
+                ("lo_revenue", "lo_supplycost", "sub"))
+    m1, m2, op = measures[int(rng.integers(0, len(measures)))]
+    return b.measure(m1, m2, op).group_by(max(n_groups, 1)).build()
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+def test_random_plan_waves_match_oracle_and_kernel(seed):
+    """Random waves: the shared jnp path must match the per-query numpy
+    oracle, and the Pallas kernel (interpret) must match the shared jnp
+    path bit-for-bit on the stacked parameters."""
+    rng = np.random.default_rng(seed)
+    plans = [random_agg_plan(rng, f"rand{seed}.{i}")
+             for i in range(int(rng.integers(2, 6)))]
+    outs = C.execute_shared(plans, DB, mode="ref", pad_to=8)
+    for plan, out in zip(plans, outs):
+        np.testing.assert_allclose(out, engine.run_query_oracle(DB, plan),
+                                   rtol=1e-5, atol=1e-3,
+                                   err_msg=plan.name)
+    # kernel path on the same stacked params (small tile: exercise the
+    # grid carry), against the jitted jnp reference
+    _, args, n_groups = C.shared_params(plans, DB, pad_to=8)
+    ref = np.asarray(ops.multi_spja(*args, n_groups=n_groups, mode="ref",
+                                    tile=256))
+    ker = np.asarray(ops.multi_spja(*args, n_groups=n_groups,
+                                    mode="kernel", tile=256))
+    np.testing.assert_allclose(ker, ref, rtol=1e-5, atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# stats bugfix: defaultdict-backed counters
+# ---------------------------------------------------------------------------
+
+
+def test_stats_survive_unknown_strategy_keys():
+    """Regression: ``self.stats[ran] += 1`` against a fixed-key dict
+    raised KeyError for any decided strategy the seed dict didn't list
+    (e.g. ``shared``) and poisoned the request.  The defaultdict-backed
+    counter tallies anything."""
+    server = QueryServer(DB, mode="ref")
+    assert server.stats["never-seen-strategy"] == 0     # no KeyError
+    rid = server.submit(QUERIES["q2.1"], strategy="shared")
+    r = server.run()[rid]
+    assert r.error is None                  # the request is not poisoned
+    assert server.stats["shared"] == 1
+    fused = server.submit(QUERIES["q2.1"], strategy="fused")
+    assert server.run()[fused].error is None
+    assert server.stats["fused"] == 1
