@@ -8,8 +8,8 @@ from __future__ import annotations
 
 import dataclasses
 import importlib
-from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, Optional, Tuple
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Tuple
 
 # ---------------------------------------------------------------------------
 # Model config
@@ -106,7 +106,6 @@ class ModelConfig:
     def param_count(self, active_only: bool = False) -> int:
         """Analytic parameter count; active_only counts top-k experts only."""
         d, dh = self.d_model, self.resolved_head_dim
-        n_attn = 0
         attn_one = (
             d * self.n_heads * dh            # q
             + 2 * d * self.n_kv_heads * dh   # k, v

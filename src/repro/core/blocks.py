@@ -23,8 +23,7 @@ the compacted output STABLE (the paper's GPU output order is not).
 """
 from __future__ import annotations
 
-from functools import partial
-from typing import Callable, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp

@@ -8,7 +8,7 @@ single CPU device run the exact same model code.
 """
 from __future__ import annotations
 
-from typing import Optional, Sequence
+from typing import Optional
 
 import jax
 import numpy as np

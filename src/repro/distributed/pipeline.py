@@ -23,8 +23,7 @@ carries a "pipe" axis.
 """
 from __future__ import annotations
 
-from functools import partial
-from typing import Any, Callable, Tuple
+from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp

@@ -11,7 +11,7 @@ hillclimb (EXPERIMENTS.md §Perf).
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Sequence, Tuple
+from typing import Any, Optional, Sequence, Tuple
 
 import jax
 import numpy as np

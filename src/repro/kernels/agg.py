@@ -11,7 +11,6 @@ bit-identical.
 from __future__ import annotations
 
 import functools
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp

@@ -9,12 +9,9 @@ SMEM scalar carries) and validated with interpret=True on CPU.
 """
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
 
 DEFAULT_TILE = 2048
 
@@ -39,3 +36,65 @@ def valid_mask(tile: int, n_valid: jax.Array) -> jax.Array:
     """Bitmap of in-bounds lanes for the current grid step."""
     base = pl.program_id(0) * tile
     return ((lane_iota(tile) + base) < n_valid).astype(jnp.int32)
+
+
+def words_per_block(tile: int, phys: int) -> int:
+    """Packed int32 words per ``tile`` decoded values at ``phys`` bits
+    per value (phys == 32: the block IS the tile)."""
+    if 32 % phys or tile % (32 // phys):
+        raise ValueError(f"tile={tile} not divisible by lanes of "
+                         f"phys={phys}")
+    return tile * phys // 32
+
+
+def pad_stream_to_grid(arr: jax.Array, width: int, tile: int,
+                       n_blocks: int):
+    """Pad one fact stream to exactly cover an ``n_blocks``-step grid
+    and return ``(padded, block_len)`` — the single owner of the packed
+    BlockSpec geometry: a plain stream (width 32) blocks at ``tile``
+    values, a packed one at ``tile * width / 32`` words, and either way
+    the array must span the whole grid (a packed column is shorter than
+    the measure-derived pad, so a top-up pad may follow the tile pad)."""
+    blk = tile if width == 32 else words_per_block(tile, width)
+    padded = pad_to_tile(arr, blk, 0)
+    want = n_blocks * blk
+    if padded.shape[0] < want:
+        padded = jnp.pad(padded, (0, want - padded.shape[0]))
+    return padded, blk
+
+
+def decode_words(words: jax.Array, phys: int, ref=0) -> jax.Array:
+    """Register decode of a packed word block: ``(n_words,)`` int32 ->
+    ``(n_words * 32//phys,)`` int32 values (+ ref).  One logical shift +
+    one mask — the in-kernel half of the storage layer's bit-packing
+    (layout rule owned by ``repro.sql.storage``).  ``phys == 32`` is the
+    identity; works identically in Pallas kernel bodies and plain jnp
+    (the jitted ref path), so the decode itself never has two
+    implementations to drift."""
+    if phys == 32:
+        return words
+    c = 32 // phys
+    n_words = words.shape[0]
+    shifts = jax.lax.broadcasted_iota(jnp.int32, (n_words, c), 1) * phys
+    lanes = jax.lax.shift_right_logical(
+        jnp.broadcast_to(words[:, None], (n_words, c)), shifts)
+    vals = (lanes & jnp.int32((1 << phys) - 1)).reshape(n_words * c)
+    if isinstance(ref, int) and ref == 0:
+        return vals
+    return vals + jnp.int32(ref)
+
+
+def gather_decode(words: jax.Array, idx: jax.Array, phys: int,
+                  ref) -> jax.Array:
+    """Positional decode of a packed column: value ``i`` is
+    ``(words[i // c] >> ((i % c) * phys)) & mask + ref`` — a gather over
+    the *word* stream plus register shifts, so the materializing
+    (operator-at-a-time) paths touch only the encoded bytes their row
+    ids reference, never a decoded full-width copy."""
+    if phys == 32:
+        return words[idx] + jnp.int32(ref)
+    c = 32 // phys
+    w = words[idx // c]
+    sh = (idx % c) * phys
+    vals = jax.lax.shift_right_logical(w, sh) & jnp.int32((1 << phys) - 1)
+    return vals + jnp.int32(ref)

@@ -37,13 +37,25 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.core import blocks as B
-from repro.kernels.common import DEFAULT_TILE, INTERPRET, pad_to_tile, \
-    valid_mask
+from repro.kernels.common import DEFAULT_TILE, INTERPRET, decode_words, \
+    pad_stream_to_grid, valid_mask
 
 
 def _make_kernel(n_queries: int, n_preds: int, n_joins: int,
-                 n_measures: int, n_groups: int, tile: int):
+                 n_measures: int, n_groups: int, tile: int,
+                 pred_widths: Tuple[int, ...],
+                 key_widths: Tuple[int, ...],
+                 m_widths: Tuple[int, ...]):
+    """Width 32 marks a plain stream; anything smaller arrives bit-packed
+    (``tile * w / 32`` words per grid step) and decodes in registers in
+    the shared once-per-tile section — so the compression win multiplies
+    across the wave exactly like the column loads it shrinks.  Per-query
+    bounds over packed columns are pre-rewritten into the encoded
+    domain; packed keys/measures decode against SMEM-resident
+    ``krefs``/``mrefs`` frame-of-reference scalars."""
     Q, C, J, M = n_queries, n_preds, n_joins, n_measures
+    has_kref = any(w != 32 for w in key_widths)
+    has_mref = any(w != 32 for w in m_widths)
 
     def kernel(*refs):
         idx = 0
@@ -54,6 +66,10 @@ def _make_kernel(n_queries: int, n_preds: int, n_joins: int,
         idx += 1 if J else 0
         use_ref = refs[idx] if J else None
         idx += 1 if J else 0
+        krefs_ref = refs[idx] if has_kref else None
+        idx += 1 if has_kref else 0
+        mrefs_ref = refs[idx] if has_mref else None
+        idx += 1 if has_mref else 0
         qvalid_ref = refs[idx]; idx += 1
         msel_ref = refs[idx]; idx += 1
         pred_refs = refs[idx:idx + C]; idx += C
@@ -70,16 +86,23 @@ def _make_kernel(n_queries: int, n_preds: int, n_joins: int,
             acc_ref[...] = jnp.zeros((Q, n_groups), jnp.float32)
 
         base = valid_mask(tile, n_ref[0])
-        # --- shared once-per-tile work: column loads + one probe per
-        # deduplicated dim table, payload/found reused by every member ---
-        cols = [pred_refs[c][...] for c in range(C)]
+        # --- shared once-per-tile work: column loads (+ in-register
+        # decode) + one probe per deduplicated dim table, payload/found
+        # reused by every member ---
+        cols = [decode_words(pred_refs[c][...], pred_widths[c])
+                for c in range(C)]
         probes = []
         for j in range(J):
-            payload, found = B.block_lookup(key_refs[j][...],
+            keys = decode_words(key_refs[j][...], key_widths[j],
+                                krefs_ref[j] if key_widths[j] != 32 else 0)
+            payload, found = B.block_lookup(keys,
                                             ht_refs[2 * j][...],
                                             ht_refs[2 * j + 1][...])
             probes.append((payload, found))
-        meas = [m_refs[m][...].astype(jnp.float32) for m in range(M)]
+        meas = [(m_refs[m][...] if m_widths[m] == 32 else
+                 decode_words(m_refs[m][...], m_widths[m],
+                              mrefs_ref[m])).astype(jnp.float32)
+                for m in range(M)]
 
         # --- per-member fan-out: bitmap, group id, aggregate ---
         for q in range(Q):
@@ -113,7 +136,9 @@ def _make_kernel(n_queries: int, n_preds: int, n_joins: int,
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("n_groups", "tile", "interpret"))
+                   static_argnames=("n_groups", "tile", "interpret",
+                                    "pred_widths", "key_widths", "m_widths",
+                                    "n_rows"))
 def multi_spja(pred_cols: Tuple[jax.Array, ...],
                pred_bounds: jax.Array,              # (Q, C, 2) int32
                join_keys: Tuple[jax.Array, ...],    # union of fact FK cols
@@ -121,20 +146,34 @@ def multi_spja(pred_cols: Tuple[jax.Array, ...],
                join_mults: jax.Array,               # (Q, J) int32
                join_use: jax.Array,                 # (Q, J) int32 0/1
                q_valid: jax.Array,                  # (Q,) int32 0/1
-               measure_cols: Tuple[jax.Array, ...],  # union, f32
+               measure_cols: Tuple[jax.Array, ...],  # union, f32 / packed
                measure_sel: jax.Array,              # (Q, 3) int32
                n_groups: int = 1,
                tile: int = DEFAULT_TILE,
-               interpret: bool | None = None) -> jax.Array:
+               interpret: bool | None = None,
+               pred_widths: Tuple[int, ...] | None = None,
+               key_widths: Tuple[int, ...] | None = None,
+               key_refs: jax.Array | None = None,   # (J,) int32 FOR refs
+               m_widths: Tuple[int, ...] | None = None,
+               m_refs: jax.Array | None = None,     # (M,) int32 FOR refs
+               n_rows: int | None = None) -> jax.Array:
     """Run a whole wave of SPJA queries in one fused kernel.  Returns
     (Q, n_groups) f32 per-query group sums (semantics documented on
-    ``repro.kernels.ref.multi_spja``, the oracle)."""
+    ``repro.kernels.ref.multi_spja``, the oracle).  Streams may be
+    bit-packed exactly as in ``ssb_fused.spja``: widths != 32 mark
+    packed word arrays, per-query bounds over packed columns are
+    pre-rewritten into the encoded domain, ``n_rows`` is required when
+    the first measure stream is packed."""
     interpret = INTERPRET if interpret is None else interpret
     Q = pred_bounds.shape[0]
     C = len(pred_cols)
     J = len(join_keys)
     M = len(measure_cols)
-    n = measure_cols[0].shape[0]
+    pred_widths = pred_widths or (32,) * C
+    key_widths = key_widths or (32,) * J
+    m_widths = m_widths or (32,) * M
+    n = measure_cols[0].shape[0] if n_rows is None else n_rows
+    npad = -(-n // tile) * tile
 
     inputs = [jnp.array([n], jnp.int32)]
     in_specs = [pl.BlockSpec(memory_space=pltpu.SMEM)]
@@ -146,27 +185,35 @@ def multi_spja(pred_cols: Tuple[jax.Array, ...],
         in_specs.append(pl.BlockSpec(memory_space=pltpu.SMEM))
         inputs.append(join_use.astype(jnp.int32))
         in_specs.append(pl.BlockSpec(memory_space=pltpu.SMEM))
+    if any(w != 32 for w in key_widths):
+        inputs.append(key_refs.astype(jnp.int32))
+        in_specs.append(pl.BlockSpec(memory_space=pltpu.SMEM))
+    if any(w != 32 for w in m_widths):
+        inputs.append(m_refs.astype(jnp.int32))
+        in_specs.append(pl.BlockSpec(memory_space=pltpu.SMEM))
     inputs.append(q_valid.astype(jnp.int32))
     in_specs.append(pl.BlockSpec(memory_space=pltpu.SMEM))
     inputs.append(measure_sel.astype(jnp.int32))
     in_specs.append(pl.BlockSpec(memory_space=pltpu.SMEM))
-    blocked = pl.BlockSpec((tile,), lambda i: (i,))
-    for c in pred_cols:
-        inputs.append(pad_to_tile(c, tile, 0))
-        in_specs.append(blocked)
-    for c in join_keys:
-        inputs.append(pad_to_tile(c, tile, 0))
-        in_specs.append(blocked)
+
+    def add_stream(arr, width):
+        padded, blk = pad_stream_to_grid(arr, width, tile, npad // tile)
+        inputs.append(padded)
+        in_specs.append(pl.BlockSpec((blk,), lambda i: (i,)))
+
+    for c, w in zip(pred_cols, pred_widths):
+        add_stream(c, w)
+    for c, w in zip(join_keys, key_widths):
+        add_stream(c, w)
     for t in join_tables:
         inputs.append(t)
         in_specs.append(pl.BlockSpec(memory_space=pl.ANY))
-    for m in measure_cols:
-        inputs.append(pad_to_tile(m.astype(jnp.float32), tile, 0))
-        in_specs.append(blocked)
+    for m, w in zip(measure_cols, m_widths):
+        add_stream(m if w != 32 else m.astype(jnp.float32), w)
 
-    npad = pad_to_tile(measure_cols[0], tile, 0).shape[0]
     out = pl.pallas_call(
-        _make_kernel(Q, C, J, M, n_groups, tile),
+        _make_kernel(Q, C, J, M, n_groups, tile,
+                     pred_widths, key_widths, m_widths),
         grid=(npad // tile,),
         in_specs=in_specs,
         out_specs=pl.BlockSpec(memory_space=pl.ANY),

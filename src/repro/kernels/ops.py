@@ -11,7 +11,6 @@ these; ``mode`` is usually left as "auto":
 from __future__ import annotations
 
 import functools
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp
@@ -23,7 +22,8 @@ from repro.kernels import project as _proj
 from repro.kernels import radix_part as _radix
 from repro.kernels import ref as _ref
 from repro.kernels import select_scan as _sel
-from repro.kernels.common import DEFAULT_TILE
+from repro.kernels import unpack as _unp
+from repro.kernels.common import DEFAULT_TILE, decode_words, gather_decode
 
 
 def _use_kernel(mode: str) -> bool:
@@ -39,6 +39,58 @@ def select_scan(x, y, lo, hi, mode: str = "auto", tile: int = DEFAULT_TILE):
         out, cnt = _sel.select_scan(x, y, lo, hi, tile=tile)
         return out[:x.shape[0]], cnt
     return _ref.select_scan(x, y, lo, hi)
+
+
+# ---------------------------------------------------------------------------
+# compressed-storage decode primitives (layout: repro.sql.storage)
+# ---------------------------------------------------------------------------
+
+
+_unpack_ref_jit = functools.partial(
+    jax.jit, static_argnames=("n", "phys"))(_ref.unpack)
+
+
+def unpack(words, n: int, phys: int, ref=0, mode: str = "auto",
+           tile: int = DEFAULT_TILE):
+    """Materializing bit-unpack: ``(n_words,)`` packed int32 words at
+    ``phys`` bits/value -> first ``n`` decoded int32 values (+ ref).
+    The hot scan paths decode in-kernel instead; this is the standalone
+    primitive (host paths, tests, the in-register decode's oracle)."""
+    if phys == 32:
+        return words[:n] + jnp.int32(ref)
+    if _use_kernel(mode):
+        return _unp.unpack(words, jnp.int32(ref), phys, tile=tile)[:n]
+    return _unpack_ref_jit(words, n, phys, jnp.int32(ref))
+
+
+@functools.partial(jax.jit, static_argnames=("phys",))
+def _select_packed_ref_jit(words, y, lo, hi, *, phys):
+    x = decode_words(words, phys)[:y.shape[0]]
+    return _ref.select_scan(x, y, lo, hi)
+
+
+def select_scan_packed(words, y, lo, hi, phys: int, mode: str = "auto",
+                       tile: int = DEFAULT_TILE):
+    """``select_scan`` over a bit-packed predicate column: the word
+    stream decodes per tile in registers, and ``(lo, hi)`` are already
+    rewritten into the encoded domain (``storage.encoded_bounds``) so
+    filtering needs no reference correction at all."""
+    if phys == 32:
+        return select_scan(words, y, lo, hi, mode=mode, tile=tile)
+    if _use_kernel(mode):
+        out, cnt = _sel.select_scan_packed(words, y, lo, hi, phys,
+                                           tile=tile)
+        return out[:y.shape[0]], cnt
+    return _select_packed_ref_jit(words, y, lo, hi, phys=phys)
+
+
+def _decode_stream(arr, width: int, ref, n: int):
+    """Ref-path stream normalizer: identity for plain streams, in-trace
+    decode (fused by XLA with the consuming scan, never materialized
+    between ops) for packed ones."""
+    if width == 32:
+        return arr
+    return decode_words(arr, width, ref)[:n]
 
 
 def project(x1, x2, a, b, sigmoid=False, mode: str = "auto",
@@ -130,14 +182,21 @@ def _lsb_partition_multi(keys, vals, bits: int):
     return keys[idx], tuple(v[idx] for v in vals)
 
 
-@functools.partial(jax.jit, static_argnames=("bits", "kernel", "tile"))
-def _part_join_jit(col, rowids, groups, htk, htv, mult, *, bits: int,
-                   kernel: bool, tile: int):
+@functools.partial(jax.jit, static_argnames=("bits", "kernel", "tile",
+                                             "width"))
+def _part_join_jit(col, rowids, groups, htk, htv, mult, ref, *, bits: int,
+                   kernel: bool, tile: int, width: int):
     """The whole partitioned join step traced as ONE executable:
-    FK-column gather -> multi-payload radix shuffle -> device-side
-    boundary histogram -> fused single-launch probe.  No host round-trip
-    anywhere inside."""
-    keys = col[jnp.clip(rowids, 0, col.shape[0] - 1)]
+    FK-column gather (+ in-register bit-unpack when the column is
+    packed) -> multi-payload radix shuffle -> device-side boundary
+    histogram -> fused single-launch probe.  No host round-trip anywhere
+    inside."""
+    if width == 32:
+        keys = col[jnp.clip(rowids, 0, col.shape[0] - 1)]
+    else:
+        n_vals = col.shape[0] * (32 // width)
+        keys = gather_decode(col, jnp.clip(rowids, 0, n_vals - 1),
+                             width, ref)
     if kernel:
         outk, (orow, ogrp) = _radix.partition_multi(
             keys, (rowids, groups), 0, bits, tile=tile)
@@ -159,13 +218,19 @@ def _part_join_jit(col, rowids, groups, htk, htv, mult, *, bits: int,
 
 
 def part_join(col, rowids, groups, htk, htv, mult, bits: int,
-              mode: str = "auto", tile: int = DEFAULT_TILE):
+              mode: str = "auto", tile: int = DEFAULT_TILE,
+              width: int = 32, ref=0):
     """Fused radix-partitioned join: gather the live rows' FK keys from
     ``col``, partition them by the key's low ``bits`` bits (rowid +
     running group id ride the shuffle), then probe every partition
     against its packed ``(P, S)`` table in a single kernel launch.
     Returns stable partition-major (out_rowids,
     out_groups(+payload*mult), count).
+
+    ``col`` may be a bit-packed word stream (``width != 32``, frame of
+    reference ``ref``): the FK gather then touches only the words the
+    live rows reference and decodes in registers inside the same
+    executable.
 
     The probe side is pow2-padded BEFORE the shuffle so XLA compiles
     O(log n) shapes across query cardinalities; pad rows carry
@@ -179,8 +244,9 @@ def part_join(col, rowids, groups, htk, htv, mult, bits: int,
     rowids = jnp.pad(rowids, (0, n_pad - n), constant_values=-1)
     groups = jnp.pad(groups, (0, n_pad - n))
     return _part_join_jit(col, rowids, groups, htk, htv,
-                          jnp.asarray(mult, jnp.int32), bits=bits,
-                          kernel=_use_kernel(mode), tile=tile)
+                          jnp.asarray(mult, jnp.int32),
+                          jnp.asarray(ref, jnp.int32), bits=bits,
+                          kernel=_use_kernel(mode), tile=tile, width=width)
 
 
 def radix_sort(keys, vals, mode: str = "auto", r: int = 8,
@@ -222,41 +288,132 @@ def group_sum(group_ids, vals, n_groups, mode: str = "auto",
     return _ref.group_sum(group_ids, vals, n_groups)
 
 
-# one jitted executable per wave *shape* (Q, C, J, M, n_groups, n): the
-# member queries themselves are data (stacked SMEM-style parameter
+# one jitted executable per wave *shape* (Q, C, J, M, n_groups, n, widths):
+# the member queries themselves are data (stacked SMEM-style parameter
 # arrays), so re-running a wave of any composition over the same unions
-# hits the trace cache — the multi-query analogue of _part_probe_ref_jit
-_multi_spja_ref_jit = functools.partial(
-    jax.jit, static_argnames=("n_groups",))(_ref.multi_spja)
+# hits the trace cache — the multi-query analogue of _part_probe_ref_jit.
+# Packed streams decode inside the trace, fused with the scan by XLA.
+@functools.partial(jax.jit,
+                   static_argnames=("n_groups", "pred_widths", "key_widths",
+                                    "m_widths", "n_rows"))
+def _multi_spja_ref_jit(pred_cols, pred_bounds, join_keys, key_refs,
+                        join_tables, join_mults, join_use, q_valid,
+                        measure_cols, m_refs, measure_sel, *, n_groups,
+                        pred_widths, key_widths, m_widths, n_rows):
+    pred_cols = tuple(_decode_stream(c, w, 0, n_rows)
+                      for c, w in zip(pred_cols, pred_widths))
+    join_keys = tuple(
+        _decode_stream(k, w, key_refs[j] if w != 32 else 0, n_rows)
+        for j, (k, w) in enumerate(zip(join_keys, key_widths)))
+    measure_cols = tuple(
+        (m if w == 32 else
+         _decode_stream(m, w, m_refs[i], n_rows)).astype(jnp.float32)
+        for i, (m, w) in enumerate(zip(measure_cols, m_widths)))
+    return _ref.multi_spja(pred_cols, pred_bounds, join_keys, join_tables,
+                           join_mults, join_use, q_valid, measure_cols,
+                           measure_sel, n_groups=n_groups)
 
 
 def multi_spja(pred_cols, pred_bounds, join_keys, join_tables, join_mults,
                join_use, q_valid, measure_cols, measure_sel, n_groups=1,
-               mode: str = "auto", tile: int = DEFAULT_TILE):
+               mode: str = "auto", tile: int = DEFAULT_TILE,
+               pred_widths=None, key_widths=None, key_refs=None,
+               m_widths=None, m_refs=None, n_rows=None):
     """Whole-wave shared-scan SPJA: Q stacked queries, one fact pass.
     Argument semantics documented on ``repro.kernels.ref.multi_spja``
-    (the oracle); returns (Q, n_groups) f32."""
+    (the oracle); returns (Q, n_groups) f32.  Streams may be bit-packed
+    (``*_widths[i] != 32``) per ``repro.sql.storage``'s layout."""
+    pred_widths = tuple(pred_widths or (32,) * len(pred_cols))
+    key_widths = tuple(key_widths or (32,) * len(join_keys))
+    m_widths = tuple(m_widths or (32,) * len(measure_cols))
+    if key_refs is None:
+        key_refs = jnp.zeros((len(join_keys),), jnp.int32)
+    if m_refs is None:
+        m_refs = jnp.zeros((len(measure_cols),), jnp.int32)
+    if n_rows is None:
+        if m_widths and m_widths[0] != 32:
+            # a packed measure's length is the WORD count, not the row
+            # count — guessing would silently scan a fraction of the rows
+            raise ValueError("n_rows is required when the measure stream "
+                             "is bit-packed")
+        n_rows = int(measure_cols[0].shape[0])
     if _use_kernel(mode):
         from repro.kernels import multi_fused
         return multi_fused.multi_spja(
             tuple(pred_cols), pred_bounds, tuple(join_keys),
             tuple(join_tables), join_mults, join_use, q_valid,
-            tuple(measure_cols), measure_sel, n_groups=n_groups, tile=tile)
+            tuple(measure_cols), measure_sel, n_groups=n_groups, tile=tile,
+            pred_widths=pred_widths, key_widths=key_widths,
+            key_refs=key_refs, m_widths=m_widths, m_refs=m_refs,
+            n_rows=n_rows)
     return _multi_spja_ref_jit(
-        tuple(pred_cols), pred_bounds, tuple(join_keys),
+        tuple(pred_cols), pred_bounds, tuple(join_keys), key_refs,
         tuple(join_tables), join_mults, join_use, q_valid,
-        tuple(measure_cols), measure_sel, n_groups=n_groups)
+        tuple(measure_cols), m_refs, measure_sel, n_groups=n_groups,
+        pred_widths=pred_widths, key_widths=key_widths, m_widths=m_widths,
+        n_rows=n_rows)
+
+
+# the whole single-query SPJA ref path under jit: eagerly, every probe's
+# while_loop iteration used to dispatch separately; one cached
+# executable per (shapes, widths, measure_op, n_groups) combination —
+# and for packed streams the in-trace decode fuses with the scan instead
+# of materializing a full-width column between ops
+@functools.partial(jax.jit,
+                   static_argnames=("measure_op", "n_groups", "pred_widths",
+                                    "key_widths", "m_widths", "n_rows"))
+def _spja_ref_jit(pred_cols, pred_bounds, join_keys, key_refs, join_tables,
+                  group_mults, m1, m2, m_refs, *, measure_op, n_groups,
+                  pred_widths, key_widths, m_widths, n_rows):
+    pred_cols = tuple(_decode_stream(c, w, 0, n_rows)
+                      for c, w in zip(pred_cols, pred_widths))
+    join_keys = tuple(
+        _decode_stream(k, w, key_refs[j] if w != 32 else 0, n_rows)
+        for j, (k, w) in enumerate(zip(join_keys, key_widths)))
+    if m_widths[0] != 32:
+        m1 = _decode_stream(m1, m_widths[0], m_refs[0],
+                            n_rows).astype(jnp.float32)
+    if m2 is not None and m_widths[1] != 32:
+        m2 = _decode_stream(m2, m_widths[1], m_refs[1],
+                            n_rows).astype(jnp.float32)
+    return _ref.spja(pred_cols, pred_bounds, join_keys, join_tables,
+                     group_mults, m1, m2, measure_op=measure_op,
+                     n_groups=n_groups)
 
 
 def spja(pred_cols, pred_bounds, join_keys, join_tables, group_mults,
          m1, m2=None, measure_op="first", n_groups=1, mode: str = "auto",
-         tile: int = DEFAULT_TILE):
+         tile: int = DEFAULT_TILE, pred_widths=None, key_widths=None,
+         key_refs=None, m_widths=None, m_refs=None, n_rows=None):
+    n_meas = 2 if measure_op in ("mul", "sub") else 1
+    if n_meas == 1:
+        m2 = None                   # accept-and-ignore: "first" reads m1 only
+    pred_widths = tuple(pred_widths or (32,) * len(pred_cols))
+    key_widths = tuple(key_widths or (32,) * len(join_keys))
+    m_widths = tuple(m_widths or (32,) * n_meas)
+    if key_refs is None:
+        key_refs = jnp.zeros((len(join_keys),), jnp.int32)
+    if m_refs is None:
+        m_refs = jnp.zeros((n_meas,), jnp.int32)
+    if n_rows is None:
+        if m_widths[0] != 32:
+            # a packed measure's length is the WORD count, not the row
+            # count — guessing would silently scan a fraction of the rows
+            raise ValueError("n_rows is required when the measure stream "
+                             "is bit-packed")
+        n_rows = int(m1.shape[0])
     if _use_kernel(mode):
         from repro.kernels import ssb_fused
         return ssb_fused.spja(tuple(pred_cols), pred_bounds,
                               tuple(join_keys), tuple(join_tables),
                               group_mults, m1, m2, measure_op=measure_op,
-                              n_groups=n_groups, tile=tile)
-    return _ref.spja(pred_cols, pred_bounds, join_keys, join_tables,
-                     group_mults, m1, m2, measure_op=measure_op,
-                     n_groups=n_groups)
+                              n_groups=n_groups, tile=tile,
+                              pred_widths=pred_widths,
+                              key_widths=key_widths, key_refs=key_refs,
+                              m_widths=m_widths, m_refs=m_refs,
+                              n_rows=n_rows)
+    return _spja_ref_jit(tuple(pred_cols), pred_bounds, tuple(join_keys),
+                         key_refs, tuple(join_tables), group_mults, m1, m2,
+                         m_refs, measure_op=measure_op, n_groups=n_groups,
+                         pred_widths=pred_widths, key_widths=key_widths,
+                         m_widths=m_widths, n_rows=n_rows)

@@ -11,7 +11,6 @@ saturates memory bandwidth — the paper's model: t = (2 reads + 1 write) x
 from __future__ import annotations
 
 import functools
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp

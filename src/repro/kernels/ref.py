@@ -12,6 +12,14 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import blocks as B
+from repro.kernels.common import decode_words
+
+
+def unpack(words: jax.Array, n: int, phys: int, ref=0) -> jax.Array:
+    """Bit-unpack oracle: first ``n`` values of a packed word stream at
+    ``phys`` bits per value, plus the frame of reference (semantics owned
+    by ``repro.sql.storage``; this is the device-side inverse)."""
+    return decode_words(words, phys, ref)[:n]
 
 
 def select_scan(x: jax.Array, y: jax.Array, lo, hi

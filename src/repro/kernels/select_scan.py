@@ -20,7 +20,8 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.core import blocks as B
-from repro.kernels.common import DEFAULT_TILE, INTERPRET, valid_mask
+from repro.kernels.common import DEFAULT_TILE, INTERPRET, decode_words, \
+    pad_to_tile, valid_mask, words_per_block
 
 
 def _select_kernel(bounds_ref, n_ref, x_ref, y_ref, out_ref, cnt_ref,
@@ -55,7 +56,6 @@ def select_scan(x: jax.Array, y: jax.Array, lo, hi,
     padded to len(x)+tile, valid entries are out[:count] (stable order)."""
     interpret = INTERPRET if interpret is None else interpret
     n = x.shape[0]
-    from repro.kernels.common import pad_to_tile
     xp = pad_to_tile(x, tile, 0)
     yp = pad_to_tile(y, tile, 0)
     npad = xp.shape[0]
@@ -131,7 +131,6 @@ def select_scan_sparse(x: jax.Array, y: jax.Array, lo, hi,
     select kernel over just those tiles via scalar-prefetch indirection,
     so the payload column is only read where needed."""
     interpret = INTERPRET if interpret is None else interpret
-    from repro.kernels.common import pad_to_tile
     n = x.shape[0]
     xp = pad_to_tile(x, tile, 0)
     yp = pad_to_tile(y, tile, 0)
@@ -177,4 +176,79 @@ def select_scan_sparse(x: jax.Array, y: jax.Array, lo, hi,
         ],
         interpret=interpret,
     )(tids, bounds, nv, xp, yp)
+    return out, cnt[0]
+
+
+# ---------------------------------------------------------------------------
+# packed variant: decode-on-scan over the compressed word stream
+# ---------------------------------------------------------------------------
+
+
+def _select_packed_kernel(bounds_ref, n_ref, w_ref, y_ref, out_ref,
+                          cnt_ref, off_ref, *, phys: int, tile: int):
+    """Same pipeline as ``_select_kernel`` but the predicate column
+    arrives as ``tile * phys / 32`` packed words per grid step and is
+    shift/mask-decoded in registers (``common.decode_words``) — the HBM
+    side only ever moves encoded bytes.  ``bounds`` are already
+    rewritten into the encoded domain by the lowering
+    (``storage.encoded_bounds``), so no reference correction happens
+    here at all."""
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        off_ref[0] = 0
+
+    x = decode_words(w_ref[...], phys)
+    y = y_ref[...]
+    lo, hi = bounds_ref[0], bounds_ref[1]
+    bitmap = B.block_pred_range(x, lo, hi) * valid_mask(tile, n_ref[0])
+    offsets, total = B.block_scan(bitmap)
+    comp = B.block_shuffle(y, bitmap, offsets)
+    base = off_ref[0]
+    out_ref[pl.ds(base, tile)] = comp
+    off_ref[0] = base + total
+
+    @pl.when(i == pl.num_programs(0) - 1)
+    def _fin():
+        cnt_ref[0] = off_ref[0]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("phys", "tile", "interpret"))
+def select_scan_packed(words: jax.Array, y: jax.Array, lo, hi,
+                       phys: int, tile: int = DEFAULT_TILE,
+                       interpret: bool | None = None
+                       ) -> Tuple[jax.Array, jax.Array]:
+    """SELECT y WHERE lo <= decode(x) <= hi over a bit-packed predicate
+    column (``phys`` bits per value, bounds in the encoded domain).
+    Same contract as :func:`select_scan`: (out, count), stable order,
+    valid entries ``out[:count]``."""
+    interpret = INTERPRET if interpret is None else interpret
+    n = y.shape[0]
+    yp = pad_to_tile(y, tile, 0)
+    npad = yp.shape[0]
+    wp = pad_to_tile(words, words_per_block(tile, phys), 0)
+    bounds = jnp.array([lo, hi], jnp.int32)
+    nv = jnp.array([n], jnp.int32)
+    out, cnt = pl.pallas_call(
+        functools.partial(_select_packed_kernel, phys=phys, tile=tile),
+        grid=(npad // tile,),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((words_per_block(tile, phys),), lambda i: (i,)),
+            pl.BlockSpec((tile,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec(memory_space=pl.ANY),
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((npad + tile,), y.dtype),
+            jax.ShapeDtypeStruct((1,), jnp.int32),
+        ],
+        scratch_shapes=[pltpu.SMEM((1,), jnp.int32)],
+        interpret=interpret,
+    )(bounds, nv, wp, yp)
     return out, cnt[0]

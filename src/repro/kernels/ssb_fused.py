@@ -17,7 +17,7 @@ Static shape of a query:
 from __future__ import annotations
 
 import functools
-from typing import Sequence, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp
@@ -25,12 +25,26 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.core import blocks as B
-from repro.kernels.common import DEFAULT_TILE, INTERPRET, pad_to_tile, \
-    valid_mask
+from repro.kernels.common import DEFAULT_TILE, INTERPRET, decode_words, \
+    pad_stream_to_grid, valid_mask
 
 
 def _make_kernel(n_preds: int, n_joins: int, measure_op: str,
-                 n_groups: int, tile: int):
+                 n_groups: int, tile: int,
+                 pred_widths: Tuple[int, ...],
+                 key_widths: Tuple[int, ...],
+                 m_widths: Tuple[int, ...]):
+    """Width 32 marks a plain stream; anything smaller arrives as a
+    bit-packed word block (``tile * w / 32`` words per grid step) and is
+    shift/mask-decoded in registers — the decoded tile never exists in
+    HBM.  Packed join keys / measures carry a frame-of-reference scalar
+    in SMEM (``krefs``/``mrefs``); packed predicate columns need none —
+    their bounds are rewritten into the encoded domain at lowering time.
+    """
+    has_kref = any(w != 32 for w in key_widths)
+    has_mref = any(w != 32 for w in m_widths)
+    n_meas = len(m_widths)
+
     def kernel(*refs):
         idx = 0
         n_ref = refs[idx]; idx += 1
@@ -38,12 +52,14 @@ def _make_kernel(n_preds: int, n_joins: int, measure_op: str,
         idx += 1 if n_preds else 0
         mults_ref = refs[idx] if n_joins else None
         idx += 1 if n_joins else 0
+        krefs_ref = refs[idx] if has_kref else None
+        idx += 1 if has_kref else 0
+        mrefs_ref = refs[idx] if has_mref else None
+        idx += 1 if has_mref else 0
         pred_refs = refs[idx:idx + n_preds]; idx += n_preds
         key_refs = refs[idx:idx + n_joins]; idx += n_joins
         ht_refs = refs[idx:idx + 2 * n_joins]; idx += 2 * n_joins
-        m1_ref = refs[idx]; idx += 1
-        m2_ref = refs[idx] if measure_op in ("mul", "sub") else None
-        idx += 1 if measure_op in ("mul", "sub") else 0
+        m_refs = refs[idx:idx + n_meas]; idx += n_meas
         out_ref = refs[idx]; idx += 1
         acc_ref = refs[idx]
 
@@ -54,25 +70,34 @@ def _make_kernel(n_preds: int, n_joins: int, measure_op: str,
             acc_ref[...] = jnp.zeros((n_groups,), jnp.float32)
 
         bitmap = valid_mask(tile, n_ref[0])
-        # --- selections on fact columns ---
+        # --- selections on fact columns (packed: compare raw encoded
+        # lanes against the pre-rewritten bounds) ---
         for p in range(n_preds):
-            col = pred_refs[p][...]
+            col = decode_words(pred_refs[p][...], pred_widths[p])
             bitmap = bitmap * B.block_pred_range(
                 col, bounds_ref[p, 0], bounds_ref[p, 1])
         # --- pipelined hash probes (selective joins) ---
         group = jnp.zeros((tile,), jnp.int32)
         for j in range(n_joins):
-            keys = key_refs[j][...]
+            keys = decode_words(key_refs[j][...], key_widths[j],
+                                krefs_ref[j] if key_widths[j] != 32 else 0)
             payload, found = B.block_lookup(keys, ht_refs[2 * j][...],
                                             ht_refs[2 * j + 1][...])
             bitmap = bitmap * found
             group = group + payload * mults_ref[j]
+
         # --- measure + group aggregate ---
-        m = m1_ref[...].astype(jnp.float32)
+        def measure(k):
+            if m_widths[k] == 32:               # plain stream, already f32
+                return m_refs[k][...].astype(jnp.float32)
+            return decode_words(m_refs[k][...], m_widths[k],
+                                mrefs_ref[k]).astype(jnp.float32)
+
+        m = measure(0)
         if measure_op == "mul":
-            m = m * m2_ref[...].astype(jnp.float32)
+            m = m * measure(1)
         elif measure_op == "sub":
-            m = m - m2_ref[...].astype(jnp.float32)
+            m = m - measure(1)
         acc_ref[...] = acc_ref[...] + B.block_group_aggregate(
             group, m, bitmap, n_groups)
 
@@ -84,7 +109,9 @@ def _make_kernel(n_preds: int, n_joins: int, measure_op: str,
 
 
 @functools.partial(
-    jax.jit, static_argnames=("measure_op", "n_groups", "tile", "interpret"))
+    jax.jit, static_argnames=("measure_op", "n_groups", "tile", "interpret",
+                              "pred_widths", "key_widths", "m_widths",
+                              "n_rows"))
 def spja(pred_cols: Tuple[jax.Array, ...],
          pred_bounds: jax.Array,             # (n_preds, 2) int32
          join_keys: Tuple[jax.Array, ...],   # fact FK columns
@@ -94,13 +121,31 @@ def spja(pred_cols: Tuple[jax.Array, ...],
          measure_op: str = "first",          # first | mul | sub
          n_groups: int = 1,
          tile: int = DEFAULT_TILE,
-         interpret: bool | None = None) -> jax.Array:
+         interpret: bool | None = None,
+         pred_widths: Tuple[int, ...] | None = None,
+         key_widths: Tuple[int, ...] | None = None,
+         key_refs: jax.Array | None = None,  # (n_joins,) int32 FOR refs
+         m_widths: Tuple[int, ...] | None = None,
+         m_refs: jax.Array | None = None,    # (n_meas,) int32 FOR refs
+         n_rows: int | None = None) -> jax.Array:
     """Run a full SPJA query in one fused kernel.  Returns (n_groups,) f32
-    per-group sums (group 0 holds the scalar for ungrouped queries)."""
+    per-group sums (group 0 holds the scalar for ungrouped queries).
+
+    Any stream may be bit-packed (``*_widths[i] != 32``): it is then the
+    packed int32 word array from ``repro.sql.storage`` and is decoded in
+    registers per tile.  Packed bounds must already be in the encoded
+    domain; packed keys/measures decode against the SMEM-resident
+    ``key_refs``/``m_refs`` references.  ``n_rows`` is required when the
+    measure stream is packed (the row count is no longer its length)."""
     interpret = INTERPRET if interpret is None else interpret
     n_preds = len(pred_cols)
     n_joins = len(join_keys)
-    n = m1.shape[0]
+    n_meas = 2 if measure_op in ("mul", "sub") else 1
+    pred_widths = pred_widths or (32,) * n_preds
+    key_widths = key_widths or (32,) * n_joins
+    m_widths = m_widths or (32,) * n_meas
+    n = m1.shape[0] if n_rows is None else n_rows
+    npad = -(-n // tile) * tile
 
     inputs = [jnp.array([n], jnp.int32)]
     in_specs = [pl.BlockSpec(memory_space=pltpu.SMEM)]
@@ -110,27 +155,33 @@ def spja(pred_cols: Tuple[jax.Array, ...],
     if n_joins:
         inputs.append(group_mults.astype(jnp.int32))
         in_specs.append(pl.BlockSpec(memory_space=pltpu.SMEM))
-    blocked = pl.BlockSpec((tile,), lambda i: (i,))
-    for c in pred_cols:
-        inputs.append(pad_to_tile(c, tile, 0))
-        in_specs.append(blocked)
-    for c in join_keys:
-        inputs.append(pad_to_tile(c, tile, 0))
-        in_specs.append(blocked)
+    if any(w != 32 for w in key_widths):
+        inputs.append(key_refs.astype(jnp.int32))
+        in_specs.append(pl.BlockSpec(memory_space=pltpu.SMEM))
+    if any(w != 32 for w in m_widths):
+        inputs.append(m_refs.astype(jnp.int32))
+        in_specs.append(pl.BlockSpec(memory_space=pltpu.SMEM))
+
+    def add_stream(arr, width):
+        padded, blk = pad_stream_to_grid(arr, width, tile, npad // tile)
+        inputs.append(padded)
+        in_specs.append(pl.BlockSpec((blk,), lambda i: (i,)))
+
+    for c, w in zip(pred_cols, pred_widths):
+        add_stream(c, w)
+    for c, w in zip(join_keys, key_widths):
+        add_stream(c, w)
     for t in join_tables:
         inputs.append(t)
         in_specs.append(pl.BlockSpec(memory_space=pl.ANY))
-    inputs.append(pad_to_tile(m1, tile, 0))
-    in_specs.append(blocked)
-    if measure_op in ("mul", "sub"):
+    add_stream(m1, m_widths[0])
+    if n_meas == 2:
         assert m2 is not None
-        inputs.append(pad_to_tile(m2, tile, 0))
-        in_specs.append(blocked)
+        add_stream(m2, m_widths[1])
 
-    npad = inputs[-1].shape[0] if measure_op in ("mul", "sub") else \
-        pad_to_tile(m1, tile, 0).shape[0]
     out = pl.pallas_call(
-        _make_kernel(n_preds, n_joins, measure_op, n_groups, tile),
+        _make_kernel(n_preds, n_joins, measure_op, n_groups, tile,
+                     pred_widths, key_widths, m_widths),
         grid=(npad // tile,),
         in_specs=in_specs,
         out_specs=pl.BlockSpec(memory_space=pl.ANY),

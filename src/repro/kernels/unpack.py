@@ -1,0 +1,53 @@
+"""Bit-unpack kernel: packed word stream -> decoded int32 column.
+
+The materializing decode primitive of the compressed storage layer
+(``repro.sql.storage``): one grid step DMAs ``tile * phys / 32`` packed
+words into VMEM, shift/mask-decodes them in registers
+(``common.decode_words``) and stores the ``tile`` decoded values.  The
+hot scan paths never call this — ``ssb_fused``/``multi_fused``/
+``select_scan`` decode inside their own tiles instead — it exists for
+host paths that genuinely need the materialized column and as the
+kernel-level oracle of the in-register decode.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.common import DEFAULT_TILE, INTERPRET, decode_words, \
+    pad_to_tile, words_per_block
+
+
+def _unpack_kernel(ref_ref, w_ref, out_ref, *, phys: int, tile: int):
+    out_ref[...] = decode_words(w_ref[...], phys, ref_ref[0])
+
+
+@functools.partial(jax.jit, static_argnames=("phys", "tile", "interpret"))
+def unpack(words: jax.Array, ref: jax.Array, phys: int,
+           tile: int = DEFAULT_TILE,
+           interpret: bool | None = None) -> jax.Array:
+    """Decode a packed column: ``(n_words,)`` int32 words at ``phys``
+    bits per value -> ``(n_words_padded * 32/phys,)`` int32 values
+    (+ ref).  Callers slice to the logical row count."""
+    interpret = INTERPRET if interpret is None else interpret
+    if phys == 32:
+        return words + jnp.int32(ref)
+    wpb = words_per_block(tile, phys)
+    wp = pad_to_tile(words, wpb, 0)
+    n_blocks = wp.shape[0] // wpb
+    out = pl.pallas_call(
+        functools.partial(_unpack_kernel, phys=phys, tile=tile),
+        grid=(n_blocks,),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((wpb,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((tile,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n_blocks * tile,), jnp.int32),
+        interpret=interpret,
+    )(jnp.asarray([ref], jnp.int32), wp)
+    return out

@@ -311,7 +311,6 @@ def analyze_computation(name: str, comps: Dict[str, Computation],
             cost.bytes_lb += b + inst.result_bytes
             continue
         if op == "while":
-            body = _ATTR_CALLS.findall(inst.attrs)
             body_name = None
             cond_name = None
             mb = re.search(r"body=%([\w.\-]+)", inst.attrs)

@@ -9,13 +9,12 @@ No device memory is allocated anywhere in this module.
 """
 from __future__ import annotations
 
-from typing import Any, Callable, Dict, Tuple
+from typing import Any, Callable, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import (ModelConfig, ShapeConfig, SHAPES,
-                                cell_is_runnable, get_config)
+from repro.configs.base import ModelConfig, ShapeConfig, cell_is_runnable
 from repro.models import api
 from repro.train.optim import AdamWConfig, init_opt_state
 from repro.train.step import make_decode_step, make_prefill_step, \

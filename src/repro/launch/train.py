@@ -15,10 +15,8 @@ checkpoint (data cursor = step, so the stream continues exactly).
 from __future__ import annotations
 
 import argparse
-import time
 
 import jax
-import jax.numpy as jnp
 
 from repro.checkpoint.manager import CheckpointManager
 from repro.configs.base import ARCH_IDS, get_config, smoke_config

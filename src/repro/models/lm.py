@@ -10,7 +10,6 @@ Three entry points per family:
 from __future__ import annotations
 
 import math
-from functools import partial
 from typing import Any, Dict, Optional, Tuple
 
 import jax

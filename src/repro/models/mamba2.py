@@ -16,7 +16,7 @@ state size N per head, G B/C groups (G=1 here).
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Tuple
+from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp

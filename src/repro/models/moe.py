@@ -18,7 +18,7 @@ manual form needs one (B_loc,S,d) psum per layer.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp

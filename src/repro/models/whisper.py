@@ -7,7 +7,7 @@ position table whose size would depend on the lowered sequence length).
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -152,7 +152,6 @@ def prefill(params: Params, cfg: ModelConfig, tokens: jax.Array,
 def decode_step(params: Params, cfg: ModelConfig, cache: Params,
                 tokens: jax.Array, pos: jax.Array) -> Tuple[jax.Array, Params]:
     """One-token serve_step with cached self-KV + cross-KV."""
-    b = tokens.shape[0]
     h = params["embed"][tokens].astype(jnp.dtype(cfg.compute_dtype))
     h = h + L.sinusoid_at(pos, cfg.d_model).astype(h.dtype)[None, None, :]
 

@@ -76,6 +76,7 @@ from repro.kernels.common import DEFAULT_TILE
 from repro.sql import hashtable as HT
 from repro.sql import plan as P
 from repro.sql import ssb
+from repro.sql import storage as ST
 
 STRATEGIES = ("fused", "opat", "part", "part_loop", "shared", "auto")
 
@@ -173,16 +174,49 @@ def partability(plan: P.Plan) -> Optional[str]:
 # ---------------------------------------------------------------------------
 
 
+def _rewritten_bounds(fact, bounds) -> np.ndarray:
+    """(n_preds, 2) int32 predicate bounds, rewritten into the encoded
+    domain for packed columns (``storage.encoded_bounds``) — the
+    compile-time predicate rewrite: the kernels then compare raw
+    unpacked lanes and never touch the frame of reference."""
+    out = np.empty((len(bounds), 2), np.int32)
+    for p, (col, lo, hi) in enumerate(bounds):
+        out[p] = ST.encoded_bounds(ST.encoding_of(fact, col), lo, hi)
+    return out
+
+
+def _measure_streams(fact, proj):
+    """The measure inputs as the kernels consume them: the packed word
+    stream for an encoded column, the f32-cast plain column otherwise.
+    Returns (m1, m2, m_widths, m_refs).  Stream count follows the
+    measure *op*, matching the kernels' accounting — an m2 on an
+    op="first" projection is ignored (never loaded), as it always was
+    on the plain path."""
+    streams = [ST.column_stream(fact, c)
+               for c in ([proj.m1] if proj.op not in ("mul", "sub")
+                         else [proj.m1, proj.m2])]
+    arrs = [arr if w != 32 else arr.astype(jnp.float32)
+            for arr, w, _ in streams]
+    m1 = arrs[0]
+    m2 = arrs[1] if len(arrs) == 2 else None
+    widths = tuple(w for _, w, _ in streams)
+    refs = jnp.asarray(np.array([r for _, _, r in streams], np.int32))
+    return m1, m2, widths, refs
+
+
 def _execute_fused(plan: P.Plan, db: ssb.Database, mode: str, tile: int,
                    cache: Optional[HT.HashTableCache]) -> np.ndarray:
     fact = getattr(db, plan.scan.table)
     bounds = plan.preds           # fusability guarantees the range view
-    pred_cols = [jnp.asarray(fact[c]) for c, _, _ in bounds]
-    pred_bounds = jnp.asarray(
-        np.array([[lo, hi] for _, lo, hi in bounds], np.int32).reshape(
-            len(bounds), 2))
+    pred_streams = [ST.column_stream(fact, c) for c, _, _ in bounds]
+    pred_cols = [s[0] for s in pred_streams]
+    pred_widths = tuple(s[1] for s in pred_streams)
+    pred_bounds = jnp.asarray(_rewritten_bounds(fact, bounds))
     joins = plan.joins
-    join_keys = [jnp.asarray(fact[j.fact_col]) for j in joins]
+    key_streams = [ST.column_stream(fact, j.fact_col) for j in joins]
+    join_keys = [s[0] for s in key_streams]
+    key_widths = tuple(s[1] for s in key_streams)
+    key_refs = jnp.asarray(np.array([s[2] for s in key_streams], np.int32))
     join_tables: List[jnp.ndarray] = []
     for j in joins:
         htk, htv = (cache.get_or_build(db, j) if cache is not None
@@ -190,12 +224,12 @@ def _execute_fused(plan: P.Plan, db: ssb.Database, mode: str, tile: int,
         join_tables.extend([htk, htv])
     mults = jnp.asarray(np.array([j.mult for j in joins], np.int32))
     proj = plan.project
-    m1 = jnp.asarray(fact[proj.m1]).astype(jnp.float32)
-    m2 = None if proj.m2 is None else \
-        jnp.asarray(fact[proj.m2]).astype(jnp.float32)
+    m1, m2, m_widths, m_refs = _measure_streams(fact, proj)
     out = ops.spja(pred_cols, pred_bounds, join_keys, join_tables, mults,
                    m1, m2, measure_op=proj.op, n_groups=plan.n_groups,
-                   mode=mode, tile=tile)
+                   mode=mode, tile=tile, pred_widths=pred_widths,
+                   key_widths=key_widths, key_refs=key_refs,
+                   m_widths=m_widths, m_refs=m_refs, n_rows=fact.n_rows)
     return np.asarray(out)
 
 
@@ -210,6 +244,23 @@ def shared_join_key(join: P.HashJoin) -> Tuple:
     share ONE probe stream (their ``mult``s may differ — the multiplier
     is per-member data)."""
     return (join.fact_col, HT.join_cache_key(join))
+
+
+def shared_member_key(plan: P.Plan) -> Tuple:
+    """Structural *execution* identity of a shareable member: two plans
+    with equal keys produce byte-identical rows of the stacked wave
+    parameters, so the server aggregates one and fans the result out to
+    every duplicate (predicates canonicalized by sort — bound
+    intersection is commutative; joins by probe identity + mult, kept in
+    chain order — fingerprints may contain unorderable callables).
+    Callers must have validated shareability first (``plan.preds``
+    requires range-expressible predicates)."""
+    proj = plan.project
+    return (plan.scan.table,
+            tuple(sorted(plan.preds)),
+            tuple((shared_join_key(j), j.mult) for j in plan.joins),
+            (proj.m1, proj.m2, proj.op),
+            plan.n_groups)
 
 
 def shared_footprint(plans: List[P.Plan]):
@@ -251,8 +302,9 @@ def shared_params(plans: List[P.Plan], db: ssb.Database,
     """Lower a group of shareable plans over one fact table to the
     stacked parameter arrays of ``ops.multi_spja``.
 
-    Returns ``(fact, args, n_groups)`` where ``args`` are the positional
-    arguments of the kernel.  Raises on a group that is not
+    Returns ``(fact, args, kwargs, n_groups)`` where ``args`` are the
+    positional arguments of the kernel and ``kwargs`` its stream
+    encoding keywords (per-column widths + frame-of-reference arrays).  Raises on a group that is not
     scan-compatible (different fact tables) or contains an unshareable
     member — group validation is the caller's contract; the server
     filters before calling.
@@ -283,8 +335,10 @@ def shared_params(plans: List[P.Plan], db: ssb.Database,
     # per-member bounds over the union predicate columns, intersected
     # when one member filters the same column twice; all-pass for
     # non-filtering members (the kernel evaluates every union column for
-    # every member)
-    bounds = np.empty((q_pad, len(col_ix), 2), np.int32)
+    # every member).  Intersection happens in the ORIGINAL domain, then
+    # each column's bounds are rewritten into its encoded domain (packed
+    # lanes are compared raw — the compile-time predicate rewrite).
+    bounds = np.empty((q_pad, len(col_ix), 2), np.int64)
     bounds[..., 0] = _INT32_MIN
     bounds[..., 1] = _INT32_MAX
     for qi, plan in enumerate(plans):
@@ -292,6 +346,11 @@ def shared_params(plans: List[P.Plan], db: ssb.Database,
             ci = col_ix[col]
             bounds[qi, ci, 0] = max(bounds[qi, ci, 0], lo)
             bounds[qi, ci, 1] = min(bounds[qi, ci, 1], hi)
+    for col, ci in col_ix.items():
+        enc = ST.encoding_of(fact, col)
+        if enc is not None and enc.kind != "plain":
+            bounds[:, ci, :] -= enc.ref
+    bounds = np.clip(bounds, _INT32_MIN, _INT32_MAX).astype(np.int32)
 
     # deduplicated joins: one probe stream per distinct (fact FK,
     # logical build side), per-member use/mult as data
@@ -302,7 +361,10 @@ def shared_params(plans: List[P.Plan], db: ssb.Database,
             ji = join_ix[shared_join_key(j)]
             use[qi, ji] = 1
             mults[qi, ji] += j.mult
-    join_keys = [jnp.asarray(fact[j.fact_col]) for j in join_nodes]
+    key_streams = [ST.column_stream(fact, j.fact_col) for j in join_nodes]
+    join_keys = [s[0] for s in key_streams]
+    key_widths = tuple(s[1] for s in key_streams)
+    key_refs = jnp.asarray(np.array([s[2] for s in key_streams], np.int32))
     join_tables: List[jnp.ndarray] = []
     for j in join_nodes:
         k = shared_join_key(j)
@@ -322,16 +384,23 @@ def shared_params(plans: List[P.Plan], db: ssb.Database,
         if proj.m2 is not None:
             msel[qi, 1] = mcol_ix[proj.m2]
         msel[qi, 2] = _MEASURE_OP_CODE[proj.op]
-    measure_cols = [jnp.asarray(fact[c]).astype(jnp.float32)
-                    for c in mcol_ix]
+    m_streams = [ST.column_stream(fact, c) for c in mcol_ix]
+    measure_cols = [arr if w != 32 else arr.astype(jnp.float32)
+                    for arr, w, _ in m_streams]
+    m_widths = tuple(w for _, w, _ in m_streams)
+    m_refs = jnp.asarray(np.array([r for _, _, r in m_streams], np.int32))
 
     q_valid = np.zeros(q_pad, np.int32)
     q_valid[:q_n] = 1
     n_groups = max(plan.n_groups for plan in plans)
-    args = ([jnp.asarray(fact[c]) for c in col_ix], jnp.asarray(bounds),
+    pred_streams = [ST.column_stream(fact, c) for c in col_ix]
+    args = ([s[0] for s in pred_streams], jnp.asarray(bounds),
             join_keys, join_tables, jnp.asarray(mults), jnp.asarray(use),
             jnp.asarray(q_valid), measure_cols, jnp.asarray(msel))
-    return fact, args, n_groups
+    kwargs = dict(pred_widths=tuple(s[1] for s in pred_streams),
+                  key_widths=key_widths, key_refs=key_refs,
+                  m_widths=m_widths, m_refs=m_refs, n_rows=fact.n_rows)
+    return fact, args, kwargs, n_groups
 
 
 def execute_shared(plans: List[P.Plan], db: ssb.Database,
@@ -347,11 +416,12 @@ def execute_shared(plans: List[P.Plan], db: ssb.Database,
     ``pad_to`` pads the stacked member dimension with inert slots so one
     jitted executable serves any member count up to the wave size (the
     padded members contribute nothing — their validity bit is 0)."""
-    _, args, n_groups = shared_params(plans, db, cache=cache,
-                                      pad_to=pad_to, prebuilt=prebuilt)
+    _, args, kwargs, n_groups = shared_params(plans, db, cache=cache,
+                                              pad_to=pad_to,
+                                              prebuilt=prebuilt)
     LAUNCH_STATS["probe"] += 1          # the single whole-wave launch
     out = np.asarray(ops.multi_spja(*args, n_groups=n_groups, mode=mode,
-                                    tile=tile))
+                                    tile=tile, **kwargs))
     return [out[qi, :plan.n_groups].copy()
             for qi, plan in enumerate(plans)]
 
@@ -368,7 +438,7 @@ def _probe_whole(node: P.HashJoin, fact, db, rowids, group, mode, tile,
     through it."""
     htk, htv = (cache.get_or_build(db, node) if cache is not None
                 else HT.build_dim_table(db, node))
-    keys = jnp.asarray(fact[node.fact_col])[rowids]
+    keys = ST.take(fact, node.fact_col, rowids)
     LAUNCH_STATS["probe"] += 1
     payload, sel, cnt = _probe_join_jit(
         keys, jnp.arange(rowids.shape[0], dtype=jnp.int32),
@@ -417,12 +487,12 @@ def _probe_part_fused(node: P.HashJoin, fact, db, rowids, group, mode,
               if cache is not None else
               HT.build_dim_partitions(db, node, bits, side=side,
                                       packed=True))
-    col = jnp.asarray(fact[node.fact_col])
+    col, width, colref = ST.column_stream(fact, node.fact_col)
     LAUNCH_STATS["partition"] += 1      # the shuffle pass inside part_join
     LAUNCH_STATS["probe"] += 1          # the single fused probe launch
     outr, outg, cnt = ops.part_join(
         col, rowids, group, packed.htk, packed.htv, node.mult, bits,
-        mode=mode, tile=tile)
+        mode=mode, tile=tile, width=width, ref=colref)
     LAUNCH_STATS["host_syncs"] += 1
     cnt = int(cnt)                      # the one device->host sync
     return outr[:cnt], outg[:cnt]
@@ -446,7 +516,7 @@ def _probe_part_loop(node: P.HashJoin, fact, db, rowids, group, mode,
     parts = (cache.get_or_build_parts(db, node, bits)
              if cache is not None else
              HT.build_dim_partitions(db, node, bits, side=side))
-    keys = jnp.asarray(fact[node.fact_col])[rowids]
+    keys = ST.take(fact, node.fact_col, rowids)
     LAUNCH_STATS["partition"] += 1
     outk, (orow, ogrp) = ops.radix_partition_multi(
         keys, (rowids, group), 0, bits, mode=mode, tile=tile)
@@ -511,6 +581,9 @@ def _execute_chain(plan: P.Plan, db: ssb.Database, mode: str, tile: int,
     rowids = jnp.arange(n, dtype=jnp.int32)
     group = jnp.zeros((n,), jnp.int32)
     measure = None
+    dense = True        # rowids still the identity: the leading filter
+    #   on a packed column can select straight off the word stream
+    #   (ops.select_scan_packed) with no gather and no decode pass
 
     for node in plan.chain[1:]:
         empty = int(rowids.shape[0]) == 0
@@ -520,7 +593,21 @@ def _execute_chain(plan: P.Plan, db: ssb.Database, mode: str, tile: int,
                     break
                 if isinstance(pred, (P.RangePred, P.EqPred)):
                     col, lo, hi = P.range_bounds(pred)
-                    x = jnp.asarray(fact[col])[rowids]
+                    enc = ST.encoding_of(fact, col)
+                    if dense and enc is not None and enc.kind != "plain":
+                        # decode-on-scan over the packed words; bounds
+                        # rewritten into the encoded domain
+                        lo2, hi2 = ST.encoded_bounds(enc, lo, hi)
+                        words, phys, _ = ST.column_stream(fact, col)
+                        out, cnt = ops.select_scan_packed(
+                            words, rowids, lo2, hi2, phys, mode=mode,
+                            tile=tile)
+                        out = out[:int(cnt)]
+                        group = group[out]  # identity rowids: value==pos
+                        rowids = out
+                        dense = False
+                        continue
+                    x = ST.take(fact, col, rowids)
                     # emit a selection vector, then gather each live
                     # column through it — the materialization traffic
                     # the fused path avoids
@@ -534,18 +621,19 @@ def _execute_chain(plan: P.Plan, db: ssb.Database, mode: str, tile: int,
                     keep = jnp.asarray(P.pred_mask(pred, fact))[rowids]
                     rowids = rowids[keep]
                     group = group[keep]
+                dense = False
         elif isinstance(node, P.HashJoin):
+            dense = False
             if empty:
                 continue
             rowids, group = join_fn(node, fact, db, rowids, group, mode,
                                     tile, cache)
         elif isinstance(node, P.Project):
-            m = jnp.asarray(fact[node.m1]).astype(jnp.float32)[rowids]
+            m = ST.take(fact, node.m1, rowids).astype(jnp.float32)
             if node.op == "mul":
-                m = m * jnp.asarray(fact[node.m2]).astype(
-                    jnp.float32)[rowids]
+                m = m * ST.take(fact, node.m2, rowids).astype(jnp.float32)
             elif node.op == "sub":
-                m2 = jnp.asarray(fact[node.m2]).astype(jnp.float32)[rowids]
+                m2 = ST.take(fact, node.m2, rowids).astype(jnp.float32)
                 m = m if empty else ops.project(m, m2, 1.0, -1.0,
                                                 mode=mode, tile=tile)
             measure = m
@@ -558,8 +646,7 @@ def _execute_chain(plan: P.Plan, db: ssb.Database, mode: str, tile: int,
         elif isinstance(node, P.OrderBy):
             if empty:
                 break
-            keys = jnp.asarray(
-                np.asarray(fact[node.key_col], np.int32))[rowids]
+            keys = ST.take(fact, node.key_col, rowids)
             _, rowids = ops.radix_sort(keys, rowids, mode=mode, tile=tile)
         else:
             raise TypeError(f"{plan.name}: cannot lower node {node!r}")

@@ -25,6 +25,7 @@ import numpy as np
 from repro.core.blocks import EMPTY   # probe kernels compare against this
 from repro.sql import plan as P
 from repro.sql import ssb
+from repro.sql.storage import PackedTable
 
 
 def np_hash(keys: np.ndarray, n_slots: int) -> np.ndarray:
@@ -202,7 +203,10 @@ def db_fingerprint(db, tables: Optional[Iterable[str]] = None) -> Tuple:
     names = None if tables is None else set(tables)
     items = []
     for attr, t in vars(db).items():
-        if not isinstance(t, ssb.Table):
+        # PackedTable decodes on access, so a packed database
+        # fingerprints identically to its plain original — a cache
+        # warmed on one serves the other (same logical data)
+        if not isinstance(t, (ssb.Table, PackedTable)):
             continue
         if names is not None and attr not in names:
             continue

@@ -48,13 +48,18 @@ baseline, never as a plan the server should pick).
 
 Cardinalities come from the data: predicate selectivities are measured on
 a strided sample of the fact column, join selectivities exactly on the
-(small) dimension tables.  All byte counts assume 4-byte columns, like
-the paper.
+(small) dimension tables.  Column-scan byte counts are per-column
+*encoded* widths when the database is packed (``repro.sql.storage``):
+a bit-packed column streams ``phys/8`` bytes per row, not the paper's
+nominal 4 — the model prices what actually moves, which is the whole
+point of decode-on-scan compression.  Run-time intermediates (selection
+vectors, shuffled keys, materialized row ids / group ids) stay 4-byte:
+they are decoded int32 arrays regardless of storage encoding.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, Optional
+from typing import Dict, Optional, Tuple
 
 import jax
 import numpy as np
@@ -62,6 +67,7 @@ import numpy as np
 from repro.cost.model import Hardware, PAPER_CPU, PAPER_GPU, TPU_V5E  # noqa: F401
 from repro.sql import plan as P
 from repro.sql import ssb
+from repro.sql import storage
 
 W = 4                                   # bytes per (dictionary-coded) column
 
@@ -182,6 +188,51 @@ def _scan_cols(plan: P.Plan) -> int:
     return len(plan.filters) + len(plan.joins) + n_measure
 
 
+def _scan_streams(plan: P.Plan):
+    """The fact column of every stream a single-query scan loads, in
+    stream order (a column serving two roles is two streams, matching
+    the kernels' accounting)."""
+    cols = []
+    for pred in plan.filters:
+        cols.append(getattr(pred, "col", None))
+    cols.extend(j.fact_col for j in plan.joins)
+    proj = plan.project
+    if proj is not None:
+        cols.append(proj.m1)
+        if proj.m2 is not None:
+            cols.append(proj.m2)
+    return cols
+
+
+def scan_bytes_per_row(plan: P.Plan, fact) -> float:
+    """Bytes one pass moves per fact row across the plan's streams,
+    priced at each column's *encoded* width (callable predicates have no
+    single column; they are priced at the nominal W)."""
+    return sum(W if c is None else storage.scan_bytes_per_row(fact, c)
+               for c in _scan_streams(plan))
+
+
+def scanned_bytes(plan: P.Plan, fact) -> Tuple[int, int]:
+    """(encoded, plain) total bytes a full scan of the plan's streams
+    moves — the ``QueryResult.bytes_scanned`` report and the
+    compression benchmark's bytes-moved ratio."""
+    n = fact.n_rows
+    return (int(scan_bytes_per_row(plan, fact) * n),
+            int(_scan_cols(plan) * W * n))
+
+
+def _shared_stream_cols(plans):
+    """The fact column behind every union stream ONE shared pass over
+    the wave loads, plus the deduplicated join nodes — the single owner
+    of the wave's stream-byte accounting (``predict_shared`` prices it,
+    ``scanned_bytes_shared`` reports it)."""
+    from repro.sql.compile import shared_footprint
+    col_ix, join_nodes, mcol_ix = shared_footprint(plans)
+    cols = (list(col_ix) + [j.fact_col for j in join_nodes]
+            + list(mcol_ix))
+    return cols, join_nodes
+
+
 def predict(plan: P.Plan, db: ssb.Database,
             hw: Optional[Hardware] = None) -> Dict[str, float]:
     """Predicted seconds per physical strategy.  ``fused`` is absent when
@@ -193,8 +244,10 @@ def predict(plan: P.Plan, db: ssb.Database,
     n = st.n_fact
     rd, wr = hw.read_bw, hw.write_bw
 
-    # one pass over every touched fact column (both strategies pay this)
-    col_scan = _scan_cols(plan) * W * n / rd
+    # one pass over every touched fact column, at encoded widths (every
+    # strategy pays this — and on a packed database pays less)
+    fact = getattr(db, plan.scan.table)
+    col_scan = scan_bytes_per_row(plan, fact) * n / rd
 
     # running probe-side cardinality after filters, then after each join
     n_after_filters = n * float(np.prod(st.pred_sels)) if st.pred_sels else n
@@ -273,12 +326,15 @@ def predict_shared(plans, db: ssb.Database,
     ``shared`` prices ONE streamed pass over the wave's *union* of fact
     columns (fact bytes read once per wave), one probe stream per
     deduplicated dim hash table (two members sharing a build side share
-    the probe), and the per-member output payload writes (Σ per-query
-    group vectors) — plus a single kernel dispatch.  ``solo`` is the
-    alternative the server would otherwise run: Σ over members of the
-    cost model's per-plan argmin (``choose``).  The server's ``auto``
-    arbitration runs the shared pass whenever ``shared < solo``."""
-    from repro.sql.compile import shareability, shared_footprint
+    the probe), and the per-*unique*-member output payload writes — the
+    server dedups identical members (``compile.shared_member_key``)
+    before executing, so duplicates add no stacked slot and no payload;
+    plus a single kernel dispatch.  ``solo`` is the alternative the
+    server would otherwise run: Σ over ALL members (duplicates
+    included — solo execution repeats them) of the cost model's
+    per-plan argmin (``choose``).  The server's ``auto`` arbitration
+    runs the shared pass whenever ``shared < solo``."""
+    from repro.sql.compile import shareability, shared_member_key
     hw = hw or default_hardware()
     if not plans:
         raise ValueError("predict_shared needs at least one plan")
@@ -292,20 +348,41 @@ def predict_shared(plans, db: ssb.Database,
         reason = shareability(plan)
         if reason is not None:
             raise ValueError(f"{plan.name}: {reason}")
+    # the wave as executed: one stacked slot per unique member
+    uniq, seen = [], set()
+    for plan in plans:
+        try:
+            k = shared_member_key(plan)
+        except Exception:               # noqa: BLE001 — no dedup then
+            k = id(plan)
+        if k not in seen:
+            seen.add(k)
+            uniq.append(plan)
     # the union streams the kernel actually loads (same accounting as
     # the solo fused model's _scan_cols: a column that is both predicate
-    # and measure is two streams, each deduplicated within its role)
-    col_ix, join_nodes, mcol_ix = shared_footprint(plans)
-    n_streams = len(col_ix) + len(join_nodes) + len(mcol_ix)
+    # and measure is two streams, each deduplicated within its role) —
+    # each stream priced at the column's encoded width
+    cols, join_nodes = _shared_stream_cols(uniq)
+    stream_bytes = sum(storage.scan_bytes_per_row(fact, c) for c in cols)
     builds = [int(P.pred_mask(j.filter, getattr(db, j.dim)).sum())
               for j in join_nodes]
-    out_payload = float(sum(plan.n_groups * W for plan in plans))
-    shared_t = (n_streams * W * n / hw.read_bw
+    out_payload = float(sum(plan.n_groups * W for plan in uniq))
+    shared_t = (stream_bytes * n / hw.read_bw
                 + sum(_probe_time(n, ht_bytes(b), hw) for b in builds)
                 + out_payload / hw.write_bw
                 + hw.launch_overhead_s)
     solo_t = sum(choose(plan, db, hw).predicted_s for plan in plans)
     return {"shared": shared_t, "solo": solo_t}
+
+
+def scanned_bytes_shared(plans, fact) -> Tuple[int, int]:
+    """(encoded, plain) bytes ONE shared pass over the wave's union
+    streams moves — the per-member ``bytes_scanned`` report for shared
+    executions (the wave is the unit of scan traffic)."""
+    cols, _ = _shared_stream_cols(plans)
+    n = fact.n_rows
+    per_row = sum(storage.scan_bytes_per_row(fact, c) for c in cols)
+    return int(per_row * n), int(len(cols) * W * n)
 
 
 @dataclass(frozen=True)

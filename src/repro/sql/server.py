@@ -24,11 +24,25 @@ per-query execution when sharing does not pay (e.g. a single-member
 wave).  Everything else — fixed ``fused``/``opat``/``part`` requests,
 row plans, unshareable plans — buckets by strategy as before.
 
+Wave sizing is *enforced*, not assumed: the shared kernel's
+``(Q_padded, n_groups)`` f32 accumulator must fit ``acc_budget_bytes``
+of VMEM, so ``_waves()`` splits a bucket when padded-member-count x
+group-count would blow it (``stats["budget_splits"]``); and identical
+members inside a wave (``compile.shared_member_key``) aggregate ONCE,
+with the result fanned out per duplicate (``stats["dedup_saved"]``).
+
 Repeated queries (or distinct queries sharing a join build side, e.g.
 every SSB flight's ``date`` join) skip the hash-table build phase
 entirely; the cache's hit/miss stats quantify the saved build work, the
 serving analogue of the paper's observation that dimension builds are
 amortizable setup rather than per-query cost.
+
+The resident database may be a *packed* one
+(``repro.sql.storage.pack_database``): every strategy consumes the
+compressed word streams directly (decode-on-scan), results are
+bit-identical to plain storage, and each ``QueryResult`` reports the
+scan's encoded vs nominal bytes (``bytes_scanned`` /
+``bytes_scanned_plain``).
 
 Per-request metrics (latency, strategy actually used, fallback reason)
 ride back on the ``QueryResult`` so a traffic driver can tell fused
@@ -85,6 +99,12 @@ class QueryResult:
     #   that produced this result (None: the request ran solo); for a
     #   shared member, latency_s is the whole wave's wall time — the wave
     #   IS the unit of execution
+    bytes_scanned: Optional[int] = None  # fact bytes the scan streamed at
+    #   the columns' *encoded* widths (repro.sql.storage); for a shared
+    #   member this is the whole wave's union-stream traffic
+    bytes_scanned_plain: Optional[int] = None  # same streams at the
+    #   nominal 4-byte width — the packed-vs-plain ratio is
+    #   bytes_scanned_plain / bytes_scanned
 
 
 class QueryServer:
@@ -95,12 +115,22 @@ class QueryServer:
         results = server.run()                  # Dict[rid, QueryResult]
     """
 
+    # per-core accumulator budget for the shared-scan kernel: the
+    # (Q_padded, n_groups) f32 scratch must stay a small slice of VMEM
+    # (v5e: ~128MB/core, but the accumulator shares it with the tile
+    # pipeline's double buffers).  2 MiB admits a full 16-member wave at
+    # 32K groups; oversized waves split instead of assuming they fit —
+    # the ROADMAP item this enforces.
+    DEFAULT_ACC_BUDGET = 1 << 21
+
     def __init__(self, db: ssb.Database, mode: str = "ref",
-                 tile: int = DEFAULT_TILE, max_batch: int = 8):
+                 tile: int = DEFAULT_TILE, max_batch: int = 8,
+                 acc_budget_bytes: int = DEFAULT_ACC_BUDGET):
         self.db = db
         self.mode = mode
         self.tile = tile
         self.max_batch = max_batch
+        self.acc_budget_bytes = acc_budget_bytes
         self.cache = HashTableCache()
         self.queue: List[QueryRequest] = []
         self._next_rid = 0
@@ -130,8 +160,55 @@ class QueryServer:
                 return ("scan", req.plan.scan.table, req.strategy)
         return ("solo", req.strategy)
 
+    @staticmethod
+    def _member_key(req: QueryRequest) -> Tuple:
+        """Dedup identity of a wave member; falls back to a per-request
+        key (no dedup) when the plan cannot be fingerprinted."""
+        try:
+            return C.shared_member_key(req.plan)
+        except Exception:               # noqa: BLE001 — malformed plan
+            return ("rid", req.rid)
+
+    def _chunk_scan_bucket(self, rs: List[QueryRequest]
+                           ) -> List[List[QueryRequest]]:
+        """Chunk one scan-compatible bucket to waves that respect BOTH
+        the batch size and the shared kernel's VMEM accumulator budget:
+        the scratch is (Q_padded, max n_groups) f32, so wave size x
+        group count is enforced here instead of assumed to fit.  BOTH
+        limits count *unique* members (``_member_key``) — a duplicate
+        occupies no stacked slot after ``_run_shared``'s dedup, so it
+        never forces a split: N copies of one hot query stay one wave =
+        one scan, whatever N.  A single member over budget still runs
+        (a 1-wave cannot shrink); splits forced by the budget rather
+        than max_batch are counted in ``stats["budget_splits"]``."""
+        waves: List[List[QueryRequest]] = []
+        cur: List[QueryRequest] = []
+        cur_keys: set = set()
+        cur_groups = 0
+        for r in rs:
+            k = self._member_key(r)
+            is_dup = k in cur_keys
+            ng = max(cur_groups, r.plan.n_groups)
+            # padded *unique* slot count if r joins the current wave
+            # (the pow2-bucket rule _run_shared pads the deduped wave to)
+            q_pad = 1 << len(cur_keys).bit_length()
+            over_budget = q_pad * ng * 4 > self.acc_budget_bytes
+            if cur and not is_dup and (len(cur_keys) >= self.max_batch
+                                       or over_budget):
+                if over_budget and len(cur_keys) < self.max_batch:
+                    self.stats["budget_splits"] += 1
+                waves.append(cur)
+                cur, cur_keys, cur_groups = [], set(), 0
+            cur.append(r)
+            cur_keys.add(k)
+            cur_groups = max(cur_groups, r.plan.n_groups)
+        if cur:
+            waves.append(cur)
+        return waves
+
     def _waves(self) -> List[Tuple[Tuple, List[QueryRequest]]]:
-        """Bucket by scan-compatibility key, then chunk to the batch
+        """Bucket by scan-compatibility key, then chunk — scan buckets
+        to batch size AND accumulator budget, everything else to batch
         size (a wave is homogeneous, like the LM server's length
         buckets)."""
         buckets: Dict[Tuple, List[QueryRequest]] = defaultdict(list)
@@ -139,8 +216,12 @@ class QueryServer:
             buckets[self._wave_key(r)].append(r)
         waves = []
         for key, rs in sorted(buckets.items()):
-            for i in range(0, len(rs), self.max_batch):
-                waves.append((key, rs[i:i + self.max_batch]))
+            if key[0] == "scan":
+                waves.extend((key, chunk)
+                             for chunk in self._chunk_scan_bucket(rs))
+            else:
+                for i in range(0, len(rs), self.max_batch):
+                    waves.append((key, rs[i:i + self.max_batch]))
         return waves
 
     def run(self) -> Dict[int, QueryResult]:
@@ -193,6 +274,7 @@ class QueryServer:
         construct (the per-member failure surface — predicate/measure
         validation already passed at bucketing time) is excluded and
         reported errored; the survivors still share one pass."""
+        from repro.sql import model as M
         out: Dict[int, QueryResult] = {}
         t0 = time.perf_counter()
         survivors: List[QueryRequest] = []
@@ -226,6 +308,30 @@ class QueryServer:
         if not survivors:
             return out
 
+        # in-wave dedup: members with equal structural execution identity
+        # (compile.shared_member_key) aggregate ONCE — the wave carries
+        # one stacked slot per *unique* plan and duplicates fan the
+        # result out (each its own copy); repeated queries at high
+        # concurrency stop paying per-member VPU fan-out
+        uniq_reqs: List[QueryRequest] = []
+        slot_of: Dict[int, int] = {}
+        slot_ix: Dict[Tuple, int] = {}
+        for req in survivors:
+            k = self._member_key(req)
+            if k in slot_ix:
+                self.stats["dedup_saved"] += 1
+            else:
+                slot_ix[k] = len(uniq_reqs)
+                uniq_reqs.append(req)
+            slot_of[req.rid] = slot_ix[k]
+
+        try:
+            fact = getattr(self.db, uniq_reqs[0].plan.scan.table)
+            bytes_enc, bytes_plain = M.scanned_bytes_shared(
+                [r.plan for r in uniq_reqs], fact)
+        except Exception:                   # noqa: BLE001 — reporting only
+            bytes_enc = bytes_plain = None
+
         def member_result(req, result, error, dt):
             self.stats["queries"] += 1
             if req.strategy == "auto":
@@ -243,16 +349,17 @@ class QueryServer:
                 predicted_s=(None if model_predictions is None
                              else model_predictions["shared"]),
                 predictions=model_predictions,
-                shared_wave_size=len(survivors))
+                shared_wave_size=len(survivors),
+                bytes_scanned=bytes_enc, bytes_scanned_plain=bytes_plain)
 
         # pow2 member-count buckets (like the LM server's length buckets):
         # padded slots are inert but not free, so a small wave must not
         # pay for max_batch — while any member count still maps onto
         # O(log max_batch) cached executables per wave composition
-        pad_to = 1 << max(len(survivors) - 1, 0).bit_length()
+        pad_to = 1 << max(len(uniq_reqs) - 1, 0).bit_length()
         try:
             results = execute_shared(
-                [r.plan for r in survivors], self.db, mode=self.mode,
+                [r.plan for r in uniq_reqs], self.db, mode=self.mode,
                 tile=self.tile, cache=self.cache, pad_to=pad_to,
                 prebuilt=prebuilt)
         except Exception as e:              # noqa: BLE001 — isolate wave
@@ -263,7 +370,12 @@ class QueryServer:
             return out
         dt = time.perf_counter() - t0
         self.stats["shared_waves"] += 1
-        for req, result in zip(survivors, results):
+        owned = set()
+        for req in survivors:
+            result = results[slot_of[req.rid]]
+            if slot_of[req.rid] in owned:   # duplicate member: own copy
+                result = result.copy()
+            owned.add(slot_of[req.rid])
             out[req.rid] = member_result(req, result, None, dt)
         return out
 
@@ -312,6 +424,12 @@ class QueryServer:
             self.stats["auto"] += 1
         if cq.fallback_reason is not None:
             self.stats["fallbacks"] += 1
+        try:
+            from repro.sql import model as M
+            bytes_enc, bytes_plain = M.scanned_bytes(
+                req.plan, getattr(self.db, req.plan.scan.table))
+        except Exception:                   # noqa: BLE001 — reporting only
+            bytes_enc = bytes_plain = None
         preds = cq.predictions
         return QueryResult(
             rid=req.rid, name=req.plan.name, result=result,
@@ -320,4 +438,5 @@ class QueryServer:
             cache_misses=self.cache.misses - m0,
             model_choice=ran if req.strategy == "auto" else None,
             predicted_s=None if preds is None else preds.get(ran),
-            predictions=preds)
+            predictions=preds,
+            bytes_scanned=bytes_enc, bytes_scanned_plain=bytes_plain)

@@ -11,7 +11,7 @@ below is written leaf-wise so GSPMD can partition it freely.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, NamedTuple, Tuple
+from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -8,8 +8,7 @@ working set bounded for the 340B-class configs.
 """
 from __future__ import annotations
 
-from functools import partial
-from typing import Any, Callable, Dict, Tuple
+from typing import Callable
 
 import jax
 import jax.numpy as jnp

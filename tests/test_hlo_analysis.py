@@ -2,7 +2,6 @@
 whole roofline deliverable, so it gets its own tests."""
 import jax
 import jax.numpy as jnp
-import pytest
 
 from repro.launch.hlo_analysis import analyze_hlo
 

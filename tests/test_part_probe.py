@@ -19,7 +19,6 @@ import pytest
 
 from repro.core.blocks import EMPTY
 from repro.kernels import ops
-from repro.kernels import ref as kref
 from repro.sql import calibrate
 from repro.sql import engine, ssb
 from repro.sql import model as M
@@ -28,7 +27,6 @@ from repro.sql.compile import (LAUNCH_STATS, compile_plan,
                                reset_launch_stats)
 from repro.sql.hashtable import (PackedParts, build_dim_partitions,
                                  next_pow2, np_build)
-from repro.sql.plan import ColExpr, QueryBuilder
 
 
 # ---------------------------------------------------------------------------

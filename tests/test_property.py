@@ -17,7 +17,7 @@ hypothesis = pytest.importorskip(
 from hypothesis import given, settings, strategies as st
 
 from repro.core import blocks as B
-from repro.kernels import ops, ref
+from repro.kernels import ops
 from repro.sql import engine, ssb
 
 ints = st.integers(min_value=-1_000_000, max_value=1_000_000)

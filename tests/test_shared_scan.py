@@ -9,7 +9,6 @@ strategy used to KeyError and poison the request)."""
 import numpy as np
 import pytest
 
-import jax.numpy as jnp
 
 from repro.kernels import ops
 from repro.sql import compile as C
@@ -292,11 +291,11 @@ def test_random_plan_waves_match_oracle_and_kernel(seed):
                                    err_msg=plan.name)
     # kernel path on the same stacked params (small tile: exercise the
     # grid carry), against the jitted jnp reference
-    _, args, n_groups = C.shared_params(plans, DB, pad_to=8)
+    _, args, kwargs, n_groups = C.shared_params(plans, DB, pad_to=8)
     ref = np.asarray(ops.multi_spja(*args, n_groups=n_groups, mode="ref",
-                                    tile=256))
+                                    tile=256, **kwargs))
     ker = np.asarray(ops.multi_spja(*args, n_groups=n_groups,
-                                    mode="kernel", tile=256))
+                                    mode="kernel", tile=256, **kwargs))
     np.testing.assert_allclose(ker, ref, rtol=1e-5, atol=1e-3)
 
 
@@ -319,3 +318,149 @@ def test_stats_survive_unknown_strategy_keys():
     fused = server.submit(QUERIES["q2.1"], strategy="fused")
     assert server.run()[fused].error is None
     assert server.stats["fused"] == 1
+
+
+# ---------------------------------------------------------------------------
+# wave sizing: VMEM accumulator budget + in-wave dedup
+# ---------------------------------------------------------------------------
+
+
+def test_wave_splits_on_accumulator_budget():
+    """The shared kernel's (Q_padded, n_groups) f32 scratch must respect
+    the VMEM budget: a wave whose padded size x group count exceeds it is
+    split even though max_batch admits it (the ROADMAP enforcement
+    item).  q2.x plans group by 7000: at a 7000*4-byte budget exactly
+    one unpadded member fits per wave."""
+    server = QueryServer(DB, mode="ref", max_batch=16,
+                         acc_budget_bytes=7000 * 4)
+    rids = [server.submit(QUERIES[n], strategy="shared")
+            for n in ("q2.1", "q2.2", "q2.3")]
+    results = server.run()
+    for rid in rids:
+        r = results[rid]
+        assert r.error is None
+        assert r.shared_wave_size == 1
+        np.testing.assert_allclose(
+            r.result, engine.run_query_oracle(DB, QUERIES[r.name]),
+            rtol=1e-5, atol=1e-3)
+    assert server.stats["budget_splits"] == 2
+    assert server.stats["shared_waves"] == 3
+
+
+def test_wave_budget_allows_single_oversized_member():
+    """One member alone over budget still runs (a 1-wave cannot
+    shrink)."""
+    server = QueryServer(DB, mode="ref", acc_budget_bytes=16)
+    rid = server.submit(QUERIES["q2.1"], strategy="shared")
+    r = server.run()[rid]
+    assert r.error is None and r.shared_wave_size == 1
+
+
+def test_default_budget_keeps_full_ssb_wave():
+    """The default budget admits the 13-query SSB wave (max 7000 groups
+    x 16 padded members = 448KB < 2MiB) — sizing is enforcement, not a
+    throughput regression."""
+    server = QueryServer(DB, mode="ref", max_batch=16)
+    for n, p in QUERIES.items():
+        server.submit(p, strategy="shared")
+    results = server.run()
+    assert server.stats["budget_splits"] == 0
+    assert all(r.shared_wave_size == 13 for r in results.values())
+
+
+def test_wave_dedups_identical_members():
+    """Duplicate member queries aggregate once: the wave carries one
+    stacked slot per unique plan, every duplicate gets its own copy of
+    the shared result (PR 4 follow-up)."""
+    server = QueryServer(DB, mode="ref", max_batch=16)
+    names = ("q2.1", "q2.1", "q1.1", "q2.1", "q1.1")
+    rids = [server.submit(QUERIES[n], strategy="shared") for n in names]
+    results = server.run()
+    expect = {n: engine.run_query_oracle(DB, QUERIES[n])
+              for n in set(names)}
+    for rid, n in zip(rids, names):
+        r = results[rid]
+        assert r.error is None
+        assert r.shared_wave_size == 5          # logical members
+        np.testing.assert_allclose(r.result, expect[n],
+                                   rtol=1e-5, atol=1e-3)
+    assert server.stats["dedup_saved"] == 3     # 2x q2.1 + 1x q1.1
+    assert server.stats["shared"] == 5
+    # duplicates own distinct arrays: mutating one result cannot
+    # corrupt another member's
+    r0, r3 = results[rids[0]], results[rids[3]]
+    assert r0.result is not r3.result
+    r0.result[0] = -1.0
+    assert r3.result[0] != -1.0
+
+
+def test_dedup_distinguishes_structurally_different_plans():
+    """Same query shape, different bounds -> different member keys, no
+    false sharing."""
+    a = (QueryBuilder("a").scan("lineorder")
+         .where_range("lo_discount", 1, 3)
+         .measure("lo_revenue").group_by(1).build())
+    b = (QueryBuilder("b").scan("lineorder")
+         .where_range("lo_discount", 4, 6)
+         .measure("lo_revenue").group_by(1).build())
+    assert C.shared_member_key(a) != C.shared_member_key(b)
+    server = QueryServer(DB, mode="ref", max_batch=8)
+    ra = server.submit(a, strategy="shared")
+    rb = server.submit(b, strategy="shared")
+    results = server.run()
+    assert server.stats["dedup_saved"] == 0
+    np.testing.assert_allclose(results[ra].result,
+                               engine.run_query_oracle(DB, a),
+                               rtol=1e-5, atol=1e-3)
+    np.testing.assert_allclose(results[rb].result,
+                               engine.run_query_oracle(DB, b),
+                               rtol=1e-5, atol=1e-3)
+
+
+def test_duplicates_never_force_budget_split():
+    """The budget counts *unique* slots: N copies of one hot
+    high-group-count query stay ONE wave (one scan, one stacked slot)
+    even under a budget that admits exactly one unpadded member — the
+    dedup-before-chunking ordering."""
+    server = QueryServer(DB, mode="ref", max_batch=16,
+                         acc_budget_bytes=7000 * 4)
+    rids = [server.submit(QUERIES["q2.1"], strategy="shared")
+            for _ in range(8)]
+    results = server.run()
+    expect = engine.run_query_oracle(DB, QUERIES["q2.1"])
+    for rid in rids:
+        r = results[rid]
+        assert r.error is None and r.shared_wave_size == 8
+        np.testing.assert_allclose(r.result, expect, rtol=1e-5, atol=1e-3)
+    assert server.stats["budget_splits"] == 0
+    assert server.stats["shared_waves"] == 1
+    assert server.stats["dedup_saved"] == 7
+
+
+def test_predict_shared_dedups_members():
+    """The shared term prices the wave as executed (one slot per unique
+    member: union streams + one payload write), while solo still sums
+    every duplicate — duplicates make sharing strictly MORE attractive,
+    never less."""
+    plan = QUERIES["q2.1"]
+    one = M.predict_shared([plan], DB)
+    four = M.predict_shared([plan] * 4, DB)
+    assert four["shared"] == pytest.approx(one["shared"])
+    assert four["solo"] == pytest.approx(4 * one["solo"])
+
+
+def test_duplicates_exempt_from_max_batch():
+    """max_batch also counts unique slots: more copies of one hot query
+    than max_batch still ride ONE wave (one scan), since duplicates add
+    no stacked slot."""
+    server = QueryServer(DB, mode="ref", max_batch=4)
+    rids = [server.submit(QUERIES["q2.1"], strategy="shared")
+            for _ in range(9)]
+    results = server.run()
+    expect = engine.run_query_oracle(DB, QUERIES["q2.1"])
+    for rid in rids:
+        r = results[rid]
+        assert r.error is None and r.shared_wave_size == 9
+        np.testing.assert_allclose(r.result, expect, rtol=1e-5, atol=1e-3)
+    assert server.stats["shared_waves"] == 1
+    assert server.stats["dedup_saved"] == 8

@@ -1,7 +1,6 @@
 """End-to-end system behaviour: training reduces loss, serving generates,
 checkpoint kill/resume works, data pipeline is deterministic, watchdog and
 gradient compression behave."""
-import math
 
 import jax
 import jax.numpy as jnp
