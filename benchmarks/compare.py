@@ -21,7 +21,10 @@ Rules:
   * a fresh row missing from the baseline is reported but passes (it is
     adopted on the next ``--update``); a baseline row missing from the
     fresh record FAILS — a silently dropped benchmark must not pass;
-  * a missing baseline file fails unless ``--update`` creates it.
+  * a whole fresh record with no baseline file passes as "new" (a just
+    added table — e.g. ``scaleout`` landing after the baseline was
+    committed — must not fail the gate; it is adopted on the next
+    ``--update``).  Only *dropped* or >threshold-slower entries fail.
 """
 from __future__ import annotations
 
@@ -51,9 +54,11 @@ def compare_one(fresh_path: str, baseline_dir: str, threshold: float,
         print(f"updated baseline {base_path}")
         return 0
     if not os.path.exists(base_path):
-        print(f"FAIL {fresh_path}: no baseline {base_path} "
-              "(run with --update to create it)")
-        return 1
+        # a brand-new table: nothing to regress against — report and
+        # pass, exactly like a new row inside an existing record
+        print(f"new  {fresh_path}: no baseline {base_path} yet "
+              "(gate passes; adopt with --update)")
+        return 0
     fresh = load_rows(fresh_path)
     base = load_rows(base_path)
     failures = 0

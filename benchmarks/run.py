@@ -441,6 +441,82 @@ def compression(sf: float = 0.1):
              })
 
 
+def scaleout(sf: float = 0.02):
+    """Scale-out: the 13 SSB queries sharded over 1/2/4/8 fact shards
+    (``repro.sql.shard``), one row per shard count.  The paper's
+    bandwidth argument extended to aggregate multi-chip bandwidth: N
+    devices scanning disjoint shards deliver ~N x scan GB/s while only
+    the (n_groups,) partial grids cross the interconnect.
+
+    Two scan rates per row, honestly separated: ``agg_scan_gbps``
+    divides the scanned bytes by Σ per-query max-shard time — the wall
+    clock N *parallel* devices would see, the number that must grow
+    toward N x (on this single-CPU host the shards run sequentially, so
+    this is the as-if-parallel projection from per-shard timings);
+    ``wall_scan_gbps`` divides by the actual host wall time (flat on one
+    CPU — the honest single-device number).  ``auto``'s single- vs
+    multi-device choice (``model.choose(..., n_shards=s)``) is logged
+    per query.  Results are asserted bit-identical to the solo fused
+    pass at every shard count before anything is reported."""
+    from repro.sql import shard as SH
+    from repro.sql.server import QueryServer
+    db = ssb.generate(sf=sf, seed=7)
+    n = db.lineorder.n_rows
+    qs = engine.ssb_queries()
+    solo_cache = HashTableCache()
+    solo = {name: compile_plan(p, "fused").execute(db, mode="ref",
+                                                   cache=solo_cache)
+            for name, p in qs.items()}
+    for s in (1, 2, 4, 8):
+        sdb = SH.shard_database(db, s)
+        server = QueryServer(sdb, mode="ref")
+        warmup, iters = 1, 2
+        best_wall = float("inf")
+        best_shard = {}                 # per query: min-of-iters max-shard
+        for it in range(warmup + iters):
+            rids = {server.submit(p, strategy="sharded"): name
+                    for name, p in qs.items()}
+            t0 = time.perf_counter()
+            results = server.run()
+            wall = time.perf_counter() - t0
+            for rid, r in results.items():
+                assert r.error is None, f"{rids[rid]}: {r.error}"
+                assert np.array_equal(r.result, solo[rids[rid]]), \
+                    f"{rids[rid]}: sharded diverged from solo at S={s}"
+                if it >= warmup:
+                    t_q = max(r.shard_times_s)
+                    name = rids[rid]
+                    best_shard[name] = min(best_shard.get(name, t_q), t_q)
+            if it >= warmup:
+                best_wall = min(best_wall, wall)
+        bytes_by_q = {rids[rid]: r.bytes_scanned
+                      for rid, r in results.items()}
+        total_bytes = sum(bytes_by_q.values())
+        shard_times = {rids[rid]: r.shard_times_s
+                       for rid, r in results.items()}
+        agg_gbps = total_bytes / sum(best_shard.values()) / 1e9
+        wall_gbps = total_bytes / best_wall / 1e9
+        qps = len(qs) / best_wall
+        choices = {name: SM.choose(p, db, n_shards=s).strategy
+                   for name, p in qs.items()}
+        n_multi = sum(1 for c in choices.values() if c == "sharded")
+        emit(f"scaleout.d{s}", best_wall / len(qs) * 1e6,
+             f"qps={qps:.1f};agg_scan_gbps={agg_gbps:.2f};"
+             f"wall_scan_gbps={wall_gbps:.2f};"
+             f"devices={jax.device_count()};"
+             f"auto_sharded={n_multi}/{len(qs)}",
+             extra={
+                 "sf": sf, "n_fact": n, "n_shards": s,
+                 "qps": qps, "agg_scan_gbps": agg_gbps,
+                 "wall_scan_gbps": wall_gbps,
+                 "bytes_scanned": total_bytes,
+                 "shard_times_s": shard_times,
+                 "auto_choice": choices,
+                 "auto_sharded_queries": n_multi,
+                 "bit_identical": True,
+             })
+
+
 def table3_cost():
     """Table 3: cost effectiveness (renting)."""
     cpu_hr, gpu_hr = 0.504, 3.06
@@ -463,6 +539,7 @@ ALL = {
     "fig17": fig17_fusion,
     "shared_throughput": shared_throughput,
     "compression": compression,
+    "scaleout": scaleout,
     "table3": table3_cost,
 }
 
@@ -472,12 +549,17 @@ def write_json(out_dir: str, name: str, rows) -> None:
     machine-readable points, not just stdout CSV."""
     os.makedirs(out_dir, exist_ok=True)
     path = os.path.join(out_dir, f"BENCH_{name}.json")
+    # device_count on every row's extra (and top-level): trajectories
+    # recorded on an 8-virtual-device CI host and a 1-device laptop must
+    # be tellable apart before anyone compares their timings
+    dc = jax.device_count()
     payload = {
         "table": name,
         "unix_time": time.time(),
         "backend": jax.default_backend(),
+        "device_count": dc,
         "rows": [dict({"name": n, "us_per_call": us, "derived": d},
-                      **({} if extra is None else {"extra": extra}))
+                      extra=dict(extra or {}, device_count=dc))
                  for n, us, d, extra in rows],
     }
     with open(path, "w") as f:

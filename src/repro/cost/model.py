@@ -33,6 +33,14 @@ class Hardware:
     # single-launch probe.
     launch_overhead_s: float = 0.0
 
+    @property
+    def interconnect_gbps(self) -> Optional[float]:
+        """``interconnect_bw`` in GB/s — the unit the scale-out reports
+        and the cost-model docs quote; None when unmeasured."""
+        if self.interconnect_bw is None:
+            return None
+        return self.interconnect_bw / 1e9
+
 
 # Table 2 of the paper
 PAPER_CPU = Hardware("i7-6900", 53e9, 55e9, 157e9, 20e6, 64, 64e9)

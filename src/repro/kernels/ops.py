@@ -318,11 +318,14 @@ def multi_spja(pred_cols, pred_bounds, join_keys, join_tables, join_mults,
                join_use, q_valid, measure_cols, measure_sel, n_groups=1,
                mode: str = "auto", tile: int = DEFAULT_TILE,
                pred_widths=None, key_widths=None, key_refs=None,
-               m_widths=None, m_refs=None, n_rows=None):
+               m_widths=None, m_refs=None, n_rows=None, axis_name=None):
     """Whole-wave shared-scan SPJA: Q stacked queries, one fact pass.
     Argument semantics documented on ``repro.kernels.ref.multi_spja``
     (the oracle); returns (Q, n_groups) f32.  Streams may be bit-packed
-    (``*_widths[i] != 32``) per ``repro.sql.storage``'s layout."""
+    (``*_widths[i] != 32``) per ``repro.sql.storage``'s layout.
+    ``axis_name`` mirrors :func:`spja`'s sharded hook: under a
+    ``shard_map``, the whole wave's (Q, n_groups) partial grid is
+    ``psum``'d over the named mesh axis."""
     pred_widths = tuple(pred_widths or (32,) * len(pred_cols))
     key_widths = tuple(key_widths or (32,) * len(join_keys))
     m_widths = tuple(m_widths or (32,) * len(measure_cols))
@@ -339,19 +342,23 @@ def multi_spja(pred_cols, pred_bounds, join_keys, join_tables, join_mults,
         n_rows = int(measure_cols[0].shape[0])
     if _use_kernel(mode):
         from repro.kernels import multi_fused
-        return multi_fused.multi_spja(
+        out = multi_fused.multi_spja(
             tuple(pred_cols), pred_bounds, tuple(join_keys),
             tuple(join_tables), join_mults, join_use, q_valid,
             tuple(measure_cols), measure_sel, n_groups=n_groups, tile=tile,
             pred_widths=pred_widths, key_widths=key_widths,
             key_refs=key_refs, m_widths=m_widths, m_refs=m_refs,
             n_rows=n_rows)
-    return _multi_spja_ref_jit(
-        tuple(pred_cols), pred_bounds, tuple(join_keys), key_refs,
-        tuple(join_tables), join_mults, join_use, q_valid,
-        tuple(measure_cols), m_refs, measure_sel, n_groups=n_groups,
-        pred_widths=pred_widths, key_widths=key_widths, m_widths=m_widths,
-        n_rows=n_rows)
+    else:
+        out = _multi_spja_ref_jit(
+            tuple(pred_cols), pred_bounds, tuple(join_keys), key_refs,
+            tuple(join_tables), join_mults, join_use, q_valid,
+            tuple(measure_cols), m_refs, measure_sel, n_groups=n_groups,
+            pred_widths=pred_widths, key_widths=key_widths,
+            m_widths=m_widths, n_rows=n_rows)
+    if axis_name is not None:
+        out = jax.lax.psum(out, axis_name)
+    return out
 
 
 # the whole single-query SPJA ref path under jit: eagerly, every probe's
@@ -384,7 +391,13 @@ def _spja_ref_jit(pred_cols, pred_bounds, join_keys, key_refs, join_tables,
 def spja(pred_cols, pred_bounds, join_keys, join_tables, group_mults,
          m1, m2=None, measure_op="first", n_groups=1, mode: str = "auto",
          tile: int = DEFAULT_TILE, pred_widths=None, key_widths=None,
-         key_refs=None, m_widths=None, m_refs=None, n_rows=None):
+         key_refs=None, m_widths=None, m_refs=None, n_rows=None,
+         axis_name=None):
+    """``axis_name`` is the sharded-execution hook: inside a
+    ``shard_map`` over a device mesh, the kernel runs UNCHANGED on its
+    shard's streams and the dispatch layer ``psum``s the dense
+    ``(n_groups,)`` grid over the named mesh axis — the tree-reduce of
+    per-shard partial aggregates, fused into the same launch."""
     n_meas = 2 if measure_op in ("mul", "sub") else 1
     if n_meas == 1:
         m2 = None                   # accept-and-ignore: "first" reads m1 only
@@ -404,16 +417,22 @@ def spja(pred_cols, pred_bounds, join_keys, join_tables, group_mults,
         n_rows = int(m1.shape[0])
     if _use_kernel(mode):
         from repro.kernels import ssb_fused
-        return ssb_fused.spja(tuple(pred_cols), pred_bounds,
-                              tuple(join_keys), tuple(join_tables),
-                              group_mults, m1, m2, measure_op=measure_op,
-                              n_groups=n_groups, tile=tile,
-                              pred_widths=pred_widths,
-                              key_widths=key_widths, key_refs=key_refs,
-                              m_widths=m_widths, m_refs=m_refs,
-                              n_rows=n_rows)
-    return _spja_ref_jit(tuple(pred_cols), pred_bounds, tuple(join_keys),
-                         key_refs, tuple(join_tables), group_mults, m1, m2,
-                         m_refs, measure_op=measure_op, n_groups=n_groups,
-                         pred_widths=pred_widths, key_widths=key_widths,
-                         m_widths=m_widths, n_rows=n_rows)
+        out = ssb_fused.spja(tuple(pred_cols), pred_bounds,
+                             tuple(join_keys), tuple(join_tables),
+                             group_mults, m1, m2, measure_op=measure_op,
+                             n_groups=n_groups, tile=tile,
+                             pred_widths=pred_widths,
+                             key_widths=key_widths, key_refs=key_refs,
+                             m_widths=m_widths, m_refs=m_refs,
+                             n_rows=n_rows)
+    else:
+        out = _spja_ref_jit(tuple(pred_cols), pred_bounds,
+                            tuple(join_keys), key_refs,
+                            tuple(join_tables), group_mults, m1, m2,
+                            m_refs, measure_op=measure_op,
+                            n_groups=n_groups, pred_widths=pred_widths,
+                            key_widths=key_widths, m_widths=m_widths,
+                            n_rows=n_rows)
+    if axis_name is not None:
+        out = jax.lax.psum(out, axis_name)
+    return out

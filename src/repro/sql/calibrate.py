@@ -16,6 +16,10 @@ backend*, with the paper's own microbenchmark shapes:
   launch_overhead_s — one tiny jitted dispatch, timed round-trip: the
               per-launch cost that multiplies by 2^bits in a
               partition-at-a-time probe loop
+  interconnect_bw — a ``psum`` all-reduce over every visible device
+              (ring volume: ``2(D-1)/D`` of the payload per hop, per
+              device), the rate ``model._shard_reduce_time`` prices
+              sharded tree-reduction at; None on single-device hosts
 
 Results are cached to disk (JSON, keyed by backend) so calibration runs
 once per machine, not per process: ``model.default_hardware()`` picks the
@@ -56,6 +60,7 @@ class Calibration:
     cache_bw: float
     launch_overhead_s: float
     measured_at: float          # unix time
+    interconnect_bw: Optional[float] = None     # B/s; None if 1 device
 
     def to_json(self) -> dict:
         return dataclasses.asdict(self)
@@ -124,7 +129,31 @@ def measure(stream_elems: int = STREAM_ELEMS,
                        read_bw=float(read_bw), write_bw=float(write_bw),
                        cache_bw=float(cache_bw),
                        launch_overhead_s=float(t_launch),
-                       measured_at=time.time())
+                       measured_at=time.time(),
+                       interconnect_bw=_measure_interconnect())
+
+
+def _measure_interconnect(elems: int = 1 << 20) -> Optional[float]:
+    """All-reduce microbenchmark: ``psum`` a per-device f32 payload over
+    every visible device and price the ring volume — each device sends
+    and receives ``(D-1)/D`` of the payload per direction, so the moved
+    bytes are ``2(D-1) * elems * 4``.  None on single-device hosts (no
+    interconnect to measure; the model then falls back to read_bw, which
+    matches the host-loop merge actually taking that path)."""
+    import numpy as np
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import Mesh, PartitionSpec
+    devs = jax.devices()
+    if len(devs) < 2:
+        return None
+    d = len(devs)
+    mesh = Mesh(np.array(devs), ("data",))
+    x = jnp.ones((d, elems), jnp.float32)
+    f = jax.jit(shard_map(lambda y: jax.lax.psum(y, "data"), mesh=mesh,
+                          in_specs=PartitionSpec("data", None),
+                          out_specs=PartitionSpec(None, None)))
+    t = _bench(f, x)
+    return float(2.0 * (d - 1) * elems * 4 / t)
 
 
 # ---------------------------------------------------------------------------
@@ -180,12 +209,16 @@ def load_cached(backend: Optional[str] = None) -> Optional[Calibration]:
 def apply(calib: Calibration, base: Hardware) -> Hardware:
     """``base`` with its bandwidths replaced by the measured ones.
     Geometry (cache size, line bytes, capacity) stays from the base
-    description — the microbenchmarks measure *rates*, not topology."""
-    return dataclasses.replace(
-        base, name=base.name + "-calibrated",
-        read_bw=calib.read_bw, write_bw=calib.write_bw,
-        cache_bw=calib.cache_bw,
-        launch_overhead_s=calib.launch_overhead_s)
+    description — the microbenchmarks measure *rates*, not topology.
+    The interconnect rate only overrides when it was measurable (>= 2
+    devices); otherwise the base description's value survives."""
+    kw = dict(name=base.name + "-calibrated",
+              read_bw=calib.read_bw, write_bw=calib.write_bw,
+              cache_bw=calib.cache_bw,
+              launch_overhead_s=calib.launch_overhead_s)
+    if calib.interconnect_bw:
+        kw["interconnect_bw"] = calib.interconnect_bw
+    return dataclasses.replace(base, **kw)
 
 
 def calibrated_hardware(base: Hardware,
@@ -233,6 +266,11 @@ def main(argv=None) -> None:
     print(f"write_bw={calib.write_bw / 1e9:.2f} GB/s")
     print(f"cache_bw={calib.cache_bw / 1e9:.2f} GB/s")
     print(f"launch_overhead={calib.launch_overhead_s * 1e6:.2f} us")
+    if calib.interconnect_bw:
+        print(f"interconnect_bw={calib.interconnect_bw / 1e9:.2f} GB/s "
+              f"(all-reduce over {jax.device_count()} devices)")
+    else:
+        print("interconnect_bw=n/a (single device)")
     if args.json:
         os.makedirs(args.json, exist_ok=True)
         out = os.path.join(args.json, "CALIBRATION.json")

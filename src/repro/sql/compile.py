@@ -41,7 +41,19 @@
              ids/aggregates fan out.  ``execute_shared`` is the group
              entry point; ``compile_plan(plan, "shared")`` is its
              single-member degenerate form (a 1-wave).
-``auto``   — pick fused/opat/part per query from the bandwidth cost
+``sharded`` — the fused lowering over a row-partitioned fact table
+             (``repro.sql.shard``): each shard runs the UNCHANGED fused
+             kernel, dim hash tables are replicated (built once, served
+             to every shard), and the per-shard ``(n_groups,)`` partial
+             grids tree-reduce to the final answer.  Two execution
+             paths: a ``shard_map`` over the database's mesh feeding
+             stacked ``(S, pad_rows)`` streams to the kernel with the
+             reduction fused in as a ``psum`` (``ops.spja(...,
+             axis_name=...)``), and a host loop + host tree merge
+             (``mode="ref"``, or no mesh).  Both are bit-identical to
+             the solo fused pass — SSB's integer-valued f32 partial
+             sums are exact under any association order.
+``auto``   — pick fused/opat/part/sharded per query from the bandwidth cost
              model (``repro.sql.model``): predicted bytes moved per
              strategy, argmin at execute time (when the database — and
              therefore the cardinalities — is known).  Group-level
@@ -64,21 +76,26 @@ launch per join, ``part_loop`` one per non-empty partition.
 from __future__ import annotations
 
 import functools
+import time
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec
 
 from repro.kernels import ops
 from repro.kernels.common import DEFAULT_TILE
 from repro.sql import hashtable as HT
 from repro.sql import plan as P
+from repro.sql import shard as SH
 from repro.sql import ssb
 from repro.sql import storage as ST
 
-STRATEGIES = ("fused", "opat", "part", "part_loop", "shared", "auto")
+STRATEGIES = ("fused", "opat", "part", "part_loop", "shared", "sharded",
+              "auto")
 
 _INT32_MIN, _INT32_MAX = -(1 << 31), (1 << 31) - 1
 _MEASURE_OP_CODE = {"first": 0, "mul": 1, "sub": 2}
@@ -153,6 +170,16 @@ def shareability(plan: P.Plan) -> Optional[str]:
     ops) are inherited unchanged.  Group-level compatibility (every
     member scanning the same fact table) is checked by
     ``execute_shared``/the server, which see the whole wave."""
+    return fusability(plan)
+
+
+def shardability(plan: P.Plan) -> Optional[str]:
+    """None if the plan can run sharded, else the reason.  A shardable
+    plan is exactly a fusable one: the sharded strategy runs the fused
+    kernel per shard unchanged, so it inherits its constraints — plus
+    row partitioning is only sound for aggregate roots (which fusability
+    already requires; per-shard partial grids sum, row order does not
+    survive a partition)."""
     return fusability(plan)
 
 
@@ -231,6 +258,115 @@ def _execute_fused(plan: P.Plan, db: ssb.Database, mode: str, tile: int,
                    key_widths=key_widths, key_refs=key_refs,
                    m_widths=m_widths, m_refs=m_refs, n_rows=fact.n_rows)
     return np.asarray(out)
+
+
+# ---------------------------------------------------------------------------
+# sharded lowering (fused kernel per fact shard + tree-reduced aggregates)
+# ---------------------------------------------------------------------------
+
+
+def _execute_sharded(plan: P.Plan, db, mode: str, tile: int,
+                     cache: Optional[HT.HashTableCache]
+                     ) -> Tuple[np.ndarray, List[float], int]:
+    """Run ``plan`` fused-per-shard and merge the partial group grids;
+    returns ``(result, shard_times_s, device_count)``.
+
+    Degenerate cases — a plain Database, a single shard, or a plan that
+    scans something other than the sharded fact table — run the solo
+    fused lowering (timed, so callers always get a breakdown).  With a
+    mesh and a compiled mode the shards run under ``shard_map`` with the
+    reduction fused in as a ``psum``; otherwise a host loop times each
+    shard's fused pass individually and tree-merges on the host."""
+    if (not isinstance(db, SH.ShardedDatabase) or db.n_shards == 1
+            or plan.scan.table != db.fact):
+        base = SH.base_of(db)
+        t0 = time.perf_counter()
+        out = _execute_fused(plan, base, mode, tile, cache)
+        return out, [time.perf_counter() - t0], 1
+    if mode != "ref" and db.mesh is not None:
+        return _execute_fused_map(plan, db, mode, tile, cache)
+    partials, times = [], []
+    for shard in db.shards:
+        t0 = time.perf_counter()
+        partials.append(_execute_fused(plan, shard, mode, tile, cache))
+        times.append(time.perf_counter() - t0)
+    return SH.tree_merge(partials), times, db.n_shards
+
+
+def _execute_fused_map(plan: P.Plan, sdb, mode: str, tile: int,
+                       cache: Optional[HT.HashTableCache]
+                       ) -> Tuple[np.ndarray, List[float], int]:
+    """The mesh path: one ``shard_map`` launch over stacked
+    ``(S, pad_rows)`` streams.  Each mesh device sees its shard's slice,
+    runs the unchanged fused kernel, and the ``psum`` inside
+    (``ops.spja(..., axis_name=...)``) reduces the partial grids on the
+    interconnect — the host only sees the final ``(n_groups,)`` answer.
+    Pad rows are gated out by the validity stream, an extra all-pass
+    predicate with bounds ``(1, 1)`` on the 1/0 mask."""
+    mesh = sdb.mesh
+    base_fact = getattr(sdb.base, sdb.fact)
+    bounds = plan.preds
+    pb = np.concatenate([_rewritten_bounds(base_fact, bounds),
+                         np.array([[1, 1]], np.int32)])
+    pred_streams = ([SH.stacked_stream(sdb, c) for c, _, _ in bounds]
+                    + [SH.validity_stream(sdb)])
+    pred_cols = [s[0] for s in pred_streams]
+    pred_widths = tuple(s[1] for s in pred_streams)
+    joins = plan.joins
+    key_streams = [SH.stacked_stream(sdb, j.fact_col) for j in joins]
+    join_keys = [s[0] for s in key_streams]
+    key_widths = tuple(s[1] for s in key_streams)
+    key_refs = jnp.asarray(np.array([s[2] for s in key_streams], np.int32))
+    join_tables: List[jnp.ndarray] = []
+    for j in joins:
+        if cache is not None:
+            htk, htv = cache.get_or_build_replicated(sdb, j, mesh)
+        else:
+            htk, htv = SH.replicate(mesh, HT.build_dim_table(sdb.base, j))
+        join_tables.extend([htk, htv])
+    mults = jnp.asarray(np.array([j.mult for j in joins], np.int32))
+    proj = plan.project
+    m_cols = [proj.m1] if proj.op not in ("mul", "sub") \
+        else [proj.m1, proj.m2]
+    m_streams = [SH.stacked_stream(sdb, c) for c in m_cols]
+    m_arrs = [arr if w != 32 else arr.astype(jnp.float32)
+              for arr, w, _ in m_streams]
+    m1 = m_arrs[0]
+    m2 = m_arrs[1] if len(m_arrs) == 2 else None
+    m_widths = tuple(w for _, w, _ in m_streams)
+    m_refs = jnp.asarray(np.array([r for _, _, r in m_streams], np.int32))
+
+    sharded = {"pred": pred_cols, "key": join_keys, "m": m_arrs}
+    repl = {"pb": jnp.asarray(pb), "tables": join_tables, "mults": mults,
+            "kref": key_refs, "mref": m_refs}
+
+    n_m = len(m_arrs)
+
+    def shard_fn(shd, rep):
+        # each device's block arrives (1, pad_rows); drop the leading dim
+        flat = jax.tree.map(lambda x: x.reshape(x.shape[1:]), shd)
+        ms = flat["m"]
+        out = ops.spja(flat["pred"], rep["pb"], flat["key"],
+                       rep["tables"], rep["mults"], ms[0],
+                       ms[1] if n_m == 2 else None, measure_op=proj.op,
+                       n_groups=plan.n_groups, mode=mode, tile=tile,
+                       pred_widths=pred_widths, key_widths=key_widths,
+                       key_refs=rep["kref"], m_widths=m_widths,
+                       m_refs=rep["mref"], n_rows=sdb.pad_rows,
+                       axis_name=SH.SHARD_AXIS)
+        return out
+
+    mapped = shard_map(
+        shard_fn, mesh=mesh,
+        in_specs=(jax.tree.map(lambda _: PartitionSpec(SH.SHARD_AXIS, None),
+                               sharded),
+                  jax.tree.map(lambda _: PartitionSpec(), repl)),
+        out_specs=PartitionSpec(),
+        check_rep=False)        # Pallas calls have no replication rule
+    t0 = time.perf_counter()
+    out = np.asarray(jax.block_until_ready(mapped(sharded, repl)))
+    dt = time.perf_counter() - t0
+    return out, [dt], sdb.n_shards
 
 
 # ---------------------------------------------------------------------------
@@ -424,6 +560,45 @@ def execute_shared(plans: List[P.Plan], db: ssb.Database,
                                     tile=tile, **kwargs))
     return [out[qi, :plan.n_groups].copy()
             for qi, plan in enumerate(plans)]
+
+
+def execute_shared_sharded(plans: List[P.Plan], db,
+                           mode: str = "auto", tile: int = DEFAULT_TILE,
+                           cache: Optional[HT.HashTableCache] = None,
+                           pad_to: Optional[int] = None,
+                           prebuilt: Optional[Dict[Tuple, Tuple]] = None
+                           ) -> Tuple[List[np.ndarray], List[float]]:
+    """Shared-scan wave over a sharded fact table: PR 4's wave formation
+    composed with sharding.  Each shard runs the whole wave as ONE
+    ``multi_spja`` pass (the dim tables are built once — the cache binds
+    every shard replica to the base database), then the per-shard
+    ``(Q, n_groups)`` partial grids tree-merge on the host.  Returns
+    ``(results_in_submission_order, shard_times_s)``.
+
+    The merge is the host path by construction — a wave's stacked
+    parameters are per-shard anyway (bounds/mults/selectors are
+    replicated, streams are not), and the host tree merge is
+    bit-identical to a mesh ``psum`` on SSB's exact f32 partials."""
+    if not isinstance(db, SH.ShardedDatabase) or db.n_shards == 1:
+        base = SH.base_of(db)
+        t0 = time.perf_counter()
+        results = execute_shared(plans, base, mode=mode, tile=tile,
+                                 cache=cache, pad_to=pad_to,
+                                 prebuilt=prebuilt)
+        return results, [time.perf_counter() - t0]
+    partials, times = [], []
+    for shard in db.shards:
+        t0 = time.perf_counter()
+        _, args, kwargs, n_groups = shared_params(
+            plans, shard, cache=cache, pad_to=pad_to, prebuilt=prebuilt)
+        LAUNCH_STATS["probe"] += 1      # one whole-wave launch per shard
+        partials.append(np.asarray(
+            ops.multi_spja(*args, n_groups=n_groups, mode=mode,
+                           tile=tile, **kwargs)))
+        times.append(time.perf_counter() - t0)
+    out = SH.tree_merge(partials)
+    return ([out[qi, :plan.n_groups].copy()
+             for qi, plan in enumerate(plans)], times)
 
 
 # ---------------------------------------------------------------------------
@@ -673,6 +848,11 @@ class CompiledQuery:
     ``decided`` holds the strategy that ran and ``predictions`` the
     model's per-strategy predicted seconds (for "fixed" strategies,
     ``decided`` is just the strategy).
+
+    After a ``sharded`` execution, ``device_count`` holds the shard
+    count that ran and ``shard_times_s`` the per-shard wall times (one
+    entry for the whole launch on the ``shard_map`` path, which the
+    host cannot decompose).
     """
     plan: P.Plan
     strategy: str
@@ -681,6 +861,8 @@ class CompiledQuery:
     decided: Optional[str] = None
     predictions: Optional[Dict[str, float]] = field(default=None,
                                                     repr=False)
+    device_count: Optional[int] = None
+    shard_times_s: Optional[List[float]] = field(default=None, repr=False)
 
     def execute(self, db: ssb.Database, mode: str = "auto",
                 tile: int = DEFAULT_TILE,
@@ -688,16 +870,23 @@ class CompiledQuery:
         strategy = self.strategy
         if strategy == "auto":
             from repro.sql import model as M
-            choice = M.choose(self.plan, db)
+            choice = M.choose(self.plan, db,
+                              n_shards=SH.shard_count(db))
             strategy = choice.strategy
             self.predictions = choice.predictions
         self.decided = strategy
+        if strategy == "sharded":
+            out, times, dc = _execute_sharded(self.plan, db, mode, tile,
+                                              cache)
+            self.shard_times_s, self.device_count = times, dc
+            return out
+        base = SH.base_of(db)
         if strategy == "fused":
-            return _execute_fused(self.plan, db, mode, tile, cache)
+            return _execute_fused(self.plan, base, mode, tile, cache)
         if strategy == "shared":        # degenerate 1-member wave
-            return execute_shared([self.plan], db, mode=mode, tile=tile,
+            return execute_shared([self.plan], base, mode=mode, tile=tile,
                                   cache=cache)[0]
-        return _execute_chain(self.plan, db, mode, tile, cache,
+        return _execute_chain(self.plan, base, mode, tile, cache,
                               join_mode=(strategy if strategy in
                                          _JOIN_LOWERINGS else "opat"))
 
@@ -716,6 +905,10 @@ def compile_plan(plan: P.Plan, strategy: str = "fused") -> CompiledQuery:
     * ``part_loop`` — radix-partitioned joins, host partition-at-a-time
       probe loop (the fused kernel's A/B baseline); same fallback rule
       and reason reporting as ``part``.
+    * ``sharded`` — fused kernel per fact shard + tree-reduced partial
+      aggregates; same fusability constraints (and fallback rule) as
+      ``fused`` — on an unsharded database it degenerates to the solo
+      fused pass.
     * ``auto``  — defer to the bandwidth cost model per database at
       execute time.
     """
@@ -727,6 +920,12 @@ def compile_plan(plan: P.Plan, strategy: str = "fused") -> CompiledQuery:
         if reason is None:
             return CompiledQuery(plan, "fused", "fused")
         return CompiledQuery(plan, "opat", "fused", fallback_reason=reason)
+    if strategy == "sharded":
+        reason = shardability(plan)     # classifies; raises on malformed
+        if reason is None:
+            return CompiledQuery(plan, "sharded", "sharded")
+        return CompiledQuery(plan, "opat", "sharded",
+                             fallback_reason=reason)
     if strategy == "shared":
         reason = shareability(plan)     # classifies; raises on malformed
         if reason is None:

@@ -19,6 +19,7 @@ import zlib
 from dataclasses import dataclass, field
 from typing import Dict, Iterable, List, Optional, Set, Tuple
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -199,7 +200,12 @@ def db_fingerprint(db, tables: Optional[Iterable[str]] = None) -> Tuple:
     *attributes*: the cache only ever builds from dimension tables, so
     scoping the comparison to the dims its entries actually reference
     skips streaming the (orders-of-magnitude larger) fact table on every
-    reload.  ``None`` fingerprints everything."""
+    reload.  ``None`` fingerprints everything.
+
+    A ``repro.sql.shard.ShardedDatabase`` fingerprints as its base
+    Database (duck-typed via the ``base`` attribute): the shards differ
+    only in the fact table, which build sides never read."""
+    db = getattr(db, "base", db)
     names = None if tables is None else set(tables)
     items = []
     for attr, t in vars(db).items():
@@ -239,18 +245,26 @@ class HashTableCache:
     _db: object = None
     _dims: Set[str] = field(default_factory=set)
     _db_fp: Optional[Tuple] = None      # (dims scope, fingerprint) memo
+    # databases already proven equal to the binding: the base database
+    # plus every shard replica (repro.sql.shard slices the fact table
+    # but shares the dim objects) and every reloaded copy that passed
+    # the fingerprint check — re-fingerprinting per shard switch would
+    # put a crc pass on the sharded host loop's inner path
+    _accepted: List[object] = field(default_factory=list, repr=False)
 
     def _bind(self, db) -> None:
-        if self._db is db:
+        if self._db is db or any(db is a for a in self._accepted):
             return
         if self._db is None:
             self._db = db           # fingerprint deferred: the common
-            return                  # never-reloaded case pays nothing
+            self._accepted.append(db)   # never-reloaded case pays nothing
+            return
         dims = frozenset(self._dims)
         if self._db_fp is None or self._db_fp[0] != dims:
             self._db_fp = (dims, db_fingerprint(self._db, dims))
         if db_fingerprint(db, dims) == self._db_fp[1]:
-            self._db = db           # reloaded copy of the same data
+            self._db = db           # reloaded copy / shard replica of
+            self._accepted.append(db)   # the same data
             return
         raise ValueError(
             "HashTableCache is scoped to one Database; call reset() (or "
@@ -262,6 +276,7 @@ class HashTableCache:
         self._dims.clear()
         self._db = None
         self._db_fp = None
+        self._accepted.clear()
 
     def get_or_build(self, db: ssb.Database, join: P.HashJoin
                      ) -> Tuple[jnp.ndarray, jnp.ndarray]:
@@ -310,6 +325,30 @@ class HashTableCache:
             return hit
         self.misses += 1
         built = build_dim_partitions(db, join, bits, packed=packed)
+        if _cacheable(key):
+            self.tables[key] = built
+            self._dims.add(join.dim)
+        return built
+
+    def get_or_build_replicated(self, db, join: P.HashJoin, mesh
+                                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """Per-device binding of one join's table: ``get_or_build``, then
+        ``device_put`` fully replicated over ``mesh`` — cached under the
+        logical key + the mesh's device set, so the transfer happens once
+        per build, not once per sharded launch.  The logical entry is
+        shared with the solo path (a replicated fetch after a solo build
+        is one hit + one transfer, no rebuild)."""
+        from jax.sharding import NamedSharding, PartitionSpec
+        self._bind(db)
+        key = (join_cache_key(join), "replicated",
+               tuple(d.id for d in mesh.devices.flat))
+        hit = self.tables.get(key)
+        if hit is not None:
+            self.hits += 1
+            return hit
+        htk, htv = self.get_or_build(db, join)
+        sh = NamedSharding(mesh, PartitionSpec())
+        built = (jax.device_put(htk, sh), jax.device_put(htv, sh))
         if _cacheable(key):
             self.tables[key] = built
             self._dims.add(join.dim)

@@ -167,6 +167,21 @@ def plan_stats(plan: P.Plan, db: ssb.Database) -> PlanStats:
 # ---------------------------------------------------------------------------
 
 
+def _shard_reduce_time(n_groups: int, n_shards: int, hw: Hardware) -> float:
+    """Cost of tree-reducing the per-shard ``(n_groups,)`` partial grids:
+    ``ceil(log2 S)`` merge levels, each moving the grid once over the
+    interconnect (measured by the all-reduce microbenchmark in
+    ``repro.sql.calibrate``; falls back to read bandwidth — the host-loop
+    merge moves the same bytes through memory) plus one dispatch.  This
+    is the term that keeps tiny-output queries from sharding blindly:
+    the N x scan win must beat ``log2(N)`` grid transfers."""
+    if n_shards <= 1:
+        return 0.0
+    ici = hw.interconnect_bw or hw.read_bw
+    levels = int(np.ceil(np.log2(n_shards)))
+    return levels * (n_groups * W / ici + hw.launch_overhead_s)
+
+
 def _probe_time(n_probe: float, table_bytes: float, hw: Hardware) -> float:
     """§4.3 step function: cache-resident probes run at cache bandwidth;
     larger tables pay a memory line per uncached probe and the cache line
@@ -234,10 +249,15 @@ def _shared_stream_cols(plans):
 
 
 def predict(plan: P.Plan, db: ssb.Database,
-            hw: Optional[Hardware] = None) -> Dict[str, float]:
+            hw: Optional[Hardware] = None,
+            n_shards: Optional[int] = None) -> Dict[str, float]:
     """Predicted seconds per physical strategy.  ``fused`` is absent when
     the plan is not fusable (the compiler would silently fall back — the
-    model scores what would actually run)."""
+    model scores what would actually run).  ``sharded`` appears when the
+    plan is fusable AND ``n_shards > 1``: the fused cost with the scan
+    and probes divided across shards, plus the interconnect term for
+    tree-reducing the partial group grids
+    (:func:`_shard_reduce_time`)."""
     from repro.sql.compile import fusability, partability
     hw = hw or default_hardware()
     st = plan_stats(plan, db)
@@ -312,6 +332,15 @@ def predict(plan: P.Plan, db: ssb.Database,
     out = {"opat": opat_t}
     if fusability(plan) is None:
         out["fused"] = fused_t
+        if n_shards is not None and n_shards > 1:
+            s = n_shards
+            # per-shard scan + probes run concurrently (wall time is one
+            # shard's share), then the reduce pays the interconnect
+            out["sharded"] = (col_scan / s
+                              + sum(_probe_time(n / s, ht_bytes(b), hw)
+                                    for b in st.join_builds)
+                              + _shard_reduce_time(plan.n_groups, s, hw)
+                              + launch)
     if partability(plan) is None:
         out["part"] = part_t
         out["part_loop"] = part_loop_t
@@ -319,9 +348,14 @@ def predict(plan: P.Plan, db: ssb.Database,
 
 
 def predict_shared(plans, db: ssb.Database,
-                   hw: Optional[Hardware] = None) -> Dict[str, float]:
+                   hw: Optional[Hardware] = None,
+                   n_shards: Optional[int] = None) -> Dict[str, float]:
     """Shared-wave vs solo cost of a scan-compatible group of fusable
-    aggregate plans: ``{"shared": s, "solo": s}`` predicted seconds.
+    aggregate plans: ``{"shared": s, "solo": s}`` predicted seconds —
+    plus ``shared_sharded`` when ``n_shards > 1``: the same wave with
+    its one streamed pass divided across the fact shards (per-shard
+    launches — the wave runs whole on each shard — plus the
+    interconnect reduce of the stacked partial grids).
 
     ``shared`` prices ONE streamed pass over the wave's *union* of fact
     columns (fact bytes read once per wave), one probe stream per
@@ -371,8 +405,19 @@ def predict_shared(plans, db: ssb.Database,
                 + sum(_probe_time(n, ht_bytes(b), hw) for b in builds)
                 + out_payload / hw.write_bw
                 + hw.launch_overhead_s)
-    solo_t = sum(choose(plan, db, hw).predicted_s for plan in plans)
-    return {"shared": shared_t, "solo": solo_t}
+    solo_t = sum(choose(plan, db, hw, n_shards=n_shards).predicted_s
+                 for plan in plans)
+    out = {"shared": shared_t, "solo": solo_t}
+    if n_shards is not None and n_shards > 1:
+        s = n_shards
+        red_groups = sum(plan.n_groups for plan in uniq)
+        out["shared_sharded"] = (
+            stream_bytes * n / hw.read_bw / s
+            + sum(_probe_time(n / s, ht_bytes(b), hw) for b in builds)
+            + out_payload / hw.write_bw
+            + _shard_reduce_time(red_groups, s, hw)
+            + hw.launch_overhead_s * s)     # host loop: one launch/shard
+    return out
 
 
 def scanned_bytes_shared(plans, fact) -> Tuple[int, int]:
@@ -395,19 +440,25 @@ class Choice:
         return self.predictions[self.strategy]
 
 
-# deterministic tie-break: prefer the simpler lowering
-_PREFERENCE = ("fused", "opat", "part", "part_loop")
+# deterministic tie-break: prefer the simpler lowering (ties go to the
+# solo fused pass before spinning up the mesh)
+_PREFERENCE = ("fused", "opat", "part", "part_loop", "sharded")
 
 # strategies auto may execute: part_loop is the fused kernel's A/B
-# baseline, predicted (for fig8's ranking) but never chosen
-_CANDIDATES = ("fused", "opat", "part")
+# baseline, predicted (for fig8's ranking) but never chosen; sharded
+# only enters predict's vector when the caller reports n_shards > 1
+_CANDIDATES = ("fused", "opat", "part", "sharded")
 
 
 def choose(plan: P.Plan, db: ssb.Database,
-           hw: Optional[Hardware] = None) -> Choice:
+           hw: Optional[Hardware] = None,
+           n_shards: Optional[int] = None) -> Choice:
     """The ``auto`` strategy's decision: argmin of ``predict`` over the
-    executable candidates (the ``part_loop`` baseline is excluded)."""
-    preds = predict(plan, db, hw)
+    executable candidates (the ``part_loop`` baseline is excluded).
+    ``n_shards`` is the shard count the caller could run sharded at
+    (``shard.shard_count(db)``) — the single- vs multi-device
+    arbitration happens right here, per query."""
+    preds = predict(plan, db, hw, n_shards=n_shards)
     best = min((s for s in preds if s in _CANDIDATES),
                key=lambda s: (preds[s], _PREFERENCE.index(s)))
     return Choice(best, preds)

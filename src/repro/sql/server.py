@@ -105,6 +105,11 @@ class QueryResult:
     bytes_scanned_plain: Optional[int] = None  # same streams at the
     #   nominal 4-byte width — the packed-vs-plain ratio is
     #   bytes_scanned_plain / bytes_scanned
+    device_count: Optional[int] = None  # shards the execution ran over
+    #   (None: the solo single-device path — no shard decomposition)
+    shard_times_s: Optional[List[float]] = None  # per-shard wall times of
+    #   a sharded execution (one entry for a whole shard_map launch); for
+    #   a sharded shared wave, every member reports the wave's breakdown
 
 
 class QueryServer:
@@ -246,8 +251,20 @@ class QueryServer:
         """One scan-compatible wave.  ``shared`` requests always run the
         shared pass; ``auto`` waves run it only when the cost model says
         sharing beats the members' solo argmins (a 1-member wave never
-        does — shared is fused plus wave overhead)."""
+        does — shared is fused plus wave overhead).
+
+        On a resident *sharded* database the whole wave routes through
+        sharded execution (``compile.execute_shared_sharded``): wave
+        formation (PR 4) and decode-on-scan (PR 5) compose with the
+        shard decomposition for free — each shard runs the wave's one
+        multi-query pass, and only the stacked partial grids merge.
+        ``auto`` waves arbitrate all three ways: solo argmins vs one
+        shared pass vs the shared pass divided across shards
+        (``model.predict_shared(..., n_shards=...)``)."""
+        from repro.sql import shard as SH
         strategy = key[2]
+        n_shards = SH.shard_count(self.db)
+        sharded = n_shards > 1
         preds = None
         if strategy == "auto":
             from repro.sql import model as M
@@ -255,8 +272,14 @@ class QueryServer:
             if len(wave) > 1:
                 try:
                     preds = M.predict_shared([r.plan for r in wave],
-                                             self.db)
-                    run_shared = preds["shared"] < preds["solo"]
+                                             self.db, n_shards=n_shards)
+                    shared_t = min(preds["shared"],
+                                   preds.get("shared_sharded",
+                                             float("inf")))
+                    run_shared = shared_t < preds["solo"]
+                    sharded = (sharded and
+                               preds.get("shared_sharded",
+                                         float("inf")) < preds["shared"])
                 except Exception:           # noqa: BLE001 — model failure
                     run_shared = False      # falls back to solo execution
                     # observable: a broken shared-cost model must not be
@@ -264,17 +287,23 @@ class QueryServer:
                     self.stats["shared_arbitration_errors"] += 1
             if not run_shared:
                 return {req.rid: self._execute(req) for req in wave}
-        return self._run_shared(wave, model_predictions=preds)
+        return self._run_shared(wave, model_predictions=preds,
+                                sharded=sharded)
 
     def _run_shared(self, wave: List[QueryRequest],
-                    model_predictions: Optional[Dict[str, float]] = None
-                    ) -> Dict[int, QueryResult]:
+                    model_predictions: Optional[Dict[str, float]] = None,
+                    sharded: bool = False) -> Dict[int, QueryResult]:
         """Execute one wave as a single shared fused pass, with member
         fault isolation: a member whose join build sides fail to
         construct (the per-member failure surface — predicate/measure
         validation already passed at bucketing time) is excluded and
-        reported errored; the survivors still share one pass."""
+        reported errored; the survivors still share one pass.
+
+        ``sharded=True`` runs the wave once per fact shard and merges
+        the stacked partial grids (``compile.execute_shared_sharded``);
+        members then also report ``device_count``/``shard_times_s``."""
         from repro.sql import model as M
+        from repro.sql import shard as SH
         out: Dict[int, QueryResult] = {}
         t0 = time.perf_counter()
         survivors: List[QueryRequest] = []
@@ -332,6 +361,10 @@ class QueryServer:
         except Exception:                   # noqa: BLE001 — reporting only
             bytes_enc = bytes_plain = None
 
+        flavor = "shared_sharded" if sharded else "shared"
+        dc = SH.shard_count(self.db) if sharded else None
+        shard_times: Optional[List[float]] = None
+
         def member_result(req, result, error, dt):
             self.stats["queries"] += 1
             if req.strategy == "auto":
@@ -345,12 +378,14 @@ class QueryServer:
                 rid=req.rid, name=req.plan.name, result=result,
                 strategy="shared", fallback_reason=None, latency_s=dt,
                 cache_hits=hits, cache_misses=misses, error=error,
-                model_choice="shared" if req.strategy == "auto" else None,
+                model_choice=flavor if req.strategy == "auto" else None,
                 predicted_s=(None if model_predictions is None
-                             else model_predictions["shared"]),
+                             else model_predictions.get(
+                                 flavor, model_predictions["shared"])),
                 predictions=model_predictions,
                 shared_wave_size=len(survivors),
-                bytes_scanned=bytes_enc, bytes_scanned_plain=bytes_plain)
+                bytes_scanned=bytes_enc, bytes_scanned_plain=bytes_plain,
+                device_count=dc, shard_times_s=shard_times)
 
         # pow2 member-count buckets (like the LM server's length buckets):
         # padded slots are inert but not free, so a small wave must not
@@ -358,10 +393,16 @@ class QueryServer:
         # O(log max_batch) cached executables per wave composition
         pad_to = 1 << max(len(uniq_reqs) - 1, 0).bit_length()
         try:
-            results = execute_shared(
-                [r.plan for r in uniq_reqs], self.db, mode=self.mode,
-                tile=self.tile, cache=self.cache, pad_to=pad_to,
-                prebuilt=prebuilt)
+            if sharded:
+                results, shard_times = C.execute_shared_sharded(
+                    [r.plan for r in uniq_reqs], self.db, mode=self.mode,
+                    tile=self.tile, cache=self.cache, pad_to=pad_to,
+                    prebuilt=prebuilt)
+            else:
+                results = execute_shared(
+                    [r.plan for r in uniq_reqs], self.db, mode=self.mode,
+                    tile=self.tile, cache=self.cache, pad_to=pad_to,
+                    prebuilt=prebuilt)
         except Exception as e:              # noqa: BLE001 — isolate wave
             dt = time.perf_counter() - t0
             msg = f"{type(e).__name__}: {e}"
@@ -370,6 +411,8 @@ class QueryServer:
             return out
         dt = time.perf_counter() - t0
         self.stats["shared_waves"] += 1
+        if sharded:
+            self.stats["sharded_waves"] += 1
         owned = set()
         for req in survivors:
             result = results[slot_of[req.rid]]
@@ -439,4 +482,5 @@ class QueryServer:
             model_choice=ran if req.strategy == "auto" else None,
             predicted_s=None if preds is None else preds.get(ran),
             predictions=preds,
-            bytes_scanned=bytes_enc, bytes_scanned_plain=bytes_plain)
+            bytes_scanned=bytes_enc, bytes_scanned_plain=bytes_plain,
+            device_count=cq.device_count, shard_times_s=cq.shard_times_s)

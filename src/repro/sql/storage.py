@@ -44,7 +44,7 @@ reference correction at all.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass, field, replace
 from typing import Dict, Optional, Tuple
 
 import jax.numpy as jnp
@@ -247,6 +247,24 @@ def pack_column(values: np.ndarray,
     if enc.kind == "plain":
         return PackedColumn(enc, values)
     return PackedColumn(enc, pack_words(values, enc.width, enc.ref))
+
+
+def slice_rows(table, lo: int, hi: int):
+    """Row-range copy ``[lo, hi)`` of a table — the fact-table shard cut
+    (``repro.sql.shard``).  Plain tables slice each column (numpy views:
+    a shard of a plain database shares its parent's buffers); packed
+    columns re-pack their slice under the PARENT encoding (same
+    kind/width/ref via :func:`pack_column`'s explicit-encoding form), so
+    predicate rewrites, stream widths and frames of reference computed
+    against the parent table stay valid on every shard."""
+    if isinstance(table, PackedTable):
+        cols = {}
+        for name, col in table.columns.items():
+            enc = replace(col.encoding, n_rows=hi - lo)
+            cols[name] = pack_column(col.decode()[lo:hi], enc)
+        return PackedTable(table.name, cols)
+    return ssb.Table(table.name, {c: v[lo:hi]
+                                  for c, v in table.columns.items()})
 
 
 def pack_table(table: ssb.Table) -> PackedTable:

@@ -1,0 +1,515 @@
+"""Sharded fact-table execution (repro.sql.shard + strategy ``sharded``).
+
+The tentpole claim under test: partitioning the fact table row-wise,
+running the UNCHANGED fused kernel per shard, and tree-reducing the
+partial group grids is bit-identical to the solo fused pass — on plain
+and packed storage, at any shard count, shards empty or not, host-loop
+or shard_map path.  Plus the satellites: the hypothesis merge property,
+the interconnect-aware cost model, the server routing, the calibration
+roundtrip, and the compare-gate tolerance for new benchmark tables.
+"""
+import dataclasses
+import importlib.util
+import json
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from repro.sql import compile as C
+from repro.sql import engine, ssb
+from repro.sql import hashtable as HT
+from repro.sql import model as M
+from repro.sql import shard as SH
+from repro.sql import storage as ST
+from repro.sql.server import QueryServer
+
+DB = ssb.generate(sf=0.005, seed=11)
+PDB = ST.pack_database(DB)
+QUERIES = engine.ssb_queries()
+
+multidevice = pytest.mark.skipif(
+    jax.device_count() < 2,
+    reason="needs >=2 devices (XLA_FLAGS=--xla_force_host_platform_"
+           "device_count=8)")
+
+
+# ---------------------------------------------------------------------------
+# shard_database / slice_rows mechanics
+# ---------------------------------------------------------------------------
+
+
+def test_shard_database_bounds_cover_and_partition():
+    sdb = SH.shard_database(DB, 3)
+    n = DB.lineorder.n_rows
+    assert sdb.bounds[0] == 0 and sdb.bounds[-1] == n
+    assert sum(s.lineorder.n_rows for s in sdb.shards) == n
+    # contiguous, non-overlapping, sizes differ by at most one row
+    sizes = np.diff(sdb.bounds)
+    assert sizes.max() - sizes.min() <= 1
+    # dim tables are shared BY OBJECT (replication, not copies)
+    for s in sdb.shards:
+        assert s.date is DB.date
+        assert s.part is DB.part
+    # row content is exactly the partition
+    got = np.concatenate([np.asarray(s.lineorder["lo_revenue"])
+                          for s in sdb.shards])
+    assert np.array_equal(got, np.asarray(DB.lineorder["lo_revenue"]))
+
+
+def test_shard_database_delegates_to_base():
+    sdb = SH.shard_database(DB, 2)
+    assert sdb.sf == DB.sf
+    assert sdb.lineorder is DB.lineorder        # __getattr__ delegation
+    assert SH.base_of(sdb) is DB
+    assert SH.base_of(DB) is DB
+    assert SH.shard_count(sdb) == 2
+    assert SH.shard_count(DB) == 1
+
+
+def test_slice_rows_packed_matches_plain_slice():
+    lo, hi = 7, 103
+    plain = ST.slice_rows(DB.lineorder, lo, hi)
+    packed = ST.slice_rows(PDB.lineorder, lo, hi)
+    assert plain.n_rows == packed.n_rows == hi - lo
+    for col in DB.lineorder.columns:
+        assert np.array_equal(np.asarray(plain[col]),
+                              np.asarray(DB.lineorder[col])[lo:hi]), col
+        assert np.array_equal(np.asarray(packed[col]),
+                              np.asarray(plain[col])), col
+
+
+def test_shard_count_may_exceed_rows_with_empty_tail_shards():
+    tiny = dataclasses.replace(DB, lineorder=ST.slice_rows(DB.lineorder,
+                                                           0, 5))
+    sdb = SH.shard_database(tiny, 8)
+    assert sdb.n_shards == 8
+    assert sum(s.lineorder.n_rows for s in sdb.shards) == 5
+    assert any(s.lineorder.n_rows == 0 for s in sdb.shards)
+    # execution over empty shards still matches solo
+    plan = QUERIES["q1.1"]
+    solo = C.compile_plan(plan, "fused").execute(tiny, mode="ref")
+    out = C.compile_plan(plan, "sharded").execute(sdb, mode="ref")
+    assert np.array_equal(solo, out)
+
+
+# ---------------------------------------------------------------------------
+# the tentpole: bit-identity sharded vs solo, all 13 queries
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("s", [1, 2, 8])
+def test_all_13_sharded_bit_identical_plain(s):
+    cache = HT.HashTableCache()
+    sdb = SH.shard_database(DB, s)
+    for name, plan in QUERIES.items():
+        solo = C.compile_plan(plan, "fused").execute(DB, mode="ref",
+                                                     cache=cache)
+        cq = C.compile_plan(plan, "sharded")
+        out = cq.execute(sdb, mode="ref", cache=cache)
+        assert np.array_equal(solo, out), (name, s)
+        assert cq.device_count == (s if s > 1 else 1)
+        assert len(cq.shard_times_s) == cq.device_count
+
+
+@pytest.mark.parametrize("s", [2, 8])
+def test_all_13_sharded_bit_identical_packed(s):
+    cache = HT.HashTableCache()
+    sdb = SH.shard_database(PDB, s)
+    for name, plan in QUERIES.items():
+        solo = C.compile_plan(plan, "fused").execute(PDB, mode="ref",
+                                                     cache=cache)
+        out = C.compile_plan(plan, "sharded").execute(sdb, mode="ref",
+                                                      cache=cache)
+        assert np.array_equal(solo, out), (name, s)
+
+
+def test_sharded_on_plain_database_degenerates_to_fused():
+    plan = QUERIES["q2.1"]
+    cq = C.compile_plan(plan, "sharded")
+    out = cq.execute(DB, mode="ref")
+    solo = C.compile_plan(plan, "fused").execute(DB, mode="ref")
+    assert np.array_equal(solo, out)
+    assert cq.device_count == 1
+    assert len(cq.shard_times_s) == 1
+
+
+def test_unshardable_plan_falls_back_to_opat_with_reason():
+    from repro.sql.plan import QueryBuilder
+    row_plan = (QueryBuilder("rows").scan("lineorder")
+                .order_by("lo_orderdate").build())
+    cq = C.compile_plan(row_plan, "sharded")
+    assert cq.strategy == "opat"
+    assert cq.requested == "sharded"
+    assert "row-returning" in cq.fallback_reason
+
+
+@multidevice
+@pytest.mark.parametrize("dbkind", ["plain", "packed"])
+def test_shard_map_path_bit_identical(dbkind):
+    """The mesh path: shard_map over stacked streams with the psum fused
+    in.  Gated on visible devices; CI's multidevice job forces 8."""
+    db = DB if dbkind == "plain" else PDB
+    cache = HT.HashTableCache()
+    s = min(jax.device_count(), 8)
+    sdb = SH.shard_database(db, s)
+    assert sdb.mesh is not None
+    for name, plan in QUERIES.items():
+        solo = C.compile_plan(plan, "fused").execute(db, mode="jnp",
+                                                     cache=cache)
+        cq = C.compile_plan(plan, "sharded")
+        out = cq.execute(sdb, mode="jnp", cache=cache)
+        assert np.array_equal(solo, out), (name, s)
+        assert cq.device_count == s
+        assert len(cq.shard_times_s) == 1       # one whole-mesh launch
+
+
+# ---------------------------------------------------------------------------
+# shared waves over a sharded database (PR 4 x sharding)
+# ---------------------------------------------------------------------------
+
+
+def test_execute_shared_sharded_matches_execute_shared():
+    plans = list(QUERIES.values())
+    cache = HT.HashTableCache()
+    base = C.execute_shared(plans, DB, mode="ref", cache=cache)
+    sdb = SH.shard_database(DB, 4)
+    got, times = C.execute_shared_sharded(plans, sdb, mode="ref",
+                                          cache=cache)
+    assert len(times) == 4
+    for b, g, plan in zip(base, got, plans):
+        assert np.array_equal(b, g), plan.name
+
+
+def test_server_shared_wave_routes_sharded():
+    sdb = SH.shard_database(DB, 4)
+    server = QueryServer(sdb, mode="ref", max_batch=16)
+    rids = {n: server.submit(p, strategy="shared")
+            for n, p in QUERIES.items()}
+    results = server.run()
+    for name, rid in rids.items():
+        r = results[rid]
+        assert r.error is None, (name, r.error)
+        fused = np.asarray(engine.run_query(DB, QUERIES[name], mode="ref"))
+        assert np.array_equal(r.result, fused), name
+        assert r.device_count == 4
+        assert len(r.shard_times_s) == 4
+    assert server.stats["sharded_waves"] >= 1
+
+
+def test_server_solo_sharded_request_reports_breakdown():
+    sdb = SH.shard_database(DB, 2)
+    server = QueryServer(sdb, mode="ref")
+    rid = server.submit(QUERIES["q3.2"], strategy="sharded")
+    r = server.run()[rid]
+    assert r.error is None
+    assert r.strategy == "sharded"
+    assert r.device_count == 2
+    assert len(r.shard_times_s) == 2
+    fused = np.asarray(engine.run_query(DB, QUERIES["q3.2"], mode="ref"))
+    assert np.array_equal(r.result, fused)
+
+
+def test_server_auto_wave_on_sharded_db_is_correct():
+    sdb = SH.shard_database(DB, 2)
+    server = QueryServer(sdb, mode="ref", max_batch=16)
+    rids = {n: server.submit(p, strategy="auto")
+            for n, p in QUERIES.items()}
+    results = server.run()
+    for name, rid in rids.items():
+        r = results[rid]
+        assert r.error is None, (name, r.error)
+        fused = np.asarray(engine.run_query(DB, QUERIES[name], mode="ref"))
+        assert np.array_equal(r.result, fused), name
+        assert r.model_choice in ("shared", "shared_sharded", "fused",
+                                  "opat", "part", "sharded")
+
+
+def test_server_on_plain_db_never_reports_devices():
+    server = QueryServer(DB, mode="ref")
+    rid = server.submit(QUERIES["q1.2"], strategy="fused")
+    r = server.run()[rid]
+    assert r.error is None
+    assert r.device_count is None
+    assert r.shard_times_s is None
+
+
+# ---------------------------------------------------------------------------
+# replicated dim-table cache + shard-replica binding
+# ---------------------------------------------------------------------------
+
+
+def test_cache_accepts_shard_replicas_without_rebinding():
+    cache = HT.HashTableCache()
+    sdb = SH.shard_database(DB, 4)
+    j = QUERIES["q2.1"].joins[0]
+    cache.get_or_build(DB, j)
+    for shard in sdb.shards:        # shard replicas share the dim objects
+        cache.get_or_build(shard, j)
+    assert cache.misses == 1
+    assert cache.hits == 4
+    # a genuinely different database still raises
+    other = ssb.generate(sf=0.005, seed=12)
+    with pytest.raises(ValueError, match="scoped to one Database"):
+        cache.get_or_build(other, j)
+
+
+def test_cache_reset_clears_accepted_replicas():
+    cache = HT.HashTableCache()
+    j = QUERIES["q2.1"].joins[0]
+    cache.get_or_build(DB, j)
+    cache.reset()
+    other = ssb.generate(sf=0.005, seed=12)
+    cache.get_or_build(other, j)    # fresh binding after reset, no raise
+    assert cache._db is other
+
+
+def test_get_or_build_replicated_caches_per_mesh():
+    cache = HT.HashTableCache()
+    mesh = SH.default_mesh(1)
+    j = QUERIES["q2.1"].joins[0]
+    htk1, htv1 = cache.get_or_build_replicated(DB, j, mesh)
+    assert cache.misses == 1
+    htk2, htv2 = cache.get_or_build_replicated(DB, j, mesh)
+    assert htk2 is htk1 and htv2 is htv1
+    assert cache.hits >= 1
+    solo_k, solo_v = HT.build_dim_table(DB, j)
+    assert np.array_equal(np.asarray(htk1), np.asarray(solo_k))
+    assert np.array_equal(np.asarray(htv1), np.asarray(solo_v))
+
+
+def test_db_fingerprint_unwraps_sharded_database():
+    sdb = SH.shard_database(DB, 2)
+    assert HT.db_fingerprint(sdb, ["date"]) == \
+        HT.db_fingerprint(DB, ["date"])
+
+
+# ---------------------------------------------------------------------------
+# tree reduction (+ hypothesis property)
+# ---------------------------------------------------------------------------
+
+
+def test_tree_merge_bit_identical_any_split():
+    rng = np.random.default_rng(3)
+    full = rng.integers(0, 1000, (16, 64)).astype(np.float32)
+    ref = full.sum(axis=0)          # integer-valued f32: exact
+    for n_parts in (1, 2, 3, 5, 16):
+        cuts = np.array_split(np.arange(16), n_parts)
+        partials = [full[c].sum(axis=0) for c in cuts]
+        assert np.array_equal(SH.tree_merge(partials), ref)
+
+
+def test_group_partial_finalize_ops():
+    gp = SH.GroupPartial.from_rows([0, 0, 2], [3.0, 5.0, 7.0], 4)
+    assert np.array_equal(gp.finalize("sum"),
+                          np.array([8, 0, 7, 0], np.float32))
+    assert np.array_equal(gp.finalize("count"),
+                          np.array([2, 0, 1, 0], np.float32))
+    avg = gp.finalize("avg")
+    assert np.array_equal(avg, np.array([4, 0, 7, 0], np.float32))
+    with pytest.raises(ValueError):
+        gp.finalize("median")
+
+
+def _merge_property_case(gids, vals, n_groups, bounds):
+    """Shared body of the merge property: partials over the given row
+    partition must finalize bit-identically to the unsharded oracle."""
+    g = np.asarray(gids, np.int64)
+    v = np.asarray(vals, np.float32)
+    oracle = SH.GroupPartial.from_rows(g, v, n_groups)
+    partials = [SH.GroupPartial.from_rows(g[lo:hi], v[lo:hi], n_groups)
+                for lo, hi in zip(bounds, bounds[1:])]
+    merged = SH.merge_partials(partials)
+    for op in ("sum", "count", "avg"):
+        assert np.array_equal(merged.finalize(op), oracle.finalize(op)), op
+
+
+try:        # the module must not whole-skip when hypothesis is absent —
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                     # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=40, deadline=None)
+    @given(st.data())
+    def test_property_partial_merge_bit_identical_to_oracle(data):
+        """Merging per-shard partials over ANY row partition is
+        bit-identical to the unsharded oracle for sum/count/avg — empty
+        shards and groups absent from some shards included
+        (integer-valued f32 partials are exact, so association order
+        cannot matter)."""
+        n_groups = data.draw(st.integers(1, 8))
+        n_rows = data.draw(st.integers(0, 120))
+        gids = data.draw(st.lists(st.integers(0, n_groups - 1),
+                                  min_size=n_rows, max_size=n_rows))
+        vals = data.draw(st.lists(st.integers(0, 10_000),
+                                  min_size=n_rows, max_size=n_rows))
+        # arbitrary partition: 1..6 contiguous shards, cut points
+        # anywhere (duplicated cut points yield EMPTY shards on purpose)
+        n_shards = data.draw(st.integers(1, 6))
+        cuts = sorted(data.draw(st.lists(st.integers(0, n_rows),
+                                         min_size=n_shards - 1,
+                                         max_size=n_shards - 1)))
+        _merge_property_case(gids, vals, n_groups, [0] + cuts + [n_rows])
+else:
+    @pytest.mark.skip(reason="hypothesis not installed "
+                             "(see requirements-dev.txt)")
+    def test_property_partial_merge_bit_identical_to_oracle():
+        pass
+
+
+def test_merge_fixed_cases_cover_empty_and_absent_groups():
+    """Deterministic fallback exercising the same property without
+    hypothesis: empty shards, groups absent from some shards, zero
+    rows total."""
+    _merge_property_case([0, 1, 1, 3], [5, 7, 11, 13], 5,
+                         [0, 0, 2, 2, 4])            # two empty shards
+    _merge_property_case([], [], 4, [0, 0, 0])       # all shards empty
+    _merge_property_case([2] * 10, [9] * 10, 3, [0, 1, 9, 10])
+
+
+# ---------------------------------------------------------------------------
+# cost model: interconnect term + arbitration
+# ---------------------------------------------------------------------------
+
+
+def test_predict_sharded_only_with_shards():
+    plan = QUERIES["q2.1"]
+    assert "sharded" not in M.predict(plan, DB)
+    assert "sharded" not in M.predict(plan, DB, n_shards=1)
+    preds = M.predict(plan, DB, n_shards=4)
+    assert "sharded" in preds
+    assert preds["sharded"] > 0
+
+
+def test_shard_reduce_time_prices_interconnect():
+    hw = M.HOST
+    assert M._shard_reduce_time(7000, 1, hw) == 0.0
+    t2 = M._shard_reduce_time(7000, 2, hw)
+    t8 = M._shard_reduce_time(7000, 8, hw)
+    assert 0 < t2 < t8              # more shards, more merge levels
+    fast = dataclasses.replace(hw, interconnect_bw=hw.read_bw * 100)
+    assert M._shard_reduce_time(7000, 8, fast) < t8
+
+
+def test_choose_arbitrates_single_vs_multi_device():
+    plan = QUERIES["q2.1"]
+    # an absurdly slow interconnect must push auto back to solo fused
+    slow = dataclasses.replace(M.HOST, interconnect_bw=1e3)
+    c = M.choose(plan, DB, hw=slow, n_shards=8)
+    assert c.strategy != "sharded"
+    assert "sharded" in c.predictions
+    # a free interconnect makes the N x scan win decisive
+    fast = dataclasses.replace(M.HOST, interconnect_bw=1e15,
+                               launch_overhead_s=0.0)
+    c2 = M.choose(plan, DB, hw=fast, n_shards=8)
+    assert c2.strategy == "sharded"
+
+
+def test_predict_shared_sharded_term():
+    plans = list(QUERIES.values())
+    out = M.predict_shared(plans, DB)
+    assert "shared_sharded" not in out
+    out2 = M.predict_shared(plans, DB, n_shards=4)
+    assert out2["shared_sharded"] > 0
+    assert out2["shared"] == pytest.approx(out["shared"])
+
+
+def test_hardware_interconnect_gbps_property():
+    assert M.HOST.interconnect_gbps is None
+    hw = dataclasses.replace(M.HOST, interconnect_bw=50e9)
+    assert hw.interconnect_gbps == pytest.approx(50.0)
+
+
+# ---------------------------------------------------------------------------
+# calibration: all-reduce microbenchmark + cache roundtrip
+# ---------------------------------------------------------------------------
+
+
+def test_calibration_interconnect_roundtrip(tmp_path, monkeypatch):
+    from repro.sql import calibrate as CAL
+    monkeypatch.setenv("REPRO_CALIB_CACHE", str(tmp_path))
+    calib = CAL.Calibration(backend="cpu", read_bw=1e10, write_bw=5e9,
+                            cache_bw=1e11, launch_overhead_s=1e-5,
+                            measured_at=0.0, interconnect_bw=3e9)
+    CAL.save(calib)
+    loaded = CAL.load_cached("cpu")
+    assert loaded.interconnect_bw == pytest.approx(3e9)
+    hw = CAL.apply(loaded, M.HOST)
+    assert hw.interconnect_bw == pytest.approx(3e9)
+
+
+def test_calibration_from_json_tolerates_old_records():
+    """A pre-interconnect cache file (no interconnect_bw key) still
+    loads — the field defaults to None and apply() keeps the base's."""
+    from repro.sql import calibrate as CAL
+    old = {"backend": "cpu", "read_bw": 1e10, "write_bw": 5e9,
+           "cache_bw": 1e11, "launch_overhead_s": 1e-5,
+           "measured_at": 0.0, "some_future_key": 42}
+    calib = CAL.Calibration.from_json(old)
+    assert calib.interconnect_bw is None
+    hw = CAL.apply(calib, M.TPU_V5E)
+    assert hw.interconnect_bw == M.TPU_V5E.interconnect_bw
+
+
+def test_measure_interconnect_single_device_is_none_or_rate():
+    from repro.sql.calibrate import _measure_interconnect
+    rate = _measure_interconnect(elems=1 << 12)
+    if jax.device_count() < 2:
+        assert rate is None
+    else:
+        assert rate > 0
+
+
+# ---------------------------------------------------------------------------
+# compare.py gate: added tables / rows must not fail
+# ---------------------------------------------------------------------------
+
+
+def _load_compare():
+    path = os.path.join(os.path.dirname(__file__), os.pardir,
+                        "benchmarks", "compare.py")
+    spec = importlib.util.spec_from_file_location("bench_compare", path)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def _write_bench(path, rows):
+    with open(path, "w") as f:
+        json.dump({"table": "t", "rows": [
+            {"name": n, "us_per_call": us, "derived": ""}
+            for n, us in rows]}, f)
+
+
+def test_compare_new_table_without_baseline_passes(tmp_path):
+    cmp_mod = _load_compare()
+    fresh = tmp_path / "BENCH_scaleout.json"
+    _write_bench(fresh, [("scaleout.d1", 100.0)])
+    base_dir = tmp_path / "baselines"
+    base_dir.mkdir()
+    assert cmp_mod.compare_one(str(fresh), str(base_dir), 2.5,
+                               update=False) == 0
+
+
+def test_compare_added_rows_pass_dropped_rows_fail(tmp_path):
+    cmp_mod = _load_compare()
+    base_dir = tmp_path / "baselines"
+    base_dir.mkdir()
+    _write_bench(base_dir / "BENCH_t.json",
+                 [("a", 100.0), ("b", 100.0)])
+    # added row (scaleout landing later) passes
+    fresh = tmp_path / "BENCH_t.json"
+    _write_bench(fresh, [("a", 110.0), ("b", 90.0), ("c_new", 50.0)])
+    assert cmp_mod.compare_one(str(fresh), str(base_dir), 2.5,
+                               update=False) == 0
+    # dropped row fails
+    _write_bench(fresh, [("a", 110.0)])
+    assert cmp_mod.compare_one(str(fresh), str(base_dir), 2.5,
+                               update=False) == 1
+    # >threshold slowdown fails
+    _write_bench(fresh, [("a", 300.0), ("b", 90.0)])
+    assert cmp_mod.compare_one(str(fresh), str(base_dir), 2.5,
+                               update=False) == 1
