@@ -118,6 +118,41 @@ def sort_time(n: int, hw: Hardware, key_bits: int = 32,
 
 
 # ---------------------------------------------------------------------------
+# morsel-streamed scan (out-of-core pipeline)
+# ---------------------------------------------------------------------------
+
+
+def morsel_pipeline_time(n_bytes: float, n_morsels: int, hw: Hardware,
+                         launches_per_morsel: int = 1) -> float:
+    """Time of one streamed pass executed as ``n_morsels`` double-
+    buffered stages: the host→device copy of morsel i+1 overlaps the
+    compute on morsel i, so the steady state runs at
+    ``max(per_copy, per_comp)`` per stage, with one un-overlapped copy
+    at the head and one un-overlapped compute at the tail, plus
+    ``launches_per_morsel`` dispatches per stage.
+
+    ``per_copy`` prices the encoded morsel crossing the interconnect
+    (0 when ``hw.interconnect_bw`` is None — host execution has no
+    copy); ``per_comp`` is the bandwidth-bound scan of the same bytes.
+    At ``n_morsels <= 1`` this reduces exactly to
+    ``n_bytes / read_bw + launches * launch_overhead_s`` — the
+    pre-morsel single-pass formula, with NO copy term: a single-morsel
+    stream is the resident in-memory case, whose one-time upload is
+    amortized across queries rather than paid per scan.  Only a
+    multi-morsel stream re-crosses the interconnect every pass; its
+    extra cost is the head copy, the (n-1) extra dispatch sets, and
+    whichever of copy/compute does NOT hide behind the other."""
+    n = max(1, int(n_morsels))
+    launch = n * launches_per_morsel * hw.launch_overhead_s
+    if n == 1 or not hw.interconnect_bw:
+        return n_bytes / hw.read_bw + launch
+    per_comp = n_bytes / hw.read_bw / n
+    per_copy = n_bytes / hw.interconnect_bw / n
+    return (per_copy + (n - 1) * max(per_copy, per_comp) + per_comp
+            + launch)
+
+
+# ---------------------------------------------------------------------------
 # §3.1 coprocessor model + §5.3 full-query model (q2.1)
 # ---------------------------------------------------------------------------
 

@@ -89,6 +89,7 @@ from jax.sharding import PartitionSpec
 from repro.kernels import ops
 from repro.kernels.common import DEFAULT_TILE
 from repro.sql import hashtable as HT
+from repro.sql import morsel as MS
 from repro.sql import plan as P
 from repro.sql import shard as SH
 from repro.sql import ssb
@@ -232,8 +233,17 @@ def _measure_streams(fact, proj):
 
 
 def _execute_fused(plan: P.Plan, db: ssb.Database, mode: str, tile: int,
-                   cache: Optional[HT.HashTableCache]) -> np.ndarray:
-    fact = getattr(db, plan.scan.table)
+                   cache: Optional[HT.HashTableCache],
+                   fact=None,
+                   prebuilt: Optional[List[jnp.ndarray]] = None
+                   ) -> np.ndarray:
+    """One fused SPJA pass over ``fact`` (the plan's scan table by
+    default; the morsel fold passes each cut).  ``prebuilt`` is the
+    flattened ``[htk, htv, ...]`` join-table list when the caller built
+    the wave's tables once — the per-morsel path must not re-fetch from
+    the cache and inflate its hit stats."""
+    if fact is None:
+        fact = getattr(db, plan.scan.table)
     bounds = plan.preds           # fusability guarantees the range view
     pred_streams = [ST.column_stream(fact, c) for c, _, _ in bounds]
     pred_cols = [s[0] for s in pred_streams]
@@ -244,11 +254,14 @@ def _execute_fused(plan: P.Plan, db: ssb.Database, mode: str, tile: int,
     join_keys = [s[0] for s in key_streams]
     key_widths = tuple(s[1] for s in key_streams)
     key_refs = jnp.asarray(np.array([s[2] for s in key_streams], np.int32))
-    join_tables: List[jnp.ndarray] = []
-    for j in joins:
-        htk, htv = (cache.get_or_build(db, j) if cache is not None
-                    else HT.build_dim_table(db, j))
-        join_tables.extend([htk, htv])
+    if prebuilt is not None:
+        join_tables = prebuilt
+    else:
+        join_tables = []
+        for j in joins:
+            htk, htv = (cache.get_or_build(db, j) if cache is not None
+                        else HT.build_dim_table(db, j))
+            join_tables.extend([htk, htv])
     mults = jnp.asarray(np.array([j.mult for j in joins], np.int32))
     proj = plan.project
     m1, m2, m_widths, m_refs = _measure_streams(fact, proj)
@@ -260,63 +273,148 @@ def _execute_fused(plan: P.Plan, db: ssb.Database, mode: str, tile: int,
     return np.asarray(out)
 
 
+def _fused_scan_cols(plan: P.Plan) -> List[str]:
+    """The fact columns one fused pass streams (deduplicated in load
+    order) — the morsel budget is sized over exactly these."""
+    cols: List[str] = []
+    for c, _, _ in plan.preds:
+        if c not in cols:
+            cols.append(c)
+    for j in plan.joins:
+        if j.fact_col not in cols:
+            cols.append(j.fact_col)
+    proj = plan.project
+    for c in ([proj.m1] if proj.op not in ("mul", "sub")
+              else [proj.m1, proj.m2]):
+        if c not in cols:
+            cols.append(c)
+    return cols
+
+
+def _fused_morsels(plan: P.Plan, db: ssb.Database, mode: str, tile: int,
+                   cache: Optional[HT.HashTableCache], morsel_bytes: int,
+                   fact=None) -> Tuple[np.ndarray, MS.MorselReport]:
+    """The fused lowering as a fold over the morsel stream: dim hash
+    tables build ONCE, each morsel runs the unchanged fused kernel
+    (uploads double-buffered by ``MorselStream.fold``), and the
+    per-morsel ``(n_groups,)`` partial grids tree-merge — the same exact
+    f32 merge the sharded path trusts, so any morsel partition is
+    bit-identical to the whole-table pass.  A single-morsel stream is
+    the degenerate in-memory case: the one morsel IS the fact table and
+    the pass is byte-for-byte the pre-refactor one."""
+    if fact is None:
+        fact = getattr(db, plan.scan.table)
+    stream = MS.MorselStream(fact, morsel_bytes,
+                             cols=_fused_scan_cols(plan))
+    report = MS.MorselReport()
+    if stream.n_morsels == 0:       # empty fact table: zero groups
+        report.observe(0)
+        return _execute_fused(plan, db, mode, tile, cache,
+                              fact=fact), report
+    prebuilt: List[jnp.ndarray] = []
+    for j in plan.joins:
+        htk, htv = (cache.get_or_build(db, j) if cache is not None
+                    else HT.build_dim_table(db, j))
+        prebuilt.extend([htk, htv])
+    partials = stream.fold(
+        lambda m: _execute_fused(plan, db, mode, tile, cache,
+                                 fact=m.table, prebuilt=prebuilt),
+        report)
+    return SH.tree_merge(partials), report
+
+
 # ---------------------------------------------------------------------------
 # sharded lowering (fused kernel per fact shard + tree-reduced aggregates)
 # ---------------------------------------------------------------------------
 
 
 def _execute_sharded(plan: P.Plan, db, mode: str, tile: int,
-                     cache: Optional[HT.HashTableCache]
-                     ) -> Tuple[np.ndarray, List[float], int]:
+                     cache: Optional[HT.HashTableCache],
+                     morsel_bytes: int = MS.DEFAULT_MORSEL_BYTES
+                     ) -> Tuple[np.ndarray, List[float], int,
+                                MS.MorselReport]:
     """Run ``plan`` fused-per-shard and merge the partial group grids;
-    returns ``(result, shard_times_s, device_count)``.
+    returns ``(result, shard_times_s, device_count, morsel_report)``.
 
     Degenerate cases — a plain Database, a single shard, or a plan that
     scans something other than the sharded fact table — run the solo
     fused lowering (timed, so callers always get a breakdown).  With a
-    mesh and a compiled mode the shards run under ``shard_map`` with the
-    reduction fused in as a ``psum``; otherwise a host loop times each
-    shard's fused pass individually and tree-merges on the host."""
+    mesh and a compiled mode the shards run under ``shard_map`` over
+    uniform per-shard row *windows* with the reduction fused in as a
+    ``psum``; otherwise a host loop folds each shard's own morsel stream
+    and tree-merges on the host.  Either way the per-device fact
+    footprint stays bounded by two morsels — shard and morsel
+    composition is reports merged (morsels add, peaks max: each device
+    holds its own double buffer)."""
     if (not isinstance(db, SH.ShardedDatabase) or db.n_shards == 1
             or plan.scan.table != db.fact):
         base = SH.base_of(db)
         t0 = time.perf_counter()
-        out = _execute_fused(plan, base, mode, tile, cache)
-        return out, [time.perf_counter() - t0], 1
+        out, report = _fused_morsels(plan, base, mode, tile, cache,
+                                     morsel_bytes)
+        return out, [time.perf_counter() - t0], 1, report
     if mode != "ref" and db.mesh is not None:
-        return _execute_fused_map(plan, db, mode, tile, cache)
+        return _execute_fused_map(plan, db, mode, tile, cache,
+                                  morsel_bytes=morsel_bytes)
     partials, times = [], []
+    report = MS.MorselReport()
     for shard in db.shards:
         t0 = time.perf_counter()
-        partials.append(_execute_fused(plan, shard, mode, tile, cache))
+        fact = getattr(shard, db.fact)
+        out, rep = _fused_morsels(plan, shard, mode, tile, cache,
+                                  morsel_bytes, fact=fact)
+        partials.append(out)
         times.append(time.perf_counter() - t0)
-    return SH.tree_merge(partials), times, db.n_shards
+        report = report.merge(rep)
+    return SH.tree_merge(partials), times, db.n_shards, report
 
 
 def _execute_fused_map(plan: P.Plan, sdb, mode: str, tile: int,
-                       cache: Optional[HT.HashTableCache]
-                       ) -> Tuple[np.ndarray, List[float], int]:
-    """The mesh path: one ``shard_map`` launch over stacked
-    ``(S, pad_rows)`` streams.  Each mesh device sees its shard's slice,
-    runs the unchanged fused kernel, and the ``psum`` inside
-    (``ops.spja(..., axis_name=...)``) reduces the partial grids on the
-    interconnect — the host only sees the final ``(n_groups,)`` answer.
-    Pad rows are gated out by the validity stream, an extra all-pass
-    predicate with bounds ``(1, 1)`` on the 1/0 mask."""
+                       cache: Optional[HT.HashTableCache],
+                       morsel_bytes: int = MS.DEFAULT_MORSEL_BYTES
+                       ) -> Tuple[np.ndarray, List[float], int,
+                                  MS.MorselReport]:
+    """The mesh path: ``shard_map`` launches over stacked ``(S, W)``
+    streams.  Each mesh device sees its shard's slice, runs the
+    unchanged fused kernel, and the ``psum`` inside (``ops.spja(...,
+    axis_name=...)``) reduces the partial grids on the interconnect —
+    the host only sees ``(n_groups,)`` answers.  Pad rows are gated out
+    by the validity stream, an extra all-pass predicate with bounds
+    ``(1, 1)`` on the 1/0 mask.
+
+    When the per-shard streams exceed the morsel budget, the shard rows
+    are cut into uniform LANE-aligned *windows* (every window padded to
+    the same width, so ONE executable serves them all) and launched in
+    sequence with at most two windows in flight — compute on window N
+    overlaps the host assembly + upload of window N+1, and the window
+    partial grids sum on the host.  A single window is byte-for-byte
+    the pre-refactor whole-shard launch (memoized stacked streams)."""
     mesh = sdb.mesh
     base_fact = getattr(sdb.base, sdb.fact)
+    scan_cols = _fused_scan_cols(plan)
+    # per-shard bytes-per-row of the scanned streams + validity mask
+    bpr = 4.0 + sum(ST.scan_bytes_per_row(base_fact, c)
+                    for c in scan_cols)
+    rows_per = MS.rows_per_morsel(bpr, morsel_bytes)
+    windows = MS.plan_cuts(sdb.pad_rows, rows_per)
+    whole = len(windows) <= 1
+    w_pad = sdb.pad_rows if whole else rows_per
+
+    def wbytes(lo: int, hi: int) -> int:
+        total = 4 * (hi - lo)           # validity stream
+        for c in scan_cols:
+            enc = ST.encoding_of(base_fact, c)
+            if enc is None or enc.kind == "plain":
+                total += 4 * (hi - lo)
+            else:
+                vw = enc.values_per_word
+                total += 4 * ((hi + vw - 1) // vw - lo // vw)
+        return total
+
     bounds = plan.preds
     pb = np.concatenate([_rewritten_bounds(base_fact, bounds),
                          np.array([[1, 1]], np.int32)])
-    pred_streams = ([SH.stacked_stream(sdb, c) for c, _, _ in bounds]
-                    + [SH.validity_stream(sdb)])
-    pred_cols = [s[0] for s in pred_streams]
-    pred_widths = tuple(s[1] for s in pred_streams)
     joins = plan.joins
-    key_streams = [SH.stacked_stream(sdb, j.fact_col) for j in joins]
-    join_keys = [s[0] for s in key_streams]
-    key_widths = tuple(s[1] for s in key_streams)
-    key_refs = jnp.asarray(np.array([s[2] for s in key_streams], np.int32))
     join_tables: List[jnp.ndarray] = []
     for j in joins:
         if cache is not None:
@@ -328,22 +426,46 @@ def _execute_fused_map(plan: P.Plan, sdb, mode: str, tile: int,
     proj = plan.project
     m_cols = [proj.m1] if proj.op not in ("mul", "sub") \
         else [proj.m1, proj.m2]
-    m_streams = [SH.stacked_stream(sdb, c) for c in m_cols]
-    m_arrs = [arr if w != 32 else arr.astype(jnp.float32)
-              for arr, w, _ in m_streams]
-    m1 = m_arrs[0]
-    m2 = m_arrs[1] if len(m_arrs) == 2 else None
-    m_widths = tuple(w for _, w, _ in m_streams)
-    m_refs = jnp.asarray(np.array([r for _, _, r in m_streams], np.int32))
 
-    sharded = {"pred": pred_cols, "key": join_keys, "m": m_arrs}
-    repl = {"pb": jnp.asarray(pb), "tables": join_tables, "mults": mults,
-            "kref": key_refs, "mref": m_refs}
+    def window_inputs(lo: int, hi: int):
+        """The (sharded, replicated) shard_map operands for per-shard
+        rows [lo, hi) padded to w_pad (whole-table: memoized streams)."""
+        if whole:
+            pred_streams = ([SH.stacked_stream(sdb, c)
+                             for c, _, _ in bounds]
+                            + [SH.validity_stream(sdb)])
+            key_streams = [SH.stacked_stream(sdb, j.fact_col)
+                           for j in joins]
+            m_streams = [SH.stacked_stream(sdb, c) for c in m_cols]
+        else:
+            pred_streams = ([SH.stacked_window(sdb, c, lo, hi, w_pad)
+                             for c, _, _ in bounds]
+                            + [SH.validity_window(sdb, lo, hi, w_pad)])
+            key_streams = [SH.stacked_window(sdb, j.fact_col, lo, hi,
+                                             w_pad) for j in joins]
+            m_streams = [SH.stacked_window(sdb, c, lo, hi, w_pad)
+                         for c in m_cols]
+        m_arrs = [arr if w != 32 else arr.astype(jnp.float32)
+                  for arr, w, _ in m_streams]
+        sharded = {"pred": [s[0] for s in pred_streams],
+                   "key": [s[0] for s in key_streams], "m": m_arrs}
+        repl = {"pb": jnp.asarray(pb), "tables": join_tables,
+                "mults": mults,
+                "kref": jnp.asarray(np.array([s[2] for s in key_streams],
+                                             np.int32)),
+                "mref": jnp.asarray(np.array([r for _, _, r in m_streams],
+                                             np.int32))}
+        widths = (tuple(s[1] for s in pred_streams),
+                  tuple(s[1] for s in key_streams),
+                  tuple(w for _, w, _ in m_streams))
+        return sharded, repl, widths
 
-    n_m = len(m_arrs)
+    first = window_inputs(*windows[0]) if windows else None
+    pred_widths, key_widths, m_widths = first[2] if first else ((), (), ())
+    n_m = len(m_cols)
 
     def shard_fn(shd, rep):
-        # each device's block arrives (1, pad_rows); drop the leading dim
+        # each device's block arrives (1, w_pad); drop the leading dim
         flat = jax.tree.map(lambda x: x.reshape(x.shape[1:]), shd)
         ms = flat["m"]
         out = ops.spja(flat["pred"], rep["pb"], flat["key"],
@@ -352,21 +474,35 @@ def _execute_fused_map(plan: P.Plan, sdb, mode: str, tile: int,
                        n_groups=plan.n_groups, mode=mode, tile=tile,
                        pred_widths=pred_widths, key_widths=key_widths,
                        key_refs=rep["kref"], m_widths=m_widths,
-                       m_refs=rep["mref"], n_rows=sdb.pad_rows,
+                       m_refs=rep["mref"], n_rows=w_pad,
                        axis_name=SH.SHARD_AXIS)
         return out
 
     mapped = shard_map(
         shard_fn, mesh=mesh,
         in_specs=(jax.tree.map(lambda _: PartitionSpec(SH.SHARD_AXIS, None),
-                               sharded),
-                  jax.tree.map(lambda _: PartitionSpec(), repl)),
+                               first[0] if first else {}),
+                  jax.tree.map(lambda _: PartitionSpec(),
+                               first[1] if first else {})),
         out_specs=PartitionSpec(),
         check_rep=False)        # Pallas calls have no replication rule
+
+    report = MS.MorselReport()
     t0 = time.perf_counter()
-    out = np.asarray(jax.block_until_ready(mapped(sharded, repl)))
+    partials, inflight = [], []
+    for wi, (lo, hi) in enumerate(windows):
+        sharded, repl, _ = first if wi == 0 else window_inputs(lo, hi)
+        resident = wbytes(lo, hi)
+        if wi + 1 < len(windows):
+            resident += wbytes(*windows[wi + 1])
+        report.observe(resident)
+        inflight.append(mapped(sharded, repl))   # async dispatch
+        if len(inflight) == 2:       # bound: at most two windows resident
+            partials.append(np.asarray(inflight.pop(0)))
+    partials.extend(np.asarray(jax.block_until_ready(x)) for x in inflight)
     dt = time.perf_counter() - t0
-    return out, [dt], sdb.n_shards
+    out = partials[0] if len(partials) == 1 else SH.tree_merge(partials)
+    return out, [dt], sdb.n_shards, report
 
 
 # ---------------------------------------------------------------------------
@@ -431,10 +567,32 @@ def shared_footprint(plans: List[P.Plan]):
     return col_ix, join_nodes, mcol_ix
 
 
+def validate_wave(plans: List[P.Plan]) -> None:
+    """Raise ``ValueError`` unless ``plans`` form a legal shared wave:
+    non-empty, all scanning the same fact table, every member shareable.
+    Group validation is ultimately the caller's contract — the server
+    filters before calling — but both the lowering and the morsel fold
+    check it up front so a bad group fails with the reason, not an
+    attribute error mid-footprint."""
+    if not plans:
+        raise ValueError("shared wave must contain at least one plan")
+    table = plans[0].scan.table
+    for plan in plans:
+        if plan.scan.table != table:
+            raise ValueError(
+                f"shared wave is scan-incompatible: {plan.name} scans "
+                f"{plan.scan.table!r}, wave scans {table!r}")
+        reason = shareability(plan)
+        if reason is not None:
+            raise ValueError(f"{plan.name} cannot join a shared wave: "
+                             f"{reason}")
+
+
 def shared_params(plans: List[P.Plan], db: ssb.Database,
                   cache: Optional[HT.HashTableCache] = None,
                   pad_to: Optional[int] = None,
-                  prebuilt: Optional[Dict[Tuple, Tuple]] = None):
+                  prebuilt: Optional[Dict[Tuple, Tuple]] = None,
+                  fact=None):
     """Lower a group of shareable plans over one fact table to the
     stacked parameter arrays of ``ops.multi_spja``.
 
@@ -450,19 +608,10 @@ def shared_params(plans: List[P.Plan], db: ssb.Database,
     (the server does, per member, for fault isolation and per-request
     hit/miss attribution) passes them through so the lowering does not
     re-fetch from the cache and double-count its hit stats."""
-    if not plans:
-        raise ValueError("shared wave must contain at least one plan")
+    validate_wave(plans)
     table = plans[0].scan.table
-    for plan in plans:
-        if plan.scan.table != table:
-            raise ValueError(
-                f"shared wave is scan-incompatible: {plan.name} scans "
-                f"{plan.scan.table!r}, wave scans {table!r}")
-        reason = shareability(plan)
-        if reason is not None:
-            raise ValueError(f"{plan.name} cannot join a shared wave: "
-                             f"{reason}")
-    fact = getattr(db, table)
+    if fact is None:
+        fact = getattr(db, table)
     q_n = len(plans)
     q_pad = max(q_n, pad_to or q_n)
     col_ix, join_nodes, mcol_ix = shared_footprint(plans)
@@ -539,41 +688,100 @@ def shared_params(plans: List[P.Plan], db: ssb.Database,
     return fact, args, kwargs, n_groups
 
 
+def _shared_prebuilt(plans: List[P.Plan], db,
+                     cache: Optional[HT.HashTableCache],
+                     prebuilt: Optional[Dict[Tuple, Tuple]]
+                     ) -> Dict[Tuple, Tuple]:
+    """Complete a wave's join-table map (one build per distinct probe
+    identity, respecting whatever the caller prebuilt) so the morsel
+    fold never re-fetches per morsel."""
+    _, join_nodes, _ = shared_footprint(plans)
+    tables = dict(prebuilt) if prebuilt else {}
+    for j in join_nodes:
+        k = shared_join_key(j)
+        if k not in tables:
+            tables[k] = (cache.get_or_build(db, j) if cache is not None
+                         else HT.build_dim_table(db, j))
+    return tables
+
+
+def execute_shared_morsels(plans: List[P.Plan], db: ssb.Database,
+                           mode: str = "auto", tile: int = DEFAULT_TILE,
+                           cache: Optional[HT.HashTableCache] = None,
+                           pad_to: Optional[int] = None,
+                           prebuilt: Optional[Dict[Tuple, Tuple]] = None,
+                           morsel_bytes: int = MS.DEFAULT_MORSEL_BYTES
+                           ) -> Tuple[List[np.ndarray], MS.MorselReport]:
+    """:func:`execute_shared` as a fold over the morsel stream: the wave
+    streams each morsel ONCE (one ``multi_spja`` launch per morsel, so
+    the shared-scan win multiplies with the out-of-core bound), the
+    per-morsel ``(Q, n_groups)`` partial grids tree-merge exactly, and
+    the dim tables build once up front.  Returns ``(results, report)``
+    with each member's ``(n_groups,)`` f32 result in submission order."""
+    validate_wave(plans)
+    col_ix, join_nodes, mcol_ix = shared_footprint(plans)
+    tables = _shared_prebuilt(plans, db, cache, prebuilt)
+    fact = getattr(db, plans[0].scan.table)
+    cols = list(col_ix)
+    cols += [j.fact_col for j in join_nodes if j.fact_col not in cols]
+    cols += [c for c in mcol_ix if c not in cols]
+    stream = MS.MorselStream(fact, morsel_bytes, cols=cols)
+    report = MS.MorselReport()
+    if stream.n_morsels == 0:           # empty fact: all-zero grids
+        report.observe(0)
+        return [np.zeros(plan.n_groups, np.float32)
+                for plan in plans], report
+
+    def run(m):
+        _, args, kwargs, n_groups = shared_params(
+            plans, db, cache=None, pad_to=pad_to, prebuilt=tables,
+            fact=m.table)
+        LAUNCH_STATS["probe"] += 1      # one whole-wave launch per morsel
+        return np.asarray(ops.multi_spja(*args, n_groups=n_groups,
+                                         mode=mode, tile=tile, **kwargs))
+
+    partials = stream.fold(run, report)
+    out = partials[0] if len(partials) == 1 else SH.tree_merge(partials)
+    return [out[qi, :plan.n_groups].copy()
+            for qi, plan in enumerate(plans)], report
+
+
 def execute_shared(plans: List[P.Plan], db: ssb.Database,
                    mode: str = "auto", tile: int = DEFAULT_TILE,
                    cache: Optional[HT.HashTableCache] = None,
                    pad_to: Optional[int] = None,
                    prebuilt: Optional[Dict[Tuple, Tuple]] = None
                    ) -> List[np.ndarray]:
-    """Execute a scan-compatible group of aggregate plans as ONE shared
-    fused pass over their common fact table; returns each member's
-    ``(n_groups,)`` f32 result in submission order.
+    """Execute a scan-compatible group of aggregate plans as one shared
+    fused pass per morsel over their common fact table; returns each
+    member's ``(n_groups,)`` f32 result in submission order.  Under the
+    default budget every current database is a single morsel, so this
+    is the single-launch wave it always was.
 
     ``pad_to`` pads the stacked member dimension with inert slots so one
     jitted executable serves any member count up to the wave size (the
     padded members contribute nothing — their validity bit is 0)."""
-    _, args, kwargs, n_groups = shared_params(plans, db, cache=cache,
-                                              pad_to=pad_to,
-                                              prebuilt=prebuilt)
-    LAUNCH_STATS["probe"] += 1          # the single whole-wave launch
-    out = np.asarray(ops.multi_spja(*args, n_groups=n_groups, mode=mode,
-                                    tile=tile, **kwargs))
-    return [out[qi, :plan.n_groups].copy()
-            for qi, plan in enumerate(plans)]
+    results, _ = execute_shared_morsels(plans, db, mode=mode, tile=tile,
+                                        cache=cache, pad_to=pad_to,
+                                        prebuilt=prebuilt)
+    return results
 
 
 def execute_shared_sharded(plans: List[P.Plan], db,
                            mode: str = "auto", tile: int = DEFAULT_TILE,
                            cache: Optional[HT.HashTableCache] = None,
                            pad_to: Optional[int] = None,
-                           prebuilt: Optional[Dict[Tuple, Tuple]] = None
-                           ) -> Tuple[List[np.ndarray], List[float]]:
+                           prebuilt: Optional[Dict[Tuple, Tuple]] = None,
+                           morsel_bytes: int = MS.DEFAULT_MORSEL_BYTES
+                           ) -> Tuple[List[np.ndarray], List[float],
+                                      MS.MorselReport]:
     """Shared-scan wave over a sharded fact table: PR 4's wave formation
-    composed with sharding.  Each shard runs the whole wave as ONE
-    ``multi_spja`` pass (the dim tables are built once — the cache binds
-    every shard replica to the base database), then the per-shard
-    ``(Q, n_groups)`` partial grids tree-merge on the host.  Returns
-    ``(results_in_submission_order, shard_times_s)``.
+    composed with sharding, each shard folding its own morsel stream.
+    Each shard runs the whole wave one ``multi_spja`` pass per morsel
+    (the dim tables are built once — the cache binds every shard replica
+    to the base database), then the per-shard ``(Q, n_groups)`` partial
+    grids tree-merge on the host.  Returns
+    ``(results_in_submission_order, shard_times_s, morsel_report)``.
 
     The merge is the host path by construction — a wave's stacked
     parameters are per-shard anyway (bounds/mults/selectors are
@@ -582,23 +790,26 @@ def execute_shared_sharded(plans: List[P.Plan], db,
     if not isinstance(db, SH.ShardedDatabase) or db.n_shards == 1:
         base = SH.base_of(db)
         t0 = time.perf_counter()
-        results = execute_shared(plans, base, mode=mode, tile=tile,
-                                 cache=cache, pad_to=pad_to,
-                                 prebuilt=prebuilt)
-        return results, [time.perf_counter() - t0]
+        results, report = execute_shared_morsels(
+            plans, base, mode=mode, tile=tile, cache=cache, pad_to=pad_to,
+            prebuilt=prebuilt, morsel_bytes=morsel_bytes)
+        return results, [time.perf_counter() - t0], report
+    tables = _shared_prebuilt(plans, db, cache, prebuilt)
     partials, times = [], []
+    report = MS.MorselReport()
     for shard in db.shards:
         t0 = time.perf_counter()
-        _, args, kwargs, n_groups = shared_params(
-            plans, shard, cache=cache, pad_to=pad_to, prebuilt=prebuilt)
-        LAUNCH_STATS["probe"] += 1      # one whole-wave launch per shard
-        partials.append(np.asarray(
-            ops.multi_spja(*args, n_groups=n_groups, mode=mode,
-                           tile=tile, **kwargs)))
+        shard_results, rep = execute_shared_morsels(
+            plans, shard, mode=mode, tile=tile, cache=None,
+            pad_to=pad_to, prebuilt=tables, morsel_bytes=morsel_bytes)
+        partials.append(np.stack(
+            [np.pad(r, (0, max(p.n_groups for p in plans) - len(r)))
+             for r in shard_results]))
         times.append(time.perf_counter() - t0)
+        report = report.merge(rep)
     out = SH.tree_merge(partials)
     return ([out[qi, :plan.n_groups].copy()
-             for qi, plan in enumerate(plans)], times)
+             for qi, plan in enumerate(plans)], times, report)
 
 
 # ---------------------------------------------------------------------------
@@ -743,13 +954,25 @@ _JOIN_LOWERINGS = {
 
 def _execute_chain(plan: P.Plan, db: ssb.Database, mode: str, tile: int,
                    cache: Optional[HT.HashTableCache],
-                   join_mode: str = "opat") -> np.ndarray:
+                   join_mode: str = "opat", fact=None,
+                   defer_order: bool = False,
+                   partial_agg: bool = False):
     """Shared operator-at-a-time chain walker; ``join_mode`` selects the
     HashJoin lowering — monolithic probe (``opat``), fused partitioned
     probe (``part``), or the host partition loop (``part_loop``);
     everything else — filters, projection, aggregation, ordering — is
-    identical."""
-    fact = getattr(db, plan.scan.table)
+    identical.
+
+    The morsel fold drives the two hooks: ``fact`` substitutes one
+    morsel for the plan's scan table, ``partial_agg`` returns the
+    pre-aggregation ``GroupPartial`` instead of the summed grid (merged
+    across morsels via ``SH.merge_partials``), and ``defer_order`` skips
+    a trailing OrderBy so the fold can run ONE global sort over the
+    concatenated survivors (opat probes preserve row order, so the
+    global sort over per-morsel survivors is bit-identical to the
+    whole-table sort)."""
+    if fact is None:
+        fact = getattr(db, plan.scan.table)
     n = fact.n_rows
     join_fn = _JOIN_LOWERINGS[join_mode]
     # live intermediate state, re-materialized by every operator:
@@ -813,13 +1036,20 @@ def _execute_chain(plan: P.Plan, db: ssb.Database, mode: str, tile: int,
                                                 mode=mode, tile=tile)
             measure = m
         elif isinstance(node, P.GroupAgg):
+            if partial_agg:
+                if empty:
+                    return SH.GroupPartial(
+                        np.zeros(node.n_groups, np.float32),
+                        np.zeros(node.n_groups, np.int64))
+                return SH.GroupPartial.from_rows(
+                    np.asarray(group), np.asarray(measure), node.n_groups)
             if empty:
                 return np.zeros(node.n_groups, np.float32)
             out = ops.group_sum(group, measure, node.n_groups,
                                 mode=mode, tile=tile)
             return np.asarray(out)
         elif isinstance(node, P.OrderBy):
-            if empty:
+            if defer_order or empty:
                 break
             keys = ST.take(fact, node.key_col, rowids)
             _, rowids = ops.radix_sort(keys, rowids, mode=mode, tile=tile)
@@ -828,6 +1058,92 @@ def _execute_chain(plan: P.Plan, db: ssb.Database, mode: str, tile: int,
 
     # only row plans (classify()-checked at compile time) fall through
     return np.asarray(rowids)
+
+
+def _chain_scan_cols(plan: P.Plan) -> Optional[List[str]]:
+    """The fact columns a chain lowering touches, or None when a
+    generic predicate hides its column set (then the morsel budget is
+    sized over the whole row — conservative, never under-counts)."""
+    cols: List[str] = []
+
+    def add(c):
+        if c is not None and c not in cols:
+            cols.append(c)
+
+    for node in plan.chain[1:]:
+        if isinstance(node, P.Filter):
+            for pred in node.preds:
+                col = getattr(pred, "col", None)
+                if col is None:
+                    return None
+                add(col)
+        elif isinstance(node, P.HashJoin):
+            add(node.fact_col)
+        elif isinstance(node, P.Project):
+            add(node.m1)
+            add(node.m2)
+        elif isinstance(node, P.OrderBy):
+            add(node.key_col)
+    return cols
+
+
+def _chain_morsels(plan: P.Plan, db: ssb.Database, mode: str, tile: int,
+                   cache: Optional[HT.HashTableCache], join_mode: str,
+                   morsel_bytes: int
+                   ) -> Tuple[np.ndarray, MS.MorselReport]:
+    """The materializing lowerings (opat/part/part_loop) as a fold over
+    the morsel stream.  Aggregate plans fold each morsel's
+    pre-aggregation state into a ``GroupPartial`` and merge exactly
+    (``SH.merge_partials`` — PR 6's shard merge, reused unchanged); row
+    plans concatenate per-morsel survivors (offset to global row ids; a
+    trailing OrderBy is DEFERRED to one global sort over the
+    concatenated survivors, bit-identical because opat probes preserve
+    row order).  A single-morsel stream takes the pre-refactor chain
+    byte-for-byte."""
+    fact = getattr(db, plan.scan.table)
+    stream = MS.MorselStream(fact, morsel_bytes,
+                             cols=_chain_scan_cols(plan))
+    report = MS.MorselReport()
+    kind = classify(plan)
+    if stream.n_morsels == 0:
+        report.observe(0)
+        return _execute_chain(plan, db, mode, tile, cache,
+                              join_mode=join_mode, fact=fact), report
+    if stream.n_morsels == 1:
+        out = stream.fold(
+            lambda m: _execute_chain(plan, db, mode, tile, cache,
+                                     join_mode=join_mode, fact=m.table),
+            report)[0]
+        return out, report
+    if kind == "agg":
+        partials = stream.fold(
+            lambda m: _execute_chain(plan, db, mode, tile, cache,
+                                     join_mode=join_mode, fact=m.table,
+                                     partial_agg=True),
+            report)
+        return SH.merge_partials(partials).finalize("sum"), report
+    order_node = next((nd for nd in plan.chain
+                       if isinstance(nd, P.OrderBy)), None)
+
+    def run(m):
+        rows = np.asarray(_execute_chain(plan, db, mode, tile, cache,
+                                         join_mode=join_mode,
+                                         fact=m.table, defer_order=True))
+        if order_node is not None and len(rows):
+            keys = np.asarray(ST.take(m.table, order_node.key_col,
+                                      jnp.asarray(rows)))
+        else:
+            keys = np.zeros(len(rows), np.int32)
+        return (rows + np.int32(m.offset)).astype(np.int32), keys
+
+    pieces = stream.fold(run, report)
+    rowids = np.concatenate([p[0] for p in pieces])
+    if order_node is None or len(rowids) == 0:
+        return rowids, report
+    keys = np.concatenate([p[1] for p in pieces])
+    _, out = ops.radix_sort(jnp.asarray(keys), jnp.asarray(rowids),
+                            mode=mode, tile=tile)
+    return np.asarray(out), report
 
 
 # ---------------------------------------------------------------------------
@@ -853,6 +1169,14 @@ class CompiledQuery:
     count that ran and ``shard_times_s`` the per-shard wall times (one
     entry for the whole launch on the ``shard_map`` path, which the
     host cannot decompose).
+
+    Every execution streams the fact table through the morsel spine
+    (``repro.sql.morsel``; ``morsel_bytes`` bounds the per-buffer
+    footprint): afterwards ``n_morsels`` holds the stream length and
+    ``peak_resident_bytes`` the observed double-buffer peak — the
+    out-of-core bound, ``<= 2 × morsel_bytes`` up to one lane of
+    rounding.  Under the default budget small databases are one morsel
+    and the execution is byte-for-byte the in-memory pass.
     """
     plan: P.Plan
     strategy: str
@@ -863,32 +1187,52 @@ class CompiledQuery:
                                                     repr=False)
     device_count: Optional[int] = None
     shard_times_s: Optional[List[float]] = field(default=None, repr=False)
+    n_morsels: Optional[int] = None
+    peak_resident_bytes: Optional[int] = None
+
+    def _note(self, report: MS.MorselReport) -> None:
+        self.n_morsels = report.n_morsels
+        self.peak_resident_bytes = report.peak_resident_bytes
 
     def execute(self, db: ssb.Database, mode: str = "auto",
                 tile: int = DEFAULT_TILE,
-                cache: Optional[HT.HashTableCache] = None) -> np.ndarray:
+                cache: Optional[HT.HashTableCache] = None,
+                morsel_bytes: int = MS.DEFAULT_MORSEL_BYTES) -> np.ndarray:
         strategy = self.strategy
         if strategy == "auto":
             from repro.sql import model as M
             choice = M.choose(self.plan, db,
-                              n_shards=SH.shard_count(db))
+                              n_shards=SH.shard_count(db),
+                              morsel_bytes=morsel_bytes)
             strategy = choice.strategy
             self.predictions = choice.predictions
         self.decided = strategy
         if strategy == "sharded":
-            out, times, dc = _execute_sharded(self.plan, db, mode, tile,
-                                              cache)
+            out, times, dc, report = _execute_sharded(
+                self.plan, db, mode, tile, cache,
+                morsel_bytes=morsel_bytes)
             self.shard_times_s, self.device_count = times, dc
+            self._note(report)
             return out
         base = SH.base_of(db)
         if strategy == "fused":
-            return _execute_fused(self.plan, base, mode, tile, cache)
+            out, report = _fused_morsels(self.plan, base, mode, tile,
+                                         cache, morsel_bytes)
+            self._note(report)
+            return out
         if strategy == "shared":        # degenerate 1-member wave
-            return execute_shared([self.plan], base, mode=mode, tile=tile,
-                                  cache=cache)[0]
-        return _execute_chain(self.plan, base, mode, tile, cache,
-                              join_mode=(strategy if strategy in
-                                         _JOIN_LOWERINGS else "opat"))
+            results, report = execute_shared_morsels(
+                [self.plan], base, mode=mode, tile=tile, cache=cache,
+                morsel_bytes=morsel_bytes)
+            self._note(report)
+            return results[0]
+        out, report = _chain_morsels(
+            self.plan, base, mode, tile, cache,
+            join_mode=(strategy if strategy in _JOIN_LOWERINGS
+                       else "opat"),
+            morsel_bytes=morsel_bytes)
+        self._note(report)
+        return out
 
     __call__ = execute
 

@@ -64,7 +64,9 @@ from typing import Dict, Optional, Tuple
 import jax
 import numpy as np
 
-from repro.cost.model import Hardware, PAPER_CPU, PAPER_GPU, TPU_V5E  # noqa: F401
+from repro.cost.model import (Hardware, PAPER_CPU, PAPER_GPU,  # noqa: F401
+                              TPU_V5E, morsel_pipeline_time)
+from repro.sql import morsel as MS
 from repro.sql import plan as P
 from repro.sql import ssb
 from repro.sql import storage
@@ -135,14 +137,17 @@ class PlanStats:
 
 
 def _pred_selectivity(pred, fact: ssb.Table, n: int) -> float:
+    # strided samples decode only the touched words
+    # (storage.sample_column) — the estimator must not pin a full-column
+    # decode of an out-of-core table just to look at 1/64th of the rows
     stride = max(1, n // SAMPLE_STRIDE_TARGET)
     if isinstance(pred, (P.RangePred, P.EqPred, P.InPred)):
-        col = np.asarray(fact[pred.col])[::stride]
+        col = storage.sample_column(fact, pred.col, stride)
         sample = ssb.Table(fact.name, {pred.col: col})
     else:                       # callable: needs every column; sample rows
         sample = ssb.Table(fact.name,
-                           {c: np.asarray(v)[::stride]
-                            for c, v in fact.columns.items()})
+                           {c: storage.sample_column(fact, c, stride)
+                            for c in fact.columns})
     m = P.pred_mask(pred, sample)
     return float(m.mean()) if m.size else 1.0
 
@@ -250,14 +255,24 @@ def _shared_stream_cols(plans):
 
 def predict(plan: P.Plan, db: ssb.Database,
             hw: Optional[Hardware] = None,
-            n_shards: Optional[int] = None) -> Dict[str, float]:
+            n_shards: Optional[int] = None,
+            morsel_bytes: Optional[int] = None) -> Dict[str, float]:
     """Predicted seconds per physical strategy.  ``fused`` is absent when
     the plan is not fusable (the compiler would silently fall back — the
     model scores what would actually run).  ``sharded`` appears when the
     plan is fusable AND ``n_shards > 1``: the fused cost with the scan
     and probes divided across shards, plus the interconnect term for
     tree-reducing the partial group grids
-    (:func:`_shard_reduce_time`)."""
+    (:func:`_shard_reduce_time`).
+
+    ``morsel_bytes`` is the executor's streaming budget: the scan term
+    becomes the double-buffered morsel pipeline
+    (``cost.model.morsel_pipeline_time`` — per-morsel copy overlapped
+    with per-morsel compute, per-morsel dispatch overhead), so the model
+    prices morsel size and ``auto`` keeps ranking correctly out of
+    core.  A budget the whole scan fits in (every in-memory database
+    under the default) collapses the pipeline to the original
+    single-pass formulas exactly."""
     from repro.sql.compile import fusability, partability
     hw = hw or default_hardware()
     st = plan_stats(plan, db)
@@ -265,9 +280,19 @@ def predict(plan: P.Plan, db: ssb.Database,
     rd, wr = hw.read_bw, hw.write_bw
 
     # one pass over every touched fact column, at encoded widths (every
-    # strategy pays this — and on a packed database pays less)
+    # strategy pays this — and on a packed database pays less), streamed
+    # through the morsel pipeline
     fact = getattr(db, plan.scan.table)
-    col_scan = scan_bytes_per_row(plan, fact) * n / rd
+    bpr = scan_bytes_per_row(plan, fact)
+    scan_bytes = bpr * n
+    budget = MS.DEFAULT_MORSEL_BYTES if morsel_bytes is None \
+        else int(morsel_bytes)
+    nm = max(1, len(MS.plan_cuts(n, MS.rows_per_morsel(bpr, budget))))
+
+    def scan_t(total_bytes: float, n_morsels: int,
+               launches_per_morsel: int) -> float:
+        return morsel_pipeline_time(total_bytes, n_morsels, hw,
+                                    launches_per_morsel)
 
     # running probe-side cardinality after filters, then after each join
     n_after_filters = n * float(np.prod(st.pred_sels)) if st.pred_sels else n
@@ -278,7 +303,7 @@ def predict(plan: P.Plan, db: ssb.Database,
     # ---- fused: column scan + full-cardinality probes, no intermediates
     fused_probe = sum(
         _probe_time(n, ht_bytes(b), hw) for b in st.join_builds)
-    fused_t = col_scan + fused_probe + launch        # exactly one kernel
+    fused_t = scan_t(scan_bytes, nm, 1) + fused_probe  # one kernel/morsel
 
     # ---- opat: per-operator selection vector + live-column re-gather,
     # at the running (work-skipped) cardinality; probes against the same
@@ -294,8 +319,10 @@ def predict(plan: P.Plan, db: ssb.Database,
         opat_probe += _probe_time(live, ht_bytes(b), hw)
         mat += (LIVE + 1) * W * live * (1 / rd + 1 / wr)
         live *= sel
-    # one dispatch per operator (+ projection/aggregation tail)
-    opat_t = col_scan + mat + opat_probe + (n_filters + n_joins + 2) * launch
+    # one dispatch per operator (+ projection/aggregation tail), repeated
+    # per morsel — the chain walks every morsel
+    opat_t = (scan_t(scan_bytes, nm, n_filters + n_joins + 2)
+              + mat + opat_probe)
 
     # ---- part: opat's shape, joins radix-partitioned — one partition
     # pass over (key, rowid, group) per join, probes cache-resident
@@ -324,9 +351,9 @@ def predict(plan: P.Plan, db: ssb.Database,
         loop_overhead += (1 << bits) * launch
         loop_overhead += (1 + LIVE) * W * live * (1 / rd + 1 / wr)
         live *= sel
-    # partition pass + fused probe = 2 launches per join
-    part_t = (col_scan + mat + part_pass + part_probe
-              + (n_filters + 2 * n_joins + 2) * launch)
+    # partition pass + fused probe = 2 launches per join, per morsel
+    part_t = (scan_t(scan_bytes, nm, n_filters + 2 * n_joins + 2)
+              + mat + part_pass + part_probe)
     part_loop_t = part_t + loop_overhead
 
     out = {"opat": opat_t}
@@ -335,12 +362,14 @@ def predict(plan: P.Plan, db: ssb.Database,
         if n_shards is not None and n_shards > 1:
             s = n_shards
             # per-shard scan + probes run concurrently (wall time is one
-            # shard's share), then the reduce pays the interconnect
-            out["sharded"] = (col_scan / s
+            # shard's share, itself morsel-pipelined), then the reduce
+            # pays the interconnect
+            nm_s = max(1, len(MS.plan_cuts(
+                -(-n // s), MS.rows_per_morsel(bpr, budget))))
+            out["sharded"] = (scan_t(scan_bytes / s, nm_s, 1)
                               + sum(_probe_time(n / s, ht_bytes(b), hw)
                                     for b in st.join_builds)
-                              + _shard_reduce_time(plan.n_groups, s, hw)
-                              + launch)
+                              + _shard_reduce_time(plan.n_groups, s, hw))
     if partability(plan) is None:
         out["part"] = part_t
         out["part_loop"] = part_loop_t
@@ -349,7 +378,8 @@ def predict(plan: P.Plan, db: ssb.Database,
 
 def predict_shared(plans, db: ssb.Database,
                    hw: Optional[Hardware] = None,
-                   n_shards: Optional[int] = None) -> Dict[str, float]:
+                   n_shards: Optional[int] = None,
+                   morsel_bytes: Optional[int] = None) -> Dict[str, float]:
     """Shared-wave vs solo cost of a scan-compatible group of fusable
     aggregate plans: ``{"shared": s, "solo": s}`` predicted seconds —
     plus ``shared_sharded`` when ``n_shards > 1``: the same wave with
@@ -397,26 +427,35 @@ def predict_shared(plans, db: ssb.Database,
     # and measure is two streams, each deduplicated within its role) —
     # each stream priced at the column's encoded width
     cols, join_nodes = _shared_stream_cols(uniq)
-    stream_bytes = sum(storage.scan_bytes_per_row(fact, c) for c in cols)
+    stream_bpr = sum(storage.scan_bytes_per_row(fact, c) for c in cols)
+    budget = MS.DEFAULT_MORSEL_BYTES if morsel_bytes is None \
+        else int(morsel_bytes)
+    nm = max(1, len(MS.plan_cuts(n, MS.rows_per_morsel(stream_bpr,
+                                                       budget))))
     builds = [int(P.pred_mask(j.filter, getattr(db, j.dim)).sum())
               for j in join_nodes]
     out_payload = float(sum(plan.n_groups * W for plan in uniq))
-    shared_t = (stream_bytes * n / hw.read_bw
+    shared_t = (morsel_pipeline_time(stream_bpr * n, nm, hw, 1)
                 + sum(_probe_time(n, ht_bytes(b), hw) for b in builds)
-                + out_payload / hw.write_bw
-                + hw.launch_overhead_s)
-    solo_t = sum(choose(plan, db, hw, n_shards=n_shards).predicted_s
+                + out_payload / hw.write_bw)
+    solo_t = sum(choose(plan, db, hw, n_shards=n_shards,
+                        morsel_bytes=morsel_bytes).predicted_s
                  for plan in plans)
     out = {"shared": shared_t, "solo": solo_t}
     if n_shards is not None and n_shards > 1:
         s = n_shards
         red_groups = sum(plan.n_groups for plan in uniq)
+        nm_s = max(1, len(MS.plan_cuts(
+            -(-n // s), MS.rows_per_morsel(stream_bpr, budget))))
         out["shared_sharded"] = (
-            stream_bytes * n / hw.read_bw / s
+            # per-shard scan pipeline (shards scan concurrently; the
+            # dispatch overhead — one wave launch per morsel per shard —
+            # is serial on the host loop)
+            morsel_pipeline_time(stream_bpr * n / s, nm_s, hw, 0)
+            + s * nm_s * hw.launch_overhead_s
             + sum(_probe_time(n / s, ht_bytes(b), hw) for b in builds)
             + out_payload / hw.write_bw
-            + _shard_reduce_time(red_groups, s, hw)
-            + hw.launch_overhead_s * s)     # host loop: one launch/shard
+            + _shard_reduce_time(red_groups, s, hw))
     return out
 
 
@@ -452,13 +491,17 @@ _CANDIDATES = ("fused", "opat", "part", "sharded")
 
 def choose(plan: P.Plan, db: ssb.Database,
            hw: Optional[Hardware] = None,
-           n_shards: Optional[int] = None) -> Choice:
+           n_shards: Optional[int] = None,
+           morsel_bytes: Optional[int] = None) -> Choice:
     """The ``auto`` strategy's decision: argmin of ``predict`` over the
     executable candidates (the ``part_loop`` baseline is excluded).
     ``n_shards`` is the shard count the caller could run sharded at
-    (``shard.shard_count(db)``) — the single- vs multi-device
-    arbitration happens right here, per query."""
-    preds = predict(plan, db, hw, n_shards=n_shards)
+    (``shard.shard_count(db)``); ``morsel_bytes`` the streaming budget
+    the executor will fold under — the single- vs multi-device
+    arbitration happens right here, per query, priced at the morsel
+    pipeline that would actually run."""
+    preds = predict(plan, db, hw, n_shards=n_shards,
+                    morsel_bytes=morsel_bytes)
     best = min((s for s in preds if s in _CANDIDATES),
                key=lambda s: (preds[s], _PREFERENCE.index(s)))
     return Choice(best, preds)

@@ -44,6 +44,13 @@ bit-identical to plain storage, and each ``QueryResult`` reports the
 scan's encoded vs nominal bytes (``bytes_scanned`` /
 ``bytes_scanned_plain``).
 
+Every execution — solo or wave, plain or sharded — streams the fact
+table through the bounded-memory morsel spine (``repro.sql.morsel``)
+under the server's ``morsel_bytes`` budget; each ``QueryResult``
+reports the stream's ``n_morsels`` and ``peak_resident_bytes`` (the
+double-buffer residency bound), so out-of-core executions are
+observable per request.
+
 Per-request metrics (latency, strategy actually used, fallback reason)
 ride back on the ``QueryResult`` so a traffic driver can tell fused
 executions from materializing fallbacks.  ``strategy="auto"`` routes the
@@ -69,7 +76,7 @@ import numpy as np
 from repro.kernels.common import DEFAULT_TILE
 from repro.sql import compile as C
 from repro.sql import ssb
-from repro.sql.compile import compile_plan, execute_shared, shareability
+from repro.sql.compile import compile_plan, shareability
 from repro.sql.hashtable import HashTableCache
 from repro.sql.plan import Plan
 
@@ -110,6 +117,11 @@ class QueryResult:
     shard_times_s: Optional[List[float]] = None  # per-shard wall times of
     #   a sharded execution (one entry for a whole shard_map launch); for
     #   a sharded shared wave, every member reports the wave's breakdown
+    n_morsels: Optional[int] = None     # morsels the scan streamed over
+    #   (1 = the in-memory degenerate case; >1 = out-of-core execution)
+    peak_resident_bytes: Optional[int] = None  # largest encoded footprint
+    #   of any two adjacent morsels — the double-buffer residency bound
+    #   the morsel stream guarantees (<= 2 x the server's morsel budget)
 
 
 class QueryServer:
@@ -130,12 +142,18 @@ class QueryServer:
 
     def __init__(self, db: ssb.Database, mode: str = "ref",
                  tile: int = DEFAULT_TILE, max_batch: int = 8,
-                 acc_budget_bytes: int = DEFAULT_ACC_BUDGET):
+                 acc_budget_bytes: int = DEFAULT_ACC_BUDGET,
+                 morsel_bytes: int = C.MS.DEFAULT_MORSEL_BYTES):
         self.db = db
         self.mode = mode
         self.tile = tile
         self.max_batch = max_batch
         self.acc_budget_bytes = acc_budget_bytes
+        # per-morsel byte budget every execution streams under; the
+        # default keeps test-scale databases single-morsel (in-memory
+        # fast path), a smaller budget bounds device residency at
+        # 2 x morsel_bytes regardless of fact-table size
+        self.morsel_bytes = morsel_bytes
         self.cache = HashTableCache()
         self.queue: List[QueryRequest] = []
         self._next_rid = 0
@@ -364,6 +382,7 @@ class QueryServer:
         flavor = "shared_sharded" if sharded else "shared"
         dc = SH.shard_count(self.db) if sharded else None
         shard_times: Optional[List[float]] = None
+        report: Optional[C.MS.MorselReport] = None
 
         def member_result(req, result, error, dt):
             self.stats["queries"] += 1
@@ -385,7 +404,10 @@ class QueryServer:
                 predictions=model_predictions,
                 shared_wave_size=len(survivors),
                 bytes_scanned=bytes_enc, bytes_scanned_plain=bytes_plain,
-                device_count=dc, shard_times_s=shard_times)
+                device_count=dc, shard_times_s=shard_times,
+                n_morsels=None if report is None else report.n_morsels,
+                peak_resident_bytes=(None if report is None
+                                     else report.peak_resident_bytes))
 
         # pow2 member-count buckets (like the LM server's length buckets):
         # padded slots are inert but not free, so a small wave must not
@@ -394,15 +416,15 @@ class QueryServer:
         pad_to = 1 << max(len(uniq_reqs) - 1, 0).bit_length()
         try:
             if sharded:
-                results, shard_times = C.execute_shared_sharded(
+                results, shard_times, report = C.execute_shared_sharded(
                     [r.plan for r in uniq_reqs], self.db, mode=self.mode,
                     tile=self.tile, cache=self.cache, pad_to=pad_to,
-                    prebuilt=prebuilt)
+                    prebuilt=prebuilt, morsel_bytes=self.morsel_bytes)
             else:
-                results = execute_shared(
+                results, report = C.execute_shared_morsels(
                     [r.plan for r in uniq_reqs], self.db, mode=self.mode,
                     tile=self.tile, cache=self.cache, pad_to=pad_to,
-                    prebuilt=prebuilt)
+                    prebuilt=prebuilt, morsel_bytes=self.morsel_bytes)
         except Exception as e:              # noqa: BLE001 — isolate wave
             dt = time.perf_counter() - t0
             msg = f"{type(e).__name__}: {e}"
@@ -454,7 +476,8 @@ class QueryServer:
             return errored(req.strategy, None, e)
         try:
             result = cq.execute(self.db, mode=self.mode, tile=self.tile,
-                                cache=self.cache)
+                                cache=self.cache,
+                                morsel_bytes=self.morsel_bytes)
         except Exception as e:                  # noqa: BLE001 — isolate
             # auto requests that fail mid-execute report the strategy the
             # model actually dispatched, not the "auto" placeholder
@@ -483,4 +506,6 @@ class QueryServer:
             predicted_s=None if preds is None else preds.get(ran),
             predictions=preds,
             bytes_scanned=bytes_enc, bytes_scanned_plain=bytes_plain,
-            device_count=cq.device_count, shard_times_s=cq.shard_times_s)
+            device_count=cq.device_count, shard_times_s=cq.shard_times_s,
+            n_morsels=cq.n_morsels,
+            peak_resident_bytes=cq.peak_resident_bytes)

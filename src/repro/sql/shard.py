@@ -260,6 +260,53 @@ def stacked_stream(sdb: ShardedDatabase, col: str) -> Tuple:
     return entry
 
 
+def stacked_window(sdb: ShardedDatabase, col: str, lo: int, hi: int,
+                   pad: int) -> Tuple:
+    """:func:`stacked_stream` restricted to per-shard rows ``[lo, hi)``
+    and padded to ``pad`` — the mesh path's morsel window.  Decodes only
+    the window of each shard (``PackedColumn.decode_range``: O(window)
+    work and memory however large the fact table is) and is NOT
+    memoized: windows are transient by design, the double buffer in
+    ``compile._execute_fused_map`` owns their lifetime."""
+    table = getattr(sdb.base, sdb.fact)
+    enc = ST.encoding_of(table, col)
+    b = sdb.bounds
+
+    def window(i: int) -> np.ndarray:
+        s = int(b[i]) + lo
+        e = min(int(b[i]) + hi, int(b[i + 1]))
+        if e <= s:
+            return np.zeros(0, np.int32)
+        if isinstance(table, ST.PackedTable):
+            return table.columns[col].decode_range(s, e)
+        return np.asarray(table.columns[col][s:e])
+
+    if enc is None or enc.kind == "plain":
+        out = np.zeros((sdb.n_shards, pad), np.int32)
+        for i in range(sdb.n_shards):
+            seg = window(i)
+            out[i, :len(seg)] = seg
+        return jnp.asarray(out), 32, 0
+    words = []
+    for i in range(sdb.n_shards):
+        padded = np.full(pad, enc.ref, np.int32)
+        seg = window(i)
+        padded[:len(seg)] = seg
+        words.append(ST.pack_words(padded, enc.width, enc.ref))
+    return jnp.asarray(np.stack(words)), enc.phys, enc.ref
+
+
+def validity_window(sdb: ShardedDatabase, lo: int, hi: int,
+                    pad: int) -> Tuple:
+    """The 1/0 real-row mask for per-shard rows ``[lo, hi)`` padded to
+    ``pad`` (see :func:`validity_stream`)."""
+    v = np.zeros((sdb.n_shards, pad), np.int32)
+    for i in range(sdb.n_shards):
+        n = int(sdb.bounds[i + 1] - sdb.bounds[i])
+        v[i, :max(0, min(hi, n) - lo)] = 1
+    return jnp.asarray(v), 32, 0
+
+
 def validity_stream(sdb: ShardedDatabase) -> Tuple:
     """``(S, pad_rows)`` int32 1/0 mask of real vs pad rows, consumed as
     one extra predicate stream with bounds ``(1, 1)`` — the stacked

@@ -18,7 +18,7 @@ cardinalities follow the SSB spec.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict
+from typing import Dict, List, Tuple
 
 import numpy as np
 
@@ -62,15 +62,40 @@ def datekey(year: int, day: int = 0) -> int:
     return (year - 1992) * DAYS_PER_YEAR + day
 
 
-def generate(sf: float = 0.01, seed: int = 0) -> Database:
-    rng = np.random.default_rng(seed)
+def _scale(sf: float) -> Tuple[int, int, int, int]:
+    """Row counts (n_lo, n_supp, n_cust, n_part) at scale factor sf."""
     n_lo = max(1, int(6_000_000 * sf))
     n_supp = max(8, int(2_000 * sf))
     n_cust = max(8, int(30_000 * sf))
     n_part = int(200_000 * max(1.0, 1 + np.log2(max(sf, 1.0))))
     if sf < 1.0:
         n_part = max(64, int(200_000 * sf))
+    return n_lo, n_supp, n_cust, n_part
 
+
+def _lineorder_specs(n_part: int, n_supp: int,
+                     n_cust: int) -> List[Tuple[str, int, int]]:
+    """The fact columns as (name, lo, hi) uniform-draw specs, in draw
+    order — the single definition both the in-memory generator and the
+    chunked streaming generator consume, so their rng streams agree."""
+    return [
+        ("lo_orderdate", 0, N_DATES),
+        ("lo_partkey", 0, n_part),
+        ("lo_suppkey", 0, n_supp),
+        ("lo_custkey", 0, n_cust),
+        ("lo_quantity", 1, 51),
+        ("lo_discount", 0, 11),
+        ("lo_extendedprice", 1, 1_000),
+        ("lo_revenue", 1, 1_000),
+        ("lo_supplycost", 1, 500),
+    ]
+
+
+def _dimensions(rng: np.random.Generator, n_supp: int, n_cust: int,
+                n_part: int) -> Tuple[Table, Table, Table, Table]:
+    """Generate the four dimension tables, consuming the rng's dimension
+    draws (s_city, c_city, p_brand1) in the fixed order the fact
+    generator continues from."""
     i32 = np.int32
     dk = np.arange(N_DATES, dtype=i32)
     date = Table("date", {
@@ -102,16 +127,68 @@ def generate(sf: float = 0.01, seed: int = 0) -> Database:
     })
     part.columns["p_category"] = (part["p_brand1"] // 40).astype(i32)
     part.columns["p_mfgr"] = (part["p_category"] // 5).astype(i32)
+    return date, supplier, customer, part
 
+
+def generate(sf: float = 0.01, seed: int = 0) -> Database:
+    rng = np.random.default_rng(seed)
+    n_lo, n_supp, n_cust, n_part = _scale(sf)
+    date, supplier, customer, part = _dimensions(rng, n_supp, n_cust,
+                                                 n_part)
     lineorder = Table("lineorder", {
-        "lo_orderdate": rng.integers(0, N_DATES, n_lo, dtype=i32),
-        "lo_partkey": rng.integers(0, n_part, n_lo, dtype=i32),
-        "lo_suppkey": rng.integers(0, n_supp, n_lo, dtype=i32),
-        "lo_custkey": rng.integers(0, n_cust, n_lo, dtype=i32),
-        "lo_quantity": rng.integers(1, 51, n_lo, dtype=i32),
-        "lo_discount": rng.integers(0, 11, n_lo, dtype=i32),
-        "lo_extendedprice": rng.integers(1, 1_000, n_lo, dtype=i32),
-        "lo_revenue": rng.integers(1, 1_000, n_lo, dtype=i32),
-        "lo_supplycost": rng.integers(1, 500, n_lo, dtype=i32),
-    })
+        name: rng.integers(lo, hi, n_lo, dtype=np.int32)
+        for name, lo, hi in _lineorder_specs(n_part, n_supp, n_cust)})
     return Database(lineorder, date, supplier, customer, part, sf)
+
+
+def generate_packed(sf: float = 0.01, seed: int = 0,
+                    chunk_rows: int = 1 << 20) -> Database:
+    """Generate directly into the packed representation, streaming the
+    fact table ``chunk_rows`` at a time — the full plain lineorder is
+    NEVER materialized, so SF >= 1 databases build under a bounded
+    footprint (one chunk + the packed words).
+
+    Bit-identical to ``storage.pack_database(generate(sf, seed))``: the
+    rng draw order is shared (``_dimensions`` + ``_lineorder_specs``),
+    numpy's per-value Generator draws chunk the same as one whole draw,
+    and each column runs two passes over a saved rng state — a stats
+    pass feeding ``storage.encoding_from_stats`` (the same min/max rule
+    ``choose_encoding`` applies to a materialized column), then a pack
+    pass writing word-aligned chunks (``chunk_rows`` is floored to a
+    multiple of 32 rows, a word boundary of every packed width)."""
+    from repro.sql import storage as ST  # storage imports ssb: late bind
+
+    rng = np.random.default_rng(seed)
+    n_lo, n_supp, n_cust, n_part = _scale(sf)
+    date, supplier, customer, part = _dimensions(rng, n_supp, n_cust,
+                                                 n_part)
+    chunk = max(32, (int(chunk_rows) // 32) * 32)
+    cols: Dict[str, ST.PackedColumn] = {}
+    for name, lo, hi in _lineorder_specs(n_part, n_supp, n_cust):
+        state = rng.bit_generator.state
+        vmin = vmax = None
+        for c0 in range(0, n_lo, chunk):
+            vals = rng.integers(lo, hi, min(chunk, n_lo - c0),
+                                dtype=np.int32)
+            m0, m1 = int(vals.min()), int(vals.max())
+            vmin = m0 if vmin is None else min(vmin, m0)
+            vmax = m1 if vmax is None else max(vmax, m1)
+        enc = ST.encoding_from_stats(vmin, vmax, n_lo)
+        rng.bit_generator.state = state
+        if enc.kind == "plain":
+            words = np.empty(n_lo, np.int32)
+            for c0 in range(0, n_lo, chunk):
+                m = min(chunk, n_lo - c0)
+                words[c0:c0 + m] = rng.integers(lo, hi, m, dtype=np.int32)
+        else:
+            c = enc.values_per_word
+            words = np.empty((n_lo + c - 1) // c, np.int32)
+            for c0 in range(0, n_lo, chunk):
+                m = min(chunk, n_lo - c0)
+                w = ST.pack_words(rng.integers(lo, hi, m, dtype=np.int32),
+                                  enc.width, enc.ref)
+                words[c0 // c:c0 // c + len(w)] = w
+        cols[name] = ST.PackedColumn(enc, words)
+    lineorder = ST.PackedTable("lineorder", cols)
+    return Database(lineorder, ST.pack_table(date), ST.pack_table(supplier),
+                    ST.pack_table(customer), ST.pack_table(part), sf)

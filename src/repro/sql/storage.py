@@ -56,6 +56,25 @@ from repro.sql import ssb
 PHYS_WIDTHS = (1, 2, 4, 8, 16, 32)      # divisors of 32: lane-aligned decode
 _I32_MIN, _I32_MAX = -(1 << 31), (1 << 31) - 1
 
+# Decode-memo policy: ``PackedColumn.decode()`` pins its full-width
+# result only while the decoded column stays under this budget.  Out-of-
+# core scale is exactly where the old unconditional memo broke: at SF-1 a
+# single ``table[col]`` access (oracle, ``pred_mask``, fingerprinting)
+# decoded and pinned 24 MB per column, defeating the morsel bound the
+# executor worked for.  Columns over the budget decode on demand (callers
+# that stream should use :meth:`PackedColumn.decode_range` instead) and
+# :meth:`PackedColumn.release` drops whatever is pinned.
+DECODE_MEMO_LIMIT = 1 << 24             # 16 MiB decoded bytes
+
+
+def set_decode_memo_limit(n_bytes: int) -> int:
+    """Set the decode-memo budget; returns the previous value (tests and
+    memory-constrained drivers scope it)."""
+    global DECODE_MEMO_LIMIT
+    prev = DECODE_MEMO_LIMIT
+    DECODE_MEMO_LIMIT = int(n_bytes)
+    return prev
+
 
 def phys_width(width: int) -> int:
     """Smallest lane-aligned physical width >= the logical width."""
@@ -102,17 +121,18 @@ def bits_for(span: int) -> int:
     return max(int(span).bit_length(), 1)
 
 
-def choose_encoding(values: np.ndarray) -> ColumnEncoding:
-    """Pick the cheapest encoding from the column's min/max statistics.
+def encoding_from_stats(vmin: int, vmax: int, n: int) -> ColumnEncoding:
+    """Pick the cheapest encoding from min/max statistics alone.
     Prefers ``bitpack`` (ref=0, one op less per decode) whenever the
     zero-referenced width lands on the same physical width as the
     frame-of-reference one; falls back to ``plain`` when packing would
-    not shrink the column (phys == 32)."""
-    n = len(values)
+    not shrink the column (phys == 32).  Split out of
+    :func:`choose_encoding` so the streaming generator
+    (``ssb.generate_packed``) can pick encodings from a stats-only first
+    pass without ever holding a full column."""
     if n == 0:
         return ColumnEncoding("plain", 32, 32, 0, 0)
-    vmin = int(values.min())
-    vmax = int(values.max())
+    vmin, vmax = int(vmin), int(vmax)
     w_for = bits_for(vmax - vmin)
     if phys_width(w_for) >= 32:
         return ColumnEncoding("plain", 32, 32, 0, n)
@@ -120,6 +140,15 @@ def choose_encoding(values: np.ndarray) -> ColumnEncoding:
         w = bits_for(vmax)
         return ColumnEncoding("bitpack", w, phys_width(w), 0, n)
     return ColumnEncoding("for", w_for, phys_width(w_for), vmin, n)
+
+
+def choose_encoding(values: np.ndarray) -> ColumnEncoding:
+    """Pick the cheapest encoding for a materialized column (min/max
+    statistics via :func:`encoding_from_stats`)."""
+    n = len(values)
+    if n == 0:
+        return ColumnEncoding("plain", 32, 32, 0, 0)
+    return encoding_from_stats(int(values.min()), int(values.max()), n)
 
 
 # ---------------------------------------------------------------------------
@@ -184,11 +213,40 @@ class PackedColumn:
     def decode(self) -> np.ndarray:
         if self.encoding.kind == "plain":
             return self.words
-        if self._decoded is None:
-            e = self.encoding
-            self._decoded = unpack_words(self.words, e.n_rows, e.width,
-                                         e.ref)
-        return self._decoded
+        if self._decoded is not None:
+            return self._decoded
+        e = self.encoding
+        out = unpack_words(self.words, e.n_rows, e.width, e.ref)
+        # Memoize only while the decoded column fits the budget: pinning
+        # a 24 MB decode per column at SF-1 would defeat the out-of-core
+        # bound the morsel executor maintains.  Streaming callers should
+        # prefer :meth:`decode_range`.
+        if 4 * e.n_rows <= DECODE_MEMO_LIMIT:
+            self._decoded = out
+        return out
+
+    def decode_range(self, lo: int, hi: int) -> np.ndarray:
+        """Decode rows ``[lo, hi)`` touching only the word window that
+        holds them — the per-morsel decode for oracle/``pred_mask``
+        paths, O(hi - lo) regardless of column length."""
+        if self.encoding.kind == "plain":
+            return self.words[lo:hi]
+        if self._decoded is not None:
+            return self._decoded[lo:hi]
+        e = self.encoding
+        c = e.values_per_word
+        w0, w1 = lo // c, (hi + c - 1) // c
+        vals = unpack_words(self.words[w0:w1], (w1 - w0) * c, e.width,
+                            e.ref)
+        return vals[lo - w0 * c: hi - w0 * c]
+
+    def release(self, device: bool = False) -> None:
+        """Drop the pinned full-column decode (and, with ``device=True``,
+        the uploaded word stream) — the explicit end of the bounded-cache
+        policy for callers that know a column is done."""
+        self._decoded = None
+        if device:
+            self._words_jax = None
 
     def __array__(self, dtype=None, copy=None) -> np.ndarray:
         """Full numpy conversion protocol: dtype- and copy-aware
@@ -239,6 +297,14 @@ class PackedTable:
     def plain_nbytes(self) -> int:
         return sum(4 * c.encoding.n_rows for c in self.columns.values())
 
+    def release(self, device: bool = False) -> None:
+        """Release every column's pinned decode (see
+        :meth:`PackedColumn.release`); recurses into delta batches."""
+        for col in self.columns.values():
+            col.release(device=device)
+        for batch in delta_batches(self):
+            batch.release(device=device)
+
 
 def pack_column(values: np.ndarray,
                 enc: Optional[ColumnEncoding] = None) -> PackedColumn:
@@ -250,18 +316,35 @@ def pack_column(values: np.ndarray,
 
 
 def slice_rows(table, lo: int, hi: int):
-    """Row-range copy ``[lo, hi)`` of a table — the fact-table shard cut
-    (``repro.sql.shard``).  Plain tables slice each column (numpy views:
-    a shard of a plain database shares its parent's buffers); packed
-    columns re-pack their slice under the PARENT encoding (same
-    kind/width/ref via :func:`pack_column`'s explicit-encoding form), so
-    predicate rewrites, stream widths and frames of reference computed
-    against the parent table stay valid on every shard."""
+    """Row-range copy ``[lo, hi)`` of a table — the fact-table shard and
+    morsel cut (``repro.sql.shard``, ``repro.sql.morsel``).  Plain tables
+    slice each column (numpy views: a shard of a plain database shares
+    its parent's buffers); packed columns keep the PARENT encoding (same
+    kind/width/ref), so predicate rewrites, stream widths and frames of
+    reference computed against the parent table stay valid on every cut.
+
+    When ``lo`` lands on an int32-word boundary of a column (``lo %
+    values_per_word == 0`` — every morsel cut, since morsels are LANE-
+    aligned and LANE is a multiple of all ``values_per_word``), the
+    packed slice is a pure word-window VIEW: zero decode, zero re-pack.
+    The window's final word may carry trailing lanes of the parent's next
+    rows; that is safe everywhere packed streams flow — kernels mask rows
+    ``>= n_rows`` (``valid_mask``) and the ref path slices ``[:n]`` after
+    decode.  Unaligned cuts fall back to a range decode + re-pack under
+    the parent encoding."""
     if isinstance(table, PackedTable):
         cols = {}
         for name, col in table.columns.items():
             enc = replace(col.encoding, n_rows=hi - lo)
-            cols[name] = pack_column(col.decode()[lo:hi], enc)
+            if enc.kind == "plain":
+                cols[name] = PackedColumn(enc, col.words[lo:hi])
+                continue
+            c = enc.values_per_word
+            if lo % c == 0:
+                cols[name] = PackedColumn(
+                    enc, col.words[lo // c:(hi + c - 1) // c])
+            else:
+                cols[name] = pack_column(col.decode_range(lo, hi), enc)
         return PackedTable(table.name, cols)
     return ssb.Table(table.name, {c: v[lo:hi]
                                   for c, v in table.columns.items()})
@@ -336,3 +419,97 @@ def scan_bytes_per_row(table, col: str) -> float:
     The cost model's per-column replacement for the flat ``W``."""
     enc = encoding_of(table, col)
     return 4.0 if enc is None else enc.bytes_per_row
+
+
+def sample_column(table, col: str, stride: int) -> np.ndarray:
+    """Every ``stride``-th value of a column without materializing a
+    full decode: a strided word gather + lane shift on packed columns
+    (O(n/stride) work and memory), a plain strided view otherwise — the
+    selectivity estimator's probe (``sql.model``), which previously
+    full-decoded SF-1 columns just to look at 1/64th of the rows."""
+    stride = max(1, int(stride))
+    if isinstance(table, PackedTable):
+        pc = table.columns[col]
+        e = pc.encoding
+        if e.kind != "plain" and pc._decoded is None:
+            idx = np.arange(0, e.n_rows, stride, dtype=np.int64)
+            w = pc.words.view(np.uint32)[idx // e.values_per_word]
+            sh = ((idx % e.values_per_word) * e.phys).astype(np.uint32)
+            vals = ((w >> sh)
+                    & np.uint32((1 << e.phys) - 1)).astype(np.int64)
+            return (vals + e.ref).astype(np.int32)
+    return np.asarray(table[col])[::stride]
+
+
+# ---------------------------------------------------------------------------
+# append-only delta batches (ingest under load)
+# ---------------------------------------------------------------------------
+#
+# A table accepts appended row batches without repacking its base
+# columns: each batch is packed immediately (under the parent encoding
+# when the new values fit its domain — same kernel trace, predicate
+# rewrites stay valid — or fresh statistics otherwise) and stashed on
+# the table.  The morsel iterator (``repro.sql.morsel``) appends delta
+# batches after the base rows at scan time, so queries observe ingested
+# rows with no flush; ``flush_deltas`` is the explicit compaction that
+# folds them back into one freshly-encoded table.
+
+
+def append_rows(table, rows: Dict[str, np.ndarray]):
+    """Append one delta batch (full row set, dict of column arrays) to a
+    table; returns the packed batch table."""
+    if set(rows) != set(table.columns):
+        raise ValueError(
+            f"delta batch columns {sorted(rows)} != table columns "
+            f"{sorted(table.columns)}")
+    lens = {len(np.asarray(v)) for v in rows.values()}
+    if len(lens) != 1:
+        raise ValueError(f"ragged delta batch: column lengths {lens}")
+    n_new = lens.pop()
+    if isinstance(table, PackedTable):
+        cols = {}
+        for name, col in table.columns.items():
+            vals = np.asarray(rows[name], np.int32)
+            enc = replace(col.encoding, n_rows=n_new)
+            try:
+                cols[name] = pack_column(vals, enc)
+            except ValueError:
+                # outside the parent's domain: encode from the batch's
+                # own stats (costs a retrace for this batch's scans)
+                cols[name] = pack_column(vals)
+        batch = PackedTable(table.name, cols)
+    else:
+        batch = ssb.Table(table.name, {c: np.asarray(v, np.int32)
+                                       for c, v in rows.items()})
+    pending = getattr(table, "_deltas", None)
+    if pending is None:
+        pending = []
+        table._deltas = pending
+    pending.append(batch)
+    return batch
+
+
+def delta_batches(table) -> list:
+    """The pending delta batches of a table (empty list if none)."""
+    return list(getattr(table, "_deltas", ()))
+
+
+def delta_rows(table) -> int:
+    """Total appended-but-unflushed rows."""
+    return sum(b.n_rows for b in delta_batches(table))
+
+
+def flush_deltas(table):
+    """Compact base + deltas into one fresh table (re-encoded from the
+    merged statistics).  Returns ``table`` itself when nothing is
+    pending; the result carries no deltas."""
+    pending = delta_batches(table)
+    if not pending:
+        return table
+    merged = {c: np.concatenate([np.asarray(table[c])]
+                                + [np.asarray(b[c]) for b in pending])
+              for c in table.columns}
+    if isinstance(table, PackedTable):
+        return PackedTable(table.name,
+                           {c: pack_column(v) for c, v in merged.items()})
+    return ssb.Table(table.name, merged)

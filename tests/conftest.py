@@ -40,6 +40,19 @@ def pytest_collection_modifyitems(config, items):
         items[:] = [it for it in items if it.nodeid not in skip_ids]
 
 
+@pytest.fixture(autouse=True, scope="module")
+def _clear_jax_caches_per_module():
+    """Drop compiled executables between test modules.  The suite jits
+    hundreds of distinct kernel shapes; letting them all stay live in
+    one process eventually segfaults a later XLA CPU compile (observed
+    deterministically once the morsel-stream module joined the suite).
+    Clearing per module bounds the live-executable footprint at the cost
+    of some recompilation."""
+    yield
+    import jax
+    jax.clear_caches()
+
+
 @pytest.fixture(scope="session")
 def rng():
     return np.random.default_rng(0)

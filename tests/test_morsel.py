@@ -1,0 +1,464 @@
+"""Morsel-streamed out-of-core execution (repro.sql.morsel + the spine
+every strategy in repro.sql.compile folds over).
+
+The tentpole claim under test: cutting the fact table into LANE-aligned
+fixed-byte-budget morsels, folding any strategy over the stream and
+merging the per-morsel partials is BIT-identical to the whole-table
+pass — for all 13 SSB queries, on plain and packed storage, across
+fused / opat / part / shared and the sharded x morsel composition,
+deltas pending or not — while ``peak_resident_bytes`` proves the
+2 x morsel_bytes double-buffer bound.  Plus the satellites: the cut
+boundary math (unaligned offsets, sub-word tails, empty streams), the
+bounded decode-memo policy, the streaming generator's bit-identity, the
+cost model's morsel pipeline term, and the server's per-request
+out-of-core accounting.
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.cost import model as CM
+from repro.sql import compile as C
+from repro.sql import engine, ssb
+from repro.sql import hashtable as HT
+from repro.sql import model as M
+from repro.sql import morsel as MS
+from repro.sql import plan as P
+from repro.sql import shard as SH
+from repro.sql import storage as ST
+from repro.sql.server import QueryServer
+
+DB = ssb.generate(sf=0.005, seed=11)
+PDB = ST.pack_database(DB)
+QUERIES = engine.ssb_queries()
+# a budget forcing >1 morsel on every query: an eighth of the packed
+# fact table (well under the 25% out-of-core threshold)
+BUDGET = PDB.lineorder.nbytes // 8
+
+multidevice = pytest.mark.skipif(
+    jax.device_count() < 2,
+    reason="needs >=2 devices (XLA_FLAGS=--xla_force_host_platform_"
+           "device_count=8)")
+
+
+def oracle(name):
+    return np.asarray(engine.run_query_oracle(DB, QUERIES[name]))
+
+
+# ---------------------------------------------------------------------------
+# cut geometry / boundary math
+# ---------------------------------------------------------------------------
+
+
+def test_rows_per_morsel_lane_aligned_and_floored():
+    assert MS.rows_per_morsel(4.0, 1 << 20) == (1 << 18) // 32 * 32
+    # sub-lane budgets still make progress (floor at one lane)
+    assert MS.rows_per_morsel(4.0, 1) == MS.LANE
+    assert MS.rows_per_morsel(0.0, 1 << 20) == MS.LANE
+    for bpr in (0.5, 1.0, 2.5, 4.0):
+        assert MS.rows_per_morsel(bpr, 12345) % MS.LANE == 0
+
+
+def test_plan_cuts_cover_partition_and_tail():
+    cuts = MS.plan_cuts(100, 32)
+    assert cuts == [(0, 32), (32, 64), (64, 96), (96, 100)]
+    assert MS.plan_cuts(0, 32) == []            # empty table: no cuts
+    assert MS.plan_cuts(7, 32) == [(0, 7)]      # tail shorter than a lane
+    # any (n, step): exact partition of [0, n)
+    for n, step in ((1, 32), (31, 32), (32, 32), (33, 32), (257, 64)):
+        cuts = MS.plan_cuts(n, step)
+        assert cuts[0][0] == 0 and cuts[-1][1] == n
+        for (a, b), (c, d) in zip(cuts, cuts[1:]):
+            assert b == c
+
+
+def test_slice_rows_word_aligned_is_view():
+    lo = PDB.lineorder
+    col = lo.columns["lo_discount"]             # packed, phys < 32
+    c = col.encoding.values_per_word
+    cut = ST.slice_rows(lo, 0, 2 * MS.LANE)
+    sliced = cut.columns["lo_discount"]
+    assert sliced.encoding.kind == col.encoding.kind
+    assert sliced.encoding.width == col.encoding.width
+    assert sliced.encoding.ref == col.encoding.ref
+    # LANE-aligned cut: the words are a VIEW of the parent stream
+    assert np.shares_memory(sliced.words, col.words)
+    assert np.array_equal(np.asarray(sliced),
+                          np.asarray(col)[:2 * MS.LANE])
+    # the window's last word may carry trailing parent lanes — they are
+    # outside [:n] and never observed
+    assert len(sliced.words) == (2 * MS.LANE + c - 1) // c
+
+
+def test_slice_rows_unaligned_offsets_repack_exactly():
+    lo = PDB.lineorder
+    n = lo.n_rows
+    for a, b in ((5, 70), (1, 2), (33, 33 + 7), (n - 3, n)):
+        cut = ST.slice_rows(lo, a, b)
+        assert cut.n_rows == b - a
+        for cname in lo.columns:
+            assert np.array_equal(np.asarray(cut[cname]),
+                                  np.asarray(lo[cname])[a:b]), (cname, a, b)
+            # parent encoding preserved even through the re-pack
+            assert cut.encoding(cname).width == lo.encoding(cname).width
+            assert cut.encoding(cname).ref == lo.encoding(cname).ref
+
+
+def test_decode_range_matches_full_decode():
+    lo = PDB.lineorder
+    n = lo.n_rows
+    for cname in ("lo_discount", "lo_orderdate", "lo_revenue"):
+        col = lo.columns[cname]
+        full = np.asarray(col)
+        for a, b in ((0, n), (0, 0), (5, 5), (3, 41), (n - 1, n),
+                     (MS.LANE, 3 * MS.LANE)):
+            assert np.array_equal(col.decode_range(a, b), full[a:b]), \
+                (cname, a, b)
+
+
+def test_stream_covers_rows_exactly_and_reports_peak():
+    stream = MS.MorselStream(PDB.lineorder, morsel_bytes=BUDGET)
+    assert stream.n_morsels > 1
+    got = np.concatenate([np.asarray(m.table["lo_revenue"])
+                          for m in stream.morsels()])
+    assert np.array_equal(got, np.asarray(PDB.lineorder["lo_revenue"]))
+    # analytic per-morsel bytes match the materialized cuts
+    for i, m in enumerate(stream.morsels()):
+        assert stream.morsel_nbytes(i) == MS.scanned_morsel_bytes(
+            m.table, None)
+    # the fold's observed peak IS the analytic adjacent-pair bound
+    report = MS.MorselReport()
+    stream.fold(lambda m: None, report=report)
+    assert report.n_morsels == stream.n_morsels
+    assert report.peak_resident_bytes == stream.peak_resident_bytes()
+    # the bound itself: at most two morsels resident
+    assert report.peak_resident_bytes <= 2 * BUDGET + 4 * 1024
+
+
+def test_single_morsel_is_identity():
+    stream = MS.MorselStream(PDB.lineorder)     # default 64 MiB budget
+    assert stream.n_morsels == 1
+    (m,) = list(stream.morsels())
+    assert m.table is PDB.lineorder             # no slice, no copy
+
+
+def test_empty_table_streams_zero_morsels():
+    empty = ST.slice_rows(PDB.lineorder, 0, 0)
+    stream = MS.MorselStream(empty, morsel_bytes=BUDGET)
+    assert stream.n_morsels == 0
+    assert stream.peak_resident_bytes() == 0
+    assert stream.fold(lambda m: 1) == []
+
+
+# ---------------------------------------------------------------------------
+# every strategy folds bit-identically (the tentpole)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("strategy", ["fused", "opat", "part", "shared"])
+@pytest.mark.parametrize("db", [DB, PDB], ids=["plain", "packed"])
+def test_all_queries_bit_identical_under_budget(db, strategy):
+    cache = HT.HashTableCache()
+    for name, plan in QUERIES.items():
+        cq = C.compile_plan(plan, strategy)
+        got = cq.execute(db, mode="ref", cache=cache, morsel_bytes=BUDGET)
+        assert cq.n_morsels > 1, (name, strategy)
+        assert cq.peak_resident_bytes <= 2 * BUDGET + 4 * 1024
+        assert np.array_equal(np.asarray(got), oracle(name)), \
+            (name, strategy)
+
+
+def test_default_budget_single_morsel_reported():
+    cq = C.compile_plan(QUERIES["q1.1"], "fused")
+    got = cq.execute(PDB, mode="ref")
+    assert cq.n_morsels == 1
+    assert cq.peak_resident_bytes > 0
+    assert np.array_equal(np.asarray(got), oracle("q1.1"))
+
+
+def test_row_plan_deferred_order_by_matches_whole_pass():
+    rowplan = P.Plan("rows_ord", P.OrderBy(
+        P.Filter(P.Scan("lineorder"), [P.RangePred("lo_discount", 4, 6)]),
+        "lo_orderdate"))
+    whole = np.asarray(C.compile_plan(rowplan, "opat").execute(
+        PDB, mode="ref"))
+    cq = C.compile_plan(rowplan, "opat")
+    got = np.asarray(cq.execute(PDB, mode="ref", morsel_bytes=BUDGET))
+    assert cq.n_morsels > 1
+    # per-morsel chains defer the sort; ONE global radix pass at the end
+    # must be bit-identical to sorting the whole table's survivors
+    assert np.array_equal(whole, got)
+
+
+def test_row_plan_without_order_concatenates_global_rowids():
+    rowplan = P.Plan("rows_flat", P.Filter(
+        P.Scan("lineorder"), [P.RangePred("lo_quantity", 1, 10)]))
+    whole = np.asarray(C.compile_plan(rowplan, "opat").execute(
+        PDB, mode="ref"))
+    got = np.asarray(C.compile_plan(rowplan, "opat").execute(
+        PDB, mode="ref", morsel_bytes=BUDGET))
+    assert np.array_equal(whole, got)
+
+
+def test_shared_wave_streams_once_per_wave():
+    plans = [QUERIES[n] for n in ("q1.1", "q2.1", "q3.1", "q4.1")]
+    base = C.execute_shared(plans, PDB, mode="ref")
+    got, report = C.execute_shared_morsels(plans, PDB, mode="ref",
+                                           morsel_bytes=BUDGET)
+    assert report.n_morsels > 1
+    assert report.peak_resident_bytes <= 2 * BUDGET + 4 * 1024
+    for b, g, p in zip(base, got, plans):
+        assert np.array_equal(b, g), p.name
+
+
+def test_sharded_composes_with_morsels():
+    sdb = SH.shard_database(PDB, 3)
+    for name in ("q1.1", "q2.1", "q4.3"):
+        cq = C.compile_plan(QUERIES[name], "sharded")
+        got = cq.execute(sdb, mode="ref", morsel_bytes=BUDGET)
+        assert cq.n_morsels >= 3            # every shard streams
+        assert np.array_equal(np.asarray(got), oracle(name)), name
+
+
+@multidevice
+def test_mesh_path_windows_under_budget():
+    sdb = SH.shard_database(PDB, min(2, jax.device_count()))
+    for name in ("q1.1", "q2.1"):
+        cq = C.compile_plan(QUERIES[name], "sharded")
+        got = cq.execute(sdb, mode="kernel", tile=512,
+                         morsel_bytes=BUDGET)
+        assert cq.n_morsels > 1
+        assert np.array_equal(np.asarray(got), oracle(name)), name
+
+
+# ---------------------------------------------------------------------------
+# morsel-partition invariance (property when hypothesis is available,
+# a deterministic budget sweep otherwise)
+# ---------------------------------------------------------------------------
+
+try:                                        # hypothesis is a dev-only dep
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                     # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=20, deadline=None)
+    @given(st.sampled_from(sorted(QUERIES)),
+           st.sampled_from(["fused", "opat", "part", "shared"]),
+           st.integers(0, 63))
+    def test_property_any_partition_bit_identical(name, strategy, frac):
+        """Folding ANY morsel partition — any budget, hence any cut
+        count from 1 to n_rows/LANE — is bit-identical to the
+        whole-table pass for every SSB query and strategy (integer-
+        valued f32 partials are exact, so the association order of the
+        merge cannot matter)."""
+        budget = max(1, PDB.lineorder.nbytes * (frac + 1) // 64)
+        cq = C.compile_plan(QUERIES[name], strategy)
+        got = cq.execute(PDB, mode="ref", morsel_bytes=budget)
+        assert cq.n_morsels >= 1
+        assert np.array_equal(np.asarray(got), oracle(name)), \
+            (name, strategy, budget, cq.n_morsels)
+else:                                   # pragma: no cover
+    def test_property_any_partition_bit_identical():
+        for frac in (1, 5, 23):
+            budget = max(1, PDB.lineorder.nbytes * frac // 64)
+            for name in ("q1.1", "q2.2", "q3.3", "q4.1"):
+                cq = C.compile_plan(QUERIES[name], "fused")
+                got = cq.execute(PDB, mode="ref", morsel_bytes=budget)
+                assert np.array_equal(np.asarray(got), oracle(name)), \
+                    (name, budget, cq.n_morsels)
+
+
+# ---------------------------------------------------------------------------
+# append-only delta batches
+# ---------------------------------------------------------------------------
+
+
+def _with_deltas(n_batches=2, rows_per=96):
+    pdb = ST.pack_database(DB)
+    rng = np.random.default_rng(5)
+    for _ in range(n_batches):
+        idx = rng.integers(0, DB.lineorder.n_rows, rows_per)
+        rows = {c: np.asarray(DB.lineorder[c])[idx]
+                for c in DB.lineorder.columns}
+        ST.append_rows(pdb.lineorder, rows)
+    return pdb
+
+
+def test_deltas_visible_without_flush():
+    pdb = _with_deltas()
+    assert ST.delta_rows(pdb.lineorder) == 192
+    flushed = dataclasses.replace(
+        pdb, lineorder=ST.flush_deltas(pdb.lineorder))
+    assert ST.delta_rows(flushed.lineorder) == 0
+    assert flushed.lineorder.n_rows == DB.lineorder.n_rows + 192
+    for name in ("q1.1", "q2.1", "q4.2"):
+        for strategy in ("fused", "opat"):
+            want = np.asarray(C.compile_plan(QUERIES[name], strategy)
+                              .execute(flushed, mode="ref"))
+            got = np.asarray(C.compile_plan(QUERIES[name], strategy)
+                             .execute(pdb, mode="ref",
+                                      morsel_bytes=BUDGET))
+            assert np.array_equal(got, want), (name, strategy)
+
+
+def test_delta_morsels_carry_global_offsets():
+    pdb = _with_deltas(n_batches=1, rows_per=64)
+    stream = MS.MorselStream(pdb.lineorder, morsel_bytes=BUDGET)
+    base_n = pdb.lineorder.n_rows
+    kinds = [(m.source, m.offset) for m in stream.morsels()]
+    deltas = [o for k, o in kinds if k == "delta"]
+    assert deltas and deltas[0] == base_n   # spliced after the base rows
+    assert stream.total_rows == base_n + 64
+
+
+def test_append_rows_rejects_mismatched_columns():
+    pdb = ST.pack_database(DB)
+    with pytest.raises(ValueError):
+        ST.append_rows(pdb.lineorder, {"lo_revenue": np.zeros(4, np.int32)})
+
+
+# ---------------------------------------------------------------------------
+# bounded decode memoization
+# ---------------------------------------------------------------------------
+
+
+def test_decode_memo_respects_limit():
+    lo = ST.pack_database(DB).lineorder
+    col = lo.columns["lo_discount"]
+    prev = ST.set_decode_memo_limit(0)      # nothing may pin
+    try:
+        vals = col.decode()
+        assert col._decoded is None         # decoded but not pinned
+        assert np.array_equal(vals, np.asarray(DB.lineorder["lo_discount"]))
+    finally:
+        ST.set_decode_memo_limit(prev)
+    col.decode()
+    assert col._decoded is not None         # small column pins by default
+    col.release()
+    assert col._decoded is None
+
+
+def test_release_drops_device_buffers():
+    lo = ST.pack_database(DB).lineorder
+    col = lo.columns["lo_discount"]
+    col.words_jax()
+    assert col._words_jax is not None
+    lo.release(device=True)
+    assert col._words_jax is None
+
+
+# ---------------------------------------------------------------------------
+# streaming generator
+# ---------------------------------------------------------------------------
+
+
+def test_generate_packed_bit_identical_to_pack_after_generate():
+    ref = ST.pack_database(ssb.generate(0.005, seed=11))
+    got = ssb.generate_packed(0.005, seed=11, chunk_rows=1000)
+    for tname in ("lineorder", "date", "supplier", "customer", "part"):
+        rt, gt = getattr(ref, tname), getattr(got, tname)
+        assert list(rt.columns) == list(gt.columns)
+        for cname in rt.columns:
+            assert rt.encoding(cname) == gt.encoding(cname), (tname, cname)
+            assert np.array_equal(rt.columns[cname].words,
+                                  gt.columns[cname].words), (tname, cname)
+
+
+def test_generate_packed_serves_queries():
+    got_db = ssb.generate_packed(0.005, seed=11)
+    for name in ("q1.1", "q3.2"):
+        got = C.compile_plan(QUERIES[name], "fused").execute(
+            got_db, mode="ref", morsel_bytes=BUDGET)
+        assert np.array_equal(np.asarray(got), oracle(name)), name
+
+
+# ---------------------------------------------------------------------------
+# cost model: the morsel pipeline term
+# ---------------------------------------------------------------------------
+
+
+def test_morsel_pipeline_collapses_to_single_pass_at_one_morsel():
+    hw = CM.PAPER_CPU                       # no interconnect
+    nb = 1e9
+    assert CM.morsel_pipeline_time(nb, 1, hw, 3) == pytest.approx(
+        nb / hw.read_bw + 3 * hw.launch_overhead_s)
+    # with an interconnect, a SINGLE-morsel stream is the resident
+    # in-memory case: no per-scan copy term — the pre-morsel formula
+    # exactly, so solo-vs-sharded arbitration is unperturbed in core
+    hw2 = dataclasses.replace(CM.PAPER_GPU, launch_overhead_s=5e-6)
+    assert CM.morsel_pipeline_time(nb, 1, hw2, 2) == pytest.approx(
+        nb / hw2.read_bw + 2 * 5e-6)
+    # ...while a 2-morsel stream does pay the head copy
+    assert CM.morsel_pipeline_time(nb, 2, hw2, 0) > nb / hw2.read_bw
+
+
+def test_morsel_pipeline_overlap_hides_cheaper_side():
+    hw = dataclasses.replace(CM.PAPER_GPU, launch_overhead_s=0.0)
+    nb, n = 1e9, 10
+    t = CM.morsel_pipeline_time(nb, n, hw, 0)
+    per_copy = nb / hw.interconnect_bw / n
+    per_comp = nb / hw.read_bw / n
+    # PCIe is the bottleneck: compute hides behind the copies entirely
+    assert t == pytest.approx(per_copy + (n - 1) * per_copy + per_comp)
+    assert t < nb / hw.interconnect_bw + nb / hw.read_bw  # overlap won
+
+
+def test_predictions_unchanged_at_default_budget():
+    # the in-memory regime (one morsel) must price exactly as before the
+    # refactor: streaming must not perturb auto's established rankings
+    for name in ("q1.1", "q2.1", "q4.3"):
+        a = M.predict(QUERIES[name], PDB)
+        b = M.predict(QUERIES[name], PDB,
+                      morsel_bytes=MS.DEFAULT_MORSEL_BYTES)
+        for k in a:
+            assert a[k] == pytest.approx(b[k]), (name, k)
+
+
+def test_model_prices_morsel_count():
+    # a tiny budget means many launches: every strategy must cost more
+    # than the in-memory pass on launch-overhead hardware
+    plan = QUERIES["q2.1"]
+    hw = dataclasses.replace(M.HOST, launch_overhead_s=1e-4)
+    base = M.predict(plan, PDB, hw)
+    tiny = M.predict(plan, PDB, hw, morsel_bytes=BUDGET)
+    for k in base:
+        assert tiny[k] > base[k], k
+    # choose() still returns a valid strategy under any budget
+    cq = M.choose(plan, PDB, morsel_bytes=BUDGET)
+    assert cq.strategy in ("fused", "opat", "part", "part_loop", "sharded")
+
+
+# ---------------------------------------------------------------------------
+# server accounting
+# ---------------------------------------------------------------------------
+
+
+def test_server_reports_out_of_core_accounting():
+    server = QueryServer(PDB, mode="ref", morsel_bytes=BUDGET)
+    rids = {n: server.submit(p, strategy="fused")
+            for n, p in QUERIES.items()}
+    results = server.run()
+    for name, rid in rids.items():
+        r = results[rid]
+        assert r.error is None, (name, r.error)
+        assert r.n_morsels > 1, name
+        assert r.peak_resident_bytes <= 2 * BUDGET + 4 * 1024
+        assert np.array_equal(np.asarray(r.result), oracle(name)), name
+
+
+def test_server_shared_wave_reports_stream():
+    server = QueryServer(PDB, mode="ref", max_batch=16,
+                         morsel_bytes=BUDGET)
+    rids = {n: server.submit(p, strategy="shared")
+            for n, p in QUERIES.items()}
+    results = server.run()
+    for name, rid in rids.items():
+        r = results[rid]
+        assert r.error is None, (name, r.error)
+        assert r.shared_wave_size == len(QUERIES)
+        assert r.n_morsels > 1, name
+        assert np.array_equal(np.asarray(r.result), oracle(name)), name

@@ -175,9 +175,10 @@ def test_execute_shared_sharded_matches_execute_shared():
     cache = HT.HashTableCache()
     base = C.execute_shared(plans, DB, mode="ref", cache=cache)
     sdb = SH.shard_database(DB, 4)
-    got, times = C.execute_shared_sharded(plans, sdb, mode="ref",
-                                          cache=cache)
+    got, times, report = C.execute_shared_sharded(plans, sdb, mode="ref",
+                                                  cache=cache)
     assert len(times) == 4
+    assert report.n_morsels >= 4            # one stream per shard
     for b, g, plan in zip(base, got, plans):
         assert np.array_equal(b, g), plan.name
 
