@@ -114,8 +114,8 @@ def fig8_partitioned_join(n_fact: int = 1 << 21):
             warmup, iters = 1, 2
             C.reset_launch_stats()
             measured[strat] = timeit(
-                lambda cq=cq, cache=cache: cq.execute(db, mode="ref",
-                                                      cache=cache),
+                lambda cq=cq, cache=cache, db=db: cq.execute(
+                    db, mode="ref", cache=cache),
                 warmup=warmup, iters=iters)
             launches[strat] = {k: v // (warmup + iters)
                                for k, v in C.LAUNCH_STATS.items()}
@@ -290,9 +290,11 @@ def fig17_fusion(sf: float = 0.05):
     for name, plan in qs.items():
         fused = compile_plan(plan, "fused")
         opat = compile_plan(plan, "opat")
-        us_f = timeit(lambda: fused.execute(db, mode="ref", cache=cache),
+        us_f = timeit(lambda f=fused: f.execute(db, mode="ref",
+                                                cache=cache),
                       warmup=1, iters=3)
-        us_o = timeit(lambda: opat.execute(db, mode="ref", cache=cache),
+        us_o = timeit(lambda o=opat: o.execute(db, mode="ref",
+                                               cache=cache),
                       warmup=1, iters=3)
         hw = M.PAPER_GPU
         base = ssb_model_time(name, db, hw)
@@ -327,7 +329,7 @@ def shared_throughput(sf: float = 0.02):
     for conc in (1, 2, 4, 8, 16):
         batch = [qs[names[i % len(names)]] for i in range(conc)]
 
-        def run_wave(strategy):
+        def run_wave(strategy, batch=batch):
             server = QueryServer(db, mode="ref", max_batch=max_batch)
             iters, warmup = 3, 1
             for it in range(warmup + iters):
@@ -416,12 +418,10 @@ def compression(sf: float = 0.1):
     for name, plan in qs.items():
         cq_plain = compile_plan(plan, "fused")
         cq_packed = compile_plan(plan, "fused")
-        us_plain = timeit(lambda: cq_plain.execute(db, mode="ref",
-                                                   cache=cache_plain),
-                          warmup=1, iters=3)
-        us_packed = timeit(lambda: cq_packed.execute(pdb, mode="ref",
-                                                     cache=cache_packed),
-                          warmup=1, iters=3)
+        us_plain = timeit(lambda cq=cq_plain: cq.execute(
+            db, mode="ref", cache=cache_plain), warmup=1, iters=3)
+        us_packed = timeit(lambda cq=cq_packed: cq.execute(
+            pdb, mode="ref", cache=cache_packed), warmup=1, iters=3)
         out_plain = cq_plain.execute(db, mode="ref", cache=cache_plain)
         out_packed = cq_packed.execute(pdb, mode="ref", cache=cache_packed)
         identical = bool(np.array_equal(out_plain, out_packed))
@@ -556,9 +556,11 @@ def scaleup(sfs=None):
         per_q, total_bytes = {}, 0
         for name, plan in qs.items():
             cq = compile_plan(plan, "fused")
-            us = timeit(lambda cq=cq: cq.execute(
-                pdb, mode="ref", cache=cache, morsel_bytes=budget),
-                warmup=1, iters=2)
+            us = timeit(lambda cq=cq, pdb=pdb, cache=cache,
+                        budget=budget: cq.execute(
+                            pdb, mode="ref", cache=cache,
+                            morsel_bytes=budget),
+                        warmup=1, iters=2)
             out = cq.execute(pdb, mode="ref", cache=cache,
                              morsel_bytes=budget)
             assert cq.n_morsels > 1, \
@@ -580,12 +582,12 @@ def scaleup(sfs=None):
         server = QueryServer(pdb, mode="ref", max_batch=16,
                              morsel_bytes=budget)
 
-        def run_wave():
+        def run_wave(server=server):
             for p in qs.values():
                 server.submit(p, strategy="shared")
             return server.run()
 
-        wave_us = timeit(lambda: np.zeros(1) if run_wave() else None,
+        wave_us = timeit(lambda rw=run_wave: np.zeros(1) if rw() else None,
                          warmup=1, iters=2)
         wres = run_wave()
         assert all(r.error is None for r in wres.values())
@@ -621,6 +623,94 @@ def scaleup(sfs=None):
                     "wave_peak_resident_bytes": wave_peak})
 
 
+def chaos(sf: float = 0.01, rates=(0.0, 0.05, 0.2), seed: int = 123):
+    """Chaos harness: the 13 SSB queries replayed under a seeded
+    deterministic fault plan (``repro.sql.faults``) at increasing fault
+    rates on the kernel-dispatch, morsel-upload and hash-build sites.
+
+    The contract asserted per request, before anything is emitted:
+    every request TERMINATES (no hang, no unhandled escape); every
+    survivor is BIT-identical to the numpy oracle (a faulted neighbor
+    or a mid-stream fault must not contaminate a later answer); every
+    casualty carries a TYPED error (taxonomy kind + attempt count), or
+    was shed at admission with a typed ``MemoryPressure``.  The fused
+    ladder (fused -> opat -> ref) plus the resource governor do the
+    surviving: injected OOMs shrink the morsel budget and evict caches
+    instead of killing the request.
+
+    Per-rate rows report availability (survivors / submitted), mean and
+    p99 latency, and the server's resilience counters (retries, breaker
+    skips, pressure events, sheds).  The fault schedule is counter-based
+    on ``seed``, so a re-run replays the same faults."""
+    from repro.sql import faults
+    from repro.sql import resilience as RS
+    from repro.sql import storage as ST
+    from repro.sql.server import QueryServer
+    db = ssb.generate(sf=sf, seed=7)
+    pdb = ST.pack_database(db)
+    qs = engine.ssb_queries()
+    want = {name: np.asarray(engine.run_query_oracle(db, p))
+            for name, p in qs.items()}
+    # an eighth of the packed fact table: every query streams >1 morsel,
+    # so the upload fault site actually fires
+    budget = max(1 << 16, pdb.lineorder.nbytes // 8)
+    known_kinds = {"PlanError", "CompileError", "ExecError",
+                   "DeadlineExceeded", "MemoryPressure", "FaultInjected",
+                   "InjectedOOM"}
+    for rate in rates:
+        plan = faults.FaultPlan(
+            seed, {"kernel": rate, "upload": rate, "build": rate})
+        srv = QueryServer(pdb, mode="ref", morsel_bytes=budget)
+        lat_us, ok, typed_err, shed = {}, 0, 0, 0
+        with faults.active(plan):
+            for name, p in qs.items():
+                t0 = time.perf_counter()
+                try:
+                    rid = srv.submit(p, strategy="fused")
+                except RS.MemoryPressure:
+                    lat_us[name] = (time.perf_counter() - t0) * 1e6
+                    shed += 1           # typed admission shed: terminated
+                    continue
+                r = srv.run()[rid]
+                lat_us[name] = (time.perf_counter() - t0) * 1e6
+                if r.error is None:
+                    assert np.array_equal(np.asarray(r.result),
+                                          want[name]), \
+                        f"{name}: survivor diverged at rate {rate}"
+                    ok += 1
+                else:
+                    assert r.error.error_kind in known_kinds, \
+                        f"{name}: untyped error {r.error!r}"
+                    assert r.attempts >= 1
+                    typed_err += 1
+        assert ok + typed_err + shed == len(qs)     # all terminated
+        if rate == 0.0:
+            assert ok == len(qs), "fault-free run must be 100% available"
+        lats = sorted(lat_us.values())
+        p99 = lats[min(len(lats) - 1, int(np.ceil(0.99 * len(lats))) - 1)]
+        avail = ok / len(qs)
+        inj = plan.stats()["faults"]
+        emit(f"chaos.rate{rate:g}", float(np.mean(lats)),
+             f"availability={avail:.2f};ok={ok};typed_errors={typed_err};"
+             f"shed={shed};p99_us={p99:.0f};"
+             f"injected={sum(inj.values())};"
+             f"retries={srv.stats.get('retries', 0)};"
+             f"breaker_skips={srv.stats.get('breaker_skips', 0)};"
+             f"pressure_events={srv.stats.get('pressure_events', 0)};"
+             f"all_terminated=True",
+             extra={
+                 "sf": sf, "seed": seed, "fault_rate": rate,
+                 "availability": avail, "ok": ok,
+                 "typed_errors": typed_err, "shed": shed,
+                 "p99_us": p99, "mean_us": float(np.mean(lats)),
+                 "injected_faults": dict(inj),
+                 "fault_visits": dict(plan.stats()["visits"]),
+                 "server_stats": {k: v for k, v in srv.stats.items()
+                                  if isinstance(v, (int, float))},
+                 "morsel_budget": budget,
+             })
+
+
 def table3_cost():
     """Table 3: cost effectiveness (renting)."""
     cpu_hr, gpu_hr = 0.504, 3.06
@@ -645,6 +735,7 @@ ALL = {
     "compression": compression,
     "scaleout": scaleout,
     "scaleup": scaleup,
+    "chaos": chaos,
     "table3": table3_cost,
 }
 
@@ -680,7 +771,8 @@ def main() -> None:
         try:
             json_out = argv[i + 1]
         except IndexError:
-            raise SystemExit("--json requires an output directory")
+            raise SystemExit(
+                "--json requires an output directory") from None
         del argv[i:i + 2]
     which = argv or list(ALL)
     unknown = [w for w in which if w not in ALL]

@@ -164,7 +164,7 @@ def forward(params: Params, cfg: ModelConfig, tokens: jax.Array,
         for attn_first, s0, s1 in _segments(cfg):
             if attn_first:
                 h = _shared_attn_apply(shared, cfg, h, positions)
-            sub = jax.tree.map(lambda x: x[s0:s1], params["layers"])
+            sub = jax.tree.map(lambda x, s0=s0, s1=s1: x[s0:s1], params["layers"])
             h, _ = jax.lax.scan(fn, h, sub)
     else:
         def body(h, lp):
@@ -248,7 +248,7 @@ def prefill(params: Params, cfg: ModelConfig, tokens: jax.Array,
                               L.rms_norm(h, shared["ffn_norm"], cfg.norm_eps))
                 attn_ks.append(ck)
                 attn_vs.append(cv)
-            sub = jax.tree.map(lambda x: x[s0:s1], params["layers"])
+            sub = jax.tree.map(lambda x, s0=s0, s1=s1: x[s0:s1], params["layers"])
             h, st = jax.lax.scan(body, h, sub)
             seg_states.append(st)
         states = jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=0),
@@ -318,8 +318,8 @@ def decode_step(params: Params, cfg: ModelConfig, cache: Params,
                 attn_ks.append(ck)
                 attn_vs.append(cv)
                 slot += 1
-            sub_p = jax.tree.map(lambda x: x[s0:s1], params["layers"])
-            sub_s = jax.tree.map(lambda x: x[s0:s1], sts)
+            sub_p = jax.tree.map(lambda x, s0=s0, s1=s1: x[s0:s1], params["layers"])
+            sub_s = jax.tree.map(lambda x, s0=s0, s1=s1: x[s0:s1], sts)
             h, st_new = jax.lax.scan(body, h, (sub_p, sub_s))
             seg_states.append(st_new)
         new_cache: Params = jax.tree.map(

@@ -34,6 +34,7 @@ from __future__ import annotations
 
 import dataclasses
 import json
+import logging
 import os
 import time
 from dataclasses import dataclass
@@ -187,6 +188,12 @@ def save(calib: Calibration) -> str:
 
 
 def load_cached(backend: Optional[str] = None) -> Optional[Calibration]:
+    """Load the per-backend calibration, or None when there is none.
+
+    A corrupted or truncated cache file (torn write, wrong schema, junk
+    bytes) must never poison the process: it is detected, logged,
+    *removed from disk*, and reported as no-cache — so the caller simply
+    re-measures and writes a fresh file."""
     path = cache_path(backend)
     if path in _MEMO:
         return _MEMO[path]
@@ -195,8 +202,19 @@ def load_cached(backend: Optional[str] = None) -> Optional[Calibration]:
         try:
             with open(path) as f:
                 calib = Calibration.from_json(json.load(f))
-        except (ValueError, TypeError, OSError):
-            calib = None                # corrupt cache == no cache
+        except (ValueError, TypeError, KeyError, AttributeError,
+                OSError) as e:
+            # ValueError covers JSONDecodeError (truncated/garbled
+            # files); TypeError missing required fields; AttributeError
+            # valid-JSON-wrong-shape (e.g. a bare number)
+            logging.getLogger(__name__).warning(
+                "discarding corrupt calibration cache %s (%s: %s); "
+                "will re-measure", path, type(e).__name__, e)
+            calib = None
+            try:
+                os.remove(path)         # torn file must not shadow a
+            except OSError:             # future good write
+                pass
     _MEMO[path] = calib
     return calib
 

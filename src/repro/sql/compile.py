@@ -88,6 +88,7 @@ from jax.sharding import PartitionSpec
 
 from repro.kernels import ops
 from repro.kernels.common import DEFAULT_TILE
+from repro.sql import faults as FLT
 from repro.sql import hashtable as HT
 from repro.sql import morsel as MS
 from repro.sql import plan as P
@@ -265,6 +266,7 @@ def _execute_fused(plan: P.Plan, db: ssb.Database, mode: str, tile: int,
     mults = jnp.asarray(np.array([j.mult for j in joins], np.int32))
     proj = plan.project
     m1, m2, m_widths, m_refs = _measure_streams(fact, proj)
+    FLT.maybe_fault("kernel")
     out = ops.spja(pred_cols, pred_bounds, join_keys, join_tables, mults,
                    m1, m2, measure_op=proj.op, n_groups=plan.n_groups,
                    mode=mode, tile=tile, pred_widths=pred_widths,
@@ -496,6 +498,7 @@ def _execute_fused_map(plan: P.Plan, sdb, mode: str, tile: int,
         if wi + 1 < len(windows):
             resident += wbytes(*windows[wi + 1])
         report.observe(resident)
+        FLT.maybe_fault("kernel")
         inflight.append(mapped(sharded, repl))   # async dispatch
         if len(inflight) == 2:       # bound: at most two windows resident
             partials.append(np.asarray(inflight.pop(0)))
@@ -737,6 +740,7 @@ def execute_shared_morsels(plans: List[P.Plan], db: ssb.Database,
             plans, db, cache=None, pad_to=pad_to, prebuilt=tables,
             fact=m.table)
         LAUNCH_STATS["probe"] += 1      # one whole-wave launch per morsel
+        FLT.maybe_fault("kernel")
         return np.asarray(ops.multi_spja(*args, n_groups=n_groups,
                                          mode=mode, tile=tile, **kwargs))
 
@@ -826,6 +830,7 @@ def _probe_whole(node: P.HashJoin, fact, db, rowids, group, mode, tile,
                 else HT.build_dim_table(db, node))
     keys = ST.take(fact, node.fact_col, rowids)
     LAUNCH_STATS["probe"] += 1
+    FLT.maybe_fault("kernel")
     payload, sel, cnt = _probe_join_jit(
         keys, jnp.arange(rowids.shape[0], dtype=jnp.int32),
         htk, htv, mode=mode, tile=tile)

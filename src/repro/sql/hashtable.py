@@ -91,6 +91,8 @@ def build_dim_table(db: ssb.Database, join: P.HashJoin
                     ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Build the (filtered) hash table for one join's dim side.
     Probe miss == row filtered (selective-join pipelining)."""
+    from repro.sql import faults
+    faults.maybe_fault("build")
     keys, vals = filtered_build_side(db, join)
     n_slots = next_pow2(max(len(keys), 1))
     htk, htv = np_build(keys, vals, n_slots)
@@ -242,6 +244,10 @@ class HashTableCache:
     tables: Dict[Tuple, object] = field(default_factory=dict)
     hits: int = 0
     misses: int = 0
+    # recency bookkeeping for ResourceGovernor.evict_cold(): every cache
+    # access stamps its key with a monotonically increasing tick
+    _tick: int = 0
+    _last_used: Dict[Tuple, int] = field(default_factory=dict, repr=False)
     _db: object = None
     _dims: Set[str] = field(default_factory=set)
     _db_fp: Optional[Tuple] = None      # (dims scope, fingerprint) memo
@@ -274,9 +280,29 @@ class HashTableCache:
         """Drop all entries and the database binding (data reload)."""
         self.tables.clear()
         self._dims.clear()
+        self._last_used.clear()
         self._db = None
         self._db_fp = None
         self._accepted.clear()
+
+    def _touch(self, key: Tuple) -> None:
+        self._tick += 1
+        self._last_used[key] = self._tick
+
+    def evict_cold(self, keep: int = 2) -> int:
+        """Drop every entry except the ``keep`` most recently used —
+        the ResourceGovernor's memory-pressure reaction.  Entries keep
+        their logical identity, so a later request simply rebuilds
+        (a miss, not an error).  Returns the eviction count."""
+        if len(self.tables) <= keep:
+            return 0
+        by_recency = sorted(self.tables,
+                            key=lambda k: self._last_used.get(k, 0))
+        victims = by_recency[:len(by_recency) - keep]
+        for k in victims:
+            self.tables.pop(k, None)
+            self._last_used.pop(k, None)
+        return len(victims)
 
     def get_or_build(self, db: ssb.Database, join: P.HashJoin
                      ) -> Tuple[jnp.ndarray, jnp.ndarray]:
@@ -285,12 +311,14 @@ class HashTableCache:
         hit = self.tables.get(key)
         if hit is not None:
             self.hits += 1
+            self._touch(key)
             return hit
         self.misses += 1
         built = build_dim_table(db, join)
         if _cacheable(key):
             self.tables[key] = built
             self._dims.add(join.dim)
+            self._touch(key)
         return built
 
     def get_build_count(self, db: ssb.Database, join: P.HashJoin) -> int:
@@ -303,11 +331,13 @@ class HashTableCache:
         key = ("n_build", join_cache_key(join))
         hit = self.tables.get(key)
         if hit is not None:
+            self._touch(key)
             return hit
         n = len(filtered_build_side(db, join)[0])
         if _cacheable(key):
             self.tables[key] = n
             self._dims.add(join.dim)
+            self._touch(key)
         return n
 
     def get_or_build_parts(self, db: ssb.Database, join: P.HashJoin,
@@ -322,12 +352,14 @@ class HashTableCache:
         hit = self.tables.get(key)
         if hit is not None:
             self.hits += 1
+            self._touch(key)
             return hit
         self.misses += 1
         built = build_dim_partitions(db, join, bits, packed=packed)
         if _cacheable(key):
             self.tables[key] = built
             self._dims.add(join.dim)
+            self._touch(key)
         return built
 
     def get_or_build_replicated(self, db, join: P.HashJoin, mesh
@@ -345,6 +377,7 @@ class HashTableCache:
         hit = self.tables.get(key)
         if hit is not None:
             self.hits += 1
+            self._touch(key)
             return hit
         htk, htv = self.get_or_build(db, join)
         sh = NamedSharding(mesh, PartitionSpec())
@@ -352,6 +385,7 @@ class HashTableCache:
         if _cacheable(key):
             self.tables[key] = built
             self._dims.add(join.dim)
+            self._touch(key)
         return built
 
     @property

@@ -417,8 +417,8 @@ def predict_shared(plans, db: ssb.Database,
     for plan in plans:
         try:
             k = shared_member_key(plan)
-        except Exception:               # noqa: BLE001 — no dedup then
-            k = id(plan)
+        except (ValueError, TypeError, KeyError, AttributeError):
+            k = id(plan)                # unfingerprintable: no dedup
         if k not in seen:
             seen.add(k)
             uniq.append(plan)

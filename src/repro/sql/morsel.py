@@ -224,14 +224,22 @@ class MorselStream:
         i = 0
         while cur is not None:
             nxt = next(it, None)
-            if nxt is not None:
-                self._prefetch(nxt)
-            if report is not None:
-                resident = self.morsel_nbytes(i)
+            try:
                 if nxt is not None:
-                    resident += self.morsel_nbytes(i + 1)
-                report.observe(resident)
-            results.append(compute(cur))
+                    self._prefetch(nxt)
+                if report is not None:
+                    resident = self.morsel_nbytes(i)
+                    if nxt is not None:
+                        resident += self.morsel_nbytes(i + 1)
+                    report.observe(resident)
+                results.append(compute(cur))
+            except Exception:
+                # exception-safe teardown: a fault at morsel k must not
+                # leave either in-flight double buffer device-resident
+                self._release(cur, keep=None)
+                if nxt is not None:
+                    self._release(nxt, keep=None)
+                raise
             self._release(cur, keep=nxt)
             cur, i = nxt, i + 1
         return results
@@ -240,6 +248,8 @@ class MorselStream:
         """Issue the async host→device copy of the next morsel's scanned
         columns (jax transfers are asynchronous: ``device_put`` returns
         immediately and overlaps with the in-flight compute)."""
+        from repro.sql import faults
+        faults.maybe_fault("upload")
         table = m.table
         names = (self.cols if self.cols is not None
                  else list(table.columns))

@@ -63,19 +63,38 @@ production traffic.
 tallies (``stats[ran] += 1``) must never ``KeyError`` on a strategy the
 fixed seed dict didn't anticipate — that poisoned the request before
 the fix.
+
+Resilience (``repro.sql.resilience``): every request terminates with a
+result or a *typed* error.  Failures classify into the ``QueryError``
+taxonomy and surface as a structured :class:`~.resilience.ErrorInfo` on
+``QueryResult.error`` (kind, message, strategy attempted, attempt count;
+the original traceback rides on ``exception.__cause__``).  A request may
+carry a ``deadline_s`` budget: on a retryable fault the server walks the
+degradation ladder (e.g. ``sharded → fused → opat → ref``) with capped
+exponential backoff, skipping rungs the cost model predicts will not fit
+the remaining budget, and returns ``DeadlineExceeded`` when the budget
+runs out.  A per-(strategy, backend) circuit breaker opens after K
+consecutive failures (half-open probe after a cooldown), a faulted
+shared-wave member — or a faulted whole wave — re-enters the ladder solo
+instead of dying, and a ``ResourceGovernor`` reacts to memory pressure
+by shrinking ``morsel_bytes``, evicting soft caches, and (past a
+high-water mark) shedding new admissions with a typed
+``MemoryPressure``.
 """
 from __future__ import annotations
 
 import time
 from collections import defaultdict
 from dataclasses import dataclass
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Tuple, Union
 
 import numpy as np
 
 from repro.kernels.common import DEFAULT_TILE
 from repro.sql import compile as C
+from repro.sql import resilience as RS
 from repro.sql import ssb
+from repro.sql import storage as ST
 from repro.sql.compile import compile_plan, shareability
 from repro.sql.hashtable import HashTableCache
 from repro.sql.plan import Plan
@@ -86,6 +105,7 @@ class QueryRequest:
     rid: int
     plan: Plan
     strategy: str = "fused"
+    deadline_s: Optional[float] = None  # wall-clock budget; None = no bound
 
 
 @dataclass
@@ -98,7 +118,11 @@ class QueryResult:
     latency_s: float
     cache_hits: int                     # dim-table builds skipped
     cache_misses: int                   # dim-table builds performed
-    error: Optional[str] = None         # failed request: message, result=None
+    error: Optional[Union[str, RS.ErrorInfo]] = None  # failed request:
+    #   structured ErrorInfo (error_kind / message / strategy attempted /
+    #   attempt count, original traceback on exception.__cause__);
+    #   stringifies as "Kind: message" and supports substring `in`
+    attempts: int = 1                   # ladder rungs tried (1 = first try)
     model_choice: Optional[str] = None  # auto requests: model's pick
     predicted_s: Optional[float] = None  # model's time for the strategy run
     predictions: Optional[Dict[str, float]] = None  # full per-strategy model
@@ -143,7 +167,10 @@ class QueryServer:
     def __init__(self, db: ssb.Database, mode: str = "ref",
                  tile: int = DEFAULT_TILE, max_batch: int = 8,
                  acc_budget_bytes: int = DEFAULT_ACC_BUDGET,
-                 morsel_bytes: int = C.MS.DEFAULT_MORSEL_BYTES):
+                 morsel_bytes: int = C.MS.DEFAULT_MORSEL_BYTES,
+                 resident_budget_bytes: Optional[int] = None,
+                 breaker_threshold: int = 3,
+                 breaker_cooldown_s: float = 1.0):
         self.db = db
         self.mode = mode
         self.tile = tile
@@ -152,8 +179,12 @@ class QueryServer:
         # per-morsel byte budget every execution streams under; the
         # default keeps test-scale databases single-morsel (in-memory
         # fast path), a smaller budget bounds device residency at
-        # 2 x morsel_bytes regardless of fact-table size
-        self.morsel_bytes = morsel_bytes
+        # 2 x morsel_bytes regardless of fact-table size.  The governor
+        # owns the live value: memory pressure halves it (LANE floor)
+        self.governor = RS.ResourceGovernor(
+            morsel_bytes, budget_bytes=resident_budget_bytes)
+        self.breakers = RS.BreakerBoard(threshold=breaker_threshold,
+                                        cooldown_s=breaker_cooldown_s)
         self.cache = HashTableCache()
         self.queue: List[QueryRequest] = []
         self._next_rid = 0
@@ -162,10 +193,27 @@ class QueryServer:
         self.stats = defaultdict(int)
         self.stats["occupancy"] = []
 
-    def submit(self, plan: Plan, strategy: str = "fused") -> int:
+    @property
+    def morsel_bytes(self) -> int:
+        return self.governor.morsel_bytes
+
+    @morsel_bytes.setter
+    def morsel_bytes(self, v: int) -> None:
+        self.governor.morsel_bytes = int(v)
+
+    def submit(self, plan: Plan, strategy: str = "fused",
+               deadline_s: Optional[float] = None) -> int:
+        """Enqueue one request.  Past the governor's high-water mark the
+        server sheds load HERE — a typed :class:`~.resilience.
+        MemoryPressure` at the door instead of a mid-query failure."""
+        try:
+            self.governor.admit()       # raises MemoryPressure when shedding
+        except RS.MemoryPressure:
+            self.stats["sheds"] += 1
+            raise
         rid = self._next_rid
         self._next_rid += 1
-        self.queue.append(QueryRequest(rid, plan, strategy))
+        self.queue.append(QueryRequest(rid, plan, strategy, deadline_s))
         return rid
 
     def _wave_key(self, req: QueryRequest) -> Tuple:
@@ -177,7 +225,8 @@ class QueryServer:
         if req.strategy in ("shared", "auto"):
             try:
                 shareable = shareability(req.plan) is None
-            except Exception:               # noqa: BLE001 — malformed plan
+            except (ValueError, TypeError, KeyError, AttributeError):
+                # malformed plan: route solo, _execute reports it typed
                 shareable = False
             if shareable:
                 return ("scan", req.plan.scan.table, req.strategy)
@@ -189,7 +238,8 @@ class QueryServer:
         key (no dedup) when the plan cannot be fingerprinted."""
         try:
             return C.shared_member_key(req.plan)
-        except Exception:               # noqa: BLE001 — malformed plan
+        except (ValueError, TypeError, KeyError, AttributeError):
+            # unfingerprintable plan: no dedup, keep its own wave slot
             return ("rid", req.rid)
 
     def _chunk_scan_bucket(self, rs: List[QueryRequest]
@@ -298,7 +348,7 @@ class QueryServer:
                     sharded = (sharded and
                                preds.get("shared_sharded",
                                          float("inf")) < preds["shared"])
-                except Exception:           # noqa: BLE001 — model failure
+                except Exception:           # model failure, not fatal
                     run_shared = False      # falls back to solo execution
                     # observable: a broken shared-cost model must not be
                     # indistinguishable from "sharing does not pay"
@@ -315,7 +365,10 @@ class QueryServer:
         fault isolation: a member whose join build sides fail to
         construct (the per-member failure surface — predicate/measure
         validation already passed at bucketing time) is excluded and
-        reported errored; the survivors still share one pass.
+        re-enters the degradation ladder solo; the survivors still share
+        one pass.  A fault inside the shared pass itself sends every
+        survivor back through the ladder solo too — one poisoned launch
+        must not kill a whole wave.
 
         ``sharded=True`` runs the wave once per fact shard and merges
         the stacked partial grids (``compile.execute_shared_sharded``);
@@ -336,18 +389,13 @@ class QueryServer:
                 for j in req.plan.joins:
                     built = self.cache.get_or_build(self.db, j)
                     prebuilt[C.shared_join_key(j)] = built
-            except Exception as e:          # noqa: BLE001 — isolate member
-                self.stats["queries"] += 1
-                self.stats["errors"] += 1
-                if req.strategy == "auto":
-                    self.stats["auto"] += 1
-                out[req.rid] = QueryResult(
-                    rid=req.rid, name=req.plan.name, result=None,
-                    strategy="shared", fallback_reason=None,
-                    latency_s=time.perf_counter() - t0,
-                    cache_hits=self.cache.hits - h0,
-                    cache_misses=self.cache.misses - m0,
-                    error=f"{type(e).__name__}: {e}")
+            except Exception:       # build fault: member leaves the wave
+                # ...and re-enters the ladder SOLO: a transient build
+                # fault degrades this member (the survivors still share
+                # one pass), a plan-contract violation surfaces as a
+                # typed non-retryable error from its solo run
+                self.stats["member_reentries"] += 1
+                out[req.rid] = self._execute(req)
                 continue
             deltas[req.rid] = (self.cache.hits - h0,
                                self.cache.misses - m0)
@@ -376,7 +424,7 @@ class QueryServer:
             fact = getattr(self.db, uniq_reqs[0].plan.scan.table)
             bytes_enc, bytes_plain = M.scanned_bytes_shared(
                 [r.plan for r in uniq_reqs], fact)
-        except Exception:                   # noqa: BLE001 — reporting only
+        except Exception:                   # reporting only, never fatal
             bytes_enc = bytes_plain = None
 
         flavor = "shared_sharded" if sharded else "shared"
@@ -425,11 +473,16 @@ class QueryServer:
                     [r.plan for r in uniq_reqs], self.db, mode=self.mode,
                     tile=self.tile, cache=self.cache, pad_to=pad_to,
                     prebuilt=prebuilt, morsel_bytes=self.morsel_bytes)
-        except Exception as e:              # noqa: BLE001 — isolate wave
-            dt = time.perf_counter() - t0
-            msg = f"{type(e).__name__}: {e}"
+        except Exception as e:          # wave fault: members retry solo
+            err = RS.classify_error(e, during="execute")
+            if isinstance(err, RS.MemoryPressure):
+                self.governor.on_pressure(db=self.db, cache=self.cache)
+            # the shared pass is one launch — a fault inside it says
+            # nothing about which member is poisoned, so every survivor
+            # re-enters the degradation ladder solo
+            self.stats["wave_reentries"] += 1
             for req in survivors:
-                out[req.rid] = member_result(req, None, msg, dt)
+                out[req.rid] = self._execute(req)
             return out
         dt = time.perf_counter() - t0
         self.stats["shared_waves"] += 1
@@ -448,13 +501,47 @@ class QueryServer:
     # solo path
     # ------------------------------------------------------------------
 
+    def _oracle_ok(self, plan: Plan) -> bool:
+        """Whether the ``ref`` rung (pure-numpy oracle) can interpret
+        this plan — aggregate SPJA plans only."""
+        return plan.project is not None and plan.group is not None
+
+    def _run_ref(self, plan: Plan) -> np.ndarray:
+        """The ladder's rung of last resort: the host-side numpy oracle
+        — no kernel dispatch, no device upload, no hash-table build.
+        Pending ingest deltas are folded into a throwaway flushed copy
+        so the oracle observes the same rows every engine path scans."""
+        from dataclasses import replace as dc_replace
+
+        from repro.sql import engine as E
+        from repro.sql import shard as SH
+        base = SH.base_of(self.db)
+        fact = getattr(base, plan.scan.table)
+        if ST.delta_rows(fact):
+            base = dc_replace(base,
+                              **{plan.scan.table: ST.flush_deltas(fact)})
+        return np.asarray(E.run_query_oracle(base, plan))
+
     def _execute(self, req: QueryRequest) -> QueryResult:
-        """One request, fault-isolated: a bad plan yields an errored
-        QueryResult instead of poisoning the rest of the batch."""
+        """One request through the retry/degradation ladder.
+
+        Fault-isolated AND deadline-bounded: a non-retryable failure
+        (bad plan, compile error) surfaces immediately as a typed
+        :class:`~.resilience.ErrorInfo`; a retryable one (exec fault,
+        memory pressure) walks the strategy ladder —
+        ``resilience.ladder_for(req.strategy)`` — with capped
+        exponential backoff, skipping rungs whose circuit breaker is
+        open or whose cost-model prediction exceeds the remaining
+        deadline budget.  Memory pressure additionally triggers the
+        governor (smaller morsels, cache eviction) and retries the same
+        rung once before degrading.  Every path terminates: success,
+        typed error, or ``DeadlineExceeded``."""
         h0, m0 = self.cache.hits, self.cache.misses
         t0 = time.perf_counter()
+        deadline = RS.Deadline(req.deadline_s)
+        attempts = 0
 
-        def errored(strategy, fallback_reason, exc):
+        def errored(err: RS.QueryError, strategy, fallback_reason=None):
             self.stats["queries"] += 1
             self.stats["errors"] += 1
             if req.strategy == "auto":
@@ -467,45 +554,136 @@ class QueryServer:
                 latency_s=time.perf_counter() - t0,
                 cache_hits=self.cache.hits - h0,
                 cache_misses=self.cache.misses - m0,
-                error=f"{type(exc).__name__}: {exc}")
+                attempts=max(attempts, 1),
+                error=RS.ErrorInfo.from_exception(
+                    err, strategy=strategy, attempts=max(attempts, 1)))
 
-        try:
-            # compilation is validation + a dataclass — cheap per request
-            cq = compile_plan(req.plan, req.strategy)
-        except Exception as e:                  # noqa: BLE001 — isolate
-            return errored(req.strategy, None, e)
-        try:
-            result = cq.execute(self.db, mode=self.mode, tile=self.tile,
-                                cache=self.cache,
-                                morsel_bytes=self.morsel_bytes)
-        except Exception as e:                  # noqa: BLE001 — isolate
-            # auto requests that fail mid-execute report the strategy the
-            # model actually dispatched, not the "auto" placeholder
-            return errored(cq.decided or cq.strategy, cq.fallback_reason, e)
-        dt = time.perf_counter() - t0
-        ran = cq.decided or cq.strategy         # auto: model's pick ran
-        self.stats["queries"] += 1
-        self.stats[ran] += 1
-        if req.strategy == "auto":
-            self.stats["auto"] += 1
-        if cq.fallback_reason is not None:
-            self.stats["fallbacks"] += 1
-        try:
-            from repro.sql import model as M
-            bytes_enc, bytes_plain = M.scanned_bytes(
-                req.plan, getattr(self.db, req.plan.scan.table))
-        except Exception:                   # noqa: BLE001 — reporting only
-            bytes_enc = bytes_plain = None
-        preds = cq.predictions
-        return QueryResult(
-            rid=req.rid, name=req.plan.name, result=result,
-            strategy=ran, fallback_reason=cq.fallback_reason,
-            latency_s=dt, cache_hits=self.cache.hits - h0,
-            cache_misses=self.cache.misses - m0,
-            model_choice=ran if req.strategy == "auto" else None,
-            predicted_s=None if preds is None else preds.get(ran),
-            predictions=preds,
-            bytes_scanned=bytes_enc, bytes_scanned_plain=bytes_plain,
-            device_count=cq.device_count, shard_times_s=cq.shard_times_s,
-            n_morsels=cq.n_morsels,
-            peak_resident_bytes=cq.peak_resident_bytes)
+        def succeeded(result, ran, cq):
+            dt = time.perf_counter() - t0
+            self.stats["queries"] += 1
+            self.stats[ran] += 1
+            if req.strategy == "auto":
+                self.stats["auto"] += 1
+            fallback = None if cq is None else cq.fallback_reason
+            if fallback is not None:
+                self.stats["fallbacks"] += 1
+            self.governor.on_success()
+            try:
+                from repro.sql import model as M
+                bytes_enc, bytes_plain = M.scanned_bytes(
+                    req.plan, getattr(self.db, req.plan.scan.table))
+            except Exception:               # reporting only, never fatal
+                bytes_enc = bytes_plain = None
+            preds = None if cq is None else cq.predictions
+            return QueryResult(
+                rid=req.rid, name=req.plan.name, result=result,
+                strategy=ran, fallback_reason=fallback,
+                latency_s=dt, cache_hits=self.cache.hits - h0,
+                cache_misses=self.cache.misses - m0,
+                attempts=max(attempts, 1),
+                model_choice=ran if req.strategy == "auto" else None,
+                predicted_s=None if preds is None else preds.get(ran),
+                predictions=preds,
+                bytes_scanned=bytes_enc, bytes_scanned_plain=bytes_plain,
+                device_count=None if cq is None else cq.device_count,
+                shard_times_s=None if cq is None else cq.shard_times_s,
+                n_morsels=None if cq is None else cq.n_morsels,
+                peak_resident_bytes=(None if cq is None
+                                     else cq.peak_resident_bytes))
+
+        ladder = RS.ladder_for(req.strategy)
+        predictions: Optional[Dict[str, float]] = None
+        last_err: Optional[RS.QueryError] = None
+        pressure_retried: set = set()
+        rung_i = 0
+        while rung_i < len(ladder):
+            rung = ladder[rung_i]
+            if deadline.expired():
+                break
+            if rung == "ref" and not self._oracle_ok(req.plan):
+                rung_i += 1
+                continue
+            breaker = self.breakers.get(rung, self.mode)
+            if not breaker.allow():     # poisoned path: skip, don't probe
+                self.stats["breaker_skips"] += 1
+                rung_i += 1
+                continue
+            if req.deadline_s is not None and last_err is not None:
+                # budget-aware rung skipping: don't start a strategy the
+                # model already predicts will blow the remaining budget
+                if predictions is None:
+                    from repro.sql import model as M
+                    from repro.sql import shard as SH
+                    try:
+                        predictions = M.predict(
+                            req.plan, self.db,
+                            n_shards=SH.shard_count(self.db),
+                            morsel_bytes=self.morsel_bytes)
+                    except Exception:   # no model, no skipping
+                        predictions = {}
+                if not RS.fit_in_budget(predictions, rung,
+                                        deadline.remaining()):
+                    self.stats["budget_skips"] += 1
+                    rung_i += 1
+                    continue
+            attempts += 1
+            cq = None
+            try:
+                if rung == "ref":
+                    result = self._run_ref(req.plan)
+                    ran = "ref"
+                else:
+                    # compilation is validation + a dataclass — cheap
+                    try:
+                        cq = compile_plan(req.plan, rung)
+                    except Exception as e:
+                        raise RS.classify_error(e, during="compile") \
+                            from e
+                    result = cq.execute(
+                        self.db, mode=self.mode, tile=self.tile,
+                        cache=self.cache,
+                        morsel_bytes=self.morsel_bytes)
+                    # auto requests report the strategy the model
+                    # actually dispatched, not the "auto" placeholder
+                    ran = cq.decided or cq.strategy
+            except Exception as e:
+                err = RS.classify_error(e, during="execute")
+                if err.retryable:
+                    # plan/compile errors say nothing about the rung's
+                    # health — only exec faults trip its breaker
+                    breaker.record_failure()
+                last_err = err
+                if isinstance(err, RS.MemoryPressure):
+                    # react, then retry the SAME rung once at the
+                    # governor's reduced footprint before degrading
+                    self.governor.on_pressure(db=self.db,
+                                              cache=self.cache)
+                    self.stats["pressure_events"] += 1
+                    if err.retryable and rung not in pressure_retried:
+                        pressure_retried.add(rung)
+                        RS.sleep_backoff(attempts - 1, deadline)
+                        continue
+                if not err.retryable:
+                    return errored(err, rung, None if cq is None
+                                   else cq.fallback_reason)
+                self.stats["retries"] += 1
+                RS.sleep_backoff(attempts - 1, deadline)
+                rung_i += 1
+                continue
+            breaker.record_success()
+            return succeeded(result, ran, cq)
+
+        if deadline.expired():
+            err = RS.DeadlineExceeded(
+                f"deadline {req.deadline_s}s exhausted after "
+                f"{attempts} attempt(s), last rung "
+                f"{ladder[min(rung_i, len(ladder) - 1)]!r}")
+            if last_err is not None:
+                err.__cause__ = last_err
+            return errored(err, req.strategy)
+        # ladder exhausted without success: surface the last typed error
+        if last_err is None:
+            last_err = RS.ExecError(
+                f"no runnable rung in ladder {ladder} "
+                "(circuit breakers open or rungs inapplicable)")
+        return errored(last_err, req.strategy)

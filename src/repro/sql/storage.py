@@ -466,9 +466,15 @@ def append_rows(table, rows: Dict[str, np.ndarray]):
     if len(lens) != 1:
         raise ValueError(f"ragged delta batch: column lengths {lens}")
     n_new = lens.pop()
+    # stage-then-publish: every column is packed into ``batch`` before
+    # the single mutation below appends it — a failure anywhere in this
+    # loop (including an injected ingest fault) leaves ``_deltas``
+    # exactly as it was, never a half-ingested batch
+    from repro.sql import faults
     if isinstance(table, PackedTable):
         cols = {}
         for name, col in table.columns.items():
+            faults.maybe_fault("ingest")
             vals = np.asarray(rows[name], np.int32)
             enc = replace(col.encoding, n_rows=n_new)
             try:
@@ -479,8 +485,11 @@ def append_rows(table, rows: Dict[str, np.ndarray]):
                 cols[name] = pack_column(vals)
         batch = PackedTable(table.name, cols)
     else:
-        batch = ssb.Table(table.name, {c: np.asarray(v, np.int32)
-                                       for c, v in rows.items()})
+        cols = {}
+        for name in table.columns:
+            faults.maybe_fault("ingest")
+            cols[name] = np.asarray(rows[name], np.int32)
+        batch = ssb.Table(table.name, cols)
     pending = getattr(table, "_deltas", None)
     if pending is None:
         pending = []
@@ -506,9 +515,16 @@ def flush_deltas(table):
     pending = delta_batches(table)
     if not pending:
         return table
-    merged = {c: np.concatenate([np.asarray(table[c])]
-                                + [np.asarray(b[c]) for b in pending])
-              for c in table.columns}
+    # the whole compaction stages into fresh columns; ``table`` (and its
+    # ``_deltas``) is never mutated, so a mid-flush failure — real or
+    # injected — leaves the source observable state untouched and the
+    # flush can simply be retried
+    from repro.sql import faults
+    merged = {}
+    for c in table.columns:
+        faults.maybe_fault("ingest")
+        merged[c] = np.concatenate(
+            [np.asarray(table[c])] + [np.asarray(b[c]) for b in pending])
     if isinstance(table, PackedTable):
         return PackedTable(table.name,
                            {c: pack_column(v) for c, v in merged.items()})

@@ -21,8 +21,9 @@ import pytest
 
 from repro.cost import model as CM
 from repro.sql import compile as C
-from repro.sql import engine, ssb
+from repro.sql import engine, faults, ssb
 from repro.sql import hashtable as HT
+from repro.sql import resilience as RS
 from repro.sql import model as M
 from repro.sql import morsel as MS
 from repro.sql import plan as P
@@ -70,7 +71,7 @@ def test_plan_cuts_cover_partition_and_tail():
     for n, step in ((1, 32), (31, 32), (32, 32), (33, 32), (257, 64)):
         cuts = MS.plan_cuts(n, step)
         assert cuts[0][0] == 0 and cuts[-1][1] == n
-        for (a, b), (c, d) in zip(cuts, cuts[1:]):
+        for (_a, b), (c, _d) in zip(cuts, cuts[1:]):
             assert b == c
 
 
@@ -448,6 +449,67 @@ def test_server_reports_out_of_core_accounting():
         assert r.n_morsels > 1, name
         assert r.peak_resident_bytes <= 2 * BUDGET + 4 * 1024
         assert np.array_equal(np.asarray(r.result), oracle(name)), name
+
+
+# ---------------------------------------------------------------------------
+# fold exception safety (resilience: a fault mid-stream must not leak
+# either in-flight double buffer, and a retry must be bit-identical)
+# ---------------------------------------------------------------------------
+
+
+def test_fold_fault_releases_both_inflight_buffers():
+    stream = MS.MorselStream(PDB.lineorder, morsel_bytes=BUDGET)
+    assert stream.n_morsels > 2
+    seen, prefetched = [], []
+    orig = stream._prefetch
+
+    def spy_prefetch(m):
+        prefetched.append(m)
+        orig(m)
+
+    stream._prefetch = spy_prefetch
+
+    def compute(m):
+        seen.append(m)
+        for col in m.table.columns.values():
+            col.words_jax()                 # device upload of the cut
+        if len(seen) == 2:
+            raise RuntimeError("kernel fault at morsel 2")
+        return 0
+
+    with pytest.raises(RuntimeError, match="morsel 2"):
+        stream.fold(compute)
+    # cur (faulted) and nxt (already prefetched) are distinct cuts, and
+    # BOTH double buffers were torn down — device words and decode memos
+    assert prefetched[-1].table is not seen[-1].table
+    for m in (seen[0], seen[-1], prefetched[-1]):
+        for col in m.table.columns.values():
+            assert col._words_jax is None
+            assert col._decoded is None
+
+
+def test_fold_fault_through_executor_then_retry_bit_identical():
+    class FailSecondUpload(faults.FaultPlan):
+        def __init__(self):
+            super().__init__(0, {"upload": 1.0})
+            self.n = 0
+
+        def should_fault(self, site):
+            if site != "upload":
+                return False
+            self.n += 1
+            return self.n == 2              # fault mid-stream, not head
+
+    cache = HT.HashTableCache()
+    cq = C.compile_plan(QUERIES["q2.1"], "fused")
+    with faults.active(FailSecondUpload()):
+        with pytest.raises(RS.FaultInjected):
+            cq.execute(PDB, mode="ref", cache=cache, morsel_bytes=BUDGET)
+    # same stream geometry, same cache: the retry is bit-identical — the
+    # failed fold left no stale device buffer or contaminated partial
+    got = C.compile_plan(QUERIES["q2.1"], "fused").execute(
+        PDB, mode="ref", cache=cache, morsel_bytes=BUDGET)
+    assert np.array_equal(np.asarray(got), oracle("q2.1"))
 
 
 def test_server_shared_wave_reports_stream():

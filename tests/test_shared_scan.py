@@ -361,7 +361,7 @@ def test_default_budget_keeps_full_ssb_wave():
     x 16 padded members = 448KB < 2MiB) — sizing is enforcement, not a
     throughput regression."""
     server = QueryServer(DB, mode="ref", max_batch=16)
-    for n, p in QUERIES.items():
+    for p in QUERIES.values():
         server.submit(p, strategy="shared")
     results = server.run()
     assert server.stats["budget_splits"] == 0

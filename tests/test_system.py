@@ -28,7 +28,7 @@ def test_training_reduces_loss():
         cfg, AdamWConfig(lr=1e-2, warmup_steps=2, total_steps=60,
                          weight_decay=0.0)))
     first = None
-    for i in range(40):
+    for _ in range(40):
         params, opt, m = step(params, opt, batch)
         if first is None:
             first = float(m["loss"])
