@@ -45,9 +45,19 @@ def load_rows(path: str):
 
 
 def compare_one(fresh_path: str, baseline_dir: str, threshold: float,
-                update: bool) -> int:
-    """Gate one fresh record; returns the number of failures."""
-    base_path = os.path.join(baseline_dir, os.path.basename(fresh_path))
+                update: bool, rows_out: list | None = None) -> int:
+    """Gate one fresh record; returns the number of failures.
+
+    ``rows_out``, when given, collects one
+    ``(table, entry, baseline_us, fresh_us, ratio, verdict)`` tuple per
+    reported line (``None`` fields where a side is missing) so the
+    caller can render the run elsewhere — the CI step summary."""
+    table = os.path.basename(fresh_path)
+    base_path = os.path.join(baseline_dir, table)
+
+    def note(entry, old, new, ratio, verdict):
+        if rows_out is not None:
+            rows_out.append((table, entry, old, new, ratio, verdict))
     if update:
         os.makedirs(baseline_dir, exist_ok=True)
         shutil.copyfile(fresh_path, base_path)
@@ -58,6 +68,7 @@ def compare_one(fresh_path: str, baseline_dir: str, threshold: float,
         # pass, exactly like a new row inside an existing record
         print(f"new  {fresh_path}: no baseline {base_path} yet "
               "(gate passes; adopt with --update)")
+        note("(whole table)", None, None, None, "new")
         return 0
     fresh = load_rows(fresh_path)
     base = load_rows(base_path)
@@ -66,6 +77,7 @@ def compare_one(fresh_path: str, baseline_dir: str, threshold: float,
         if name not in fresh:
             print(f"FAIL {name}: present in baseline, missing from fresh "
                   "record (renamed/dropped rows need --update)")
+            note(name, base[name], None, None, "FAIL (dropped)")
             failures += 1
             continue
         old, new = base[name], fresh[name]
@@ -75,17 +87,41 @@ def compare_one(fresh_path: str, baseline_dir: str, threshold: float,
             print(f"FAIL {name}: timed in baseline ({old:.1f}us) but "
                   "untimed (0) in fresh record — benchmark silently "
                   "stopped measuring")
+            note(name, old, new, None, "FAIL (untimed)")
             failures += 1
             continue
         ratio = new / old
         verdict = "FAIL" if ratio > threshold else "ok"
         print(f"{verdict:4} {name}: {old:.1f}us -> {new:.1f}us "
               f"({ratio:.2f}x, threshold {threshold}x)")
+        note(name, old, new, ratio, verdict)
         if ratio > threshold:
             failures += 1
     for name in sorted(set(fresh) - set(base)):
         print(f"new  {name}: {fresh[name]:.1f}us (no baseline yet)")
+        note(name, None, fresh[name], None, "new")
     return failures
+
+
+def write_step_summary(rows: list, threshold: float, failures: int,
+                       path: str) -> None:
+    """Append the gate outcome as a GitHub Actions step-summary table
+    (markdown appended to the file named by ``GITHUB_STEP_SUMMARY``).
+    Plain-stdout reporting is untouched — this is an extra sink, active
+    only under Actions."""
+    def us(v):
+        return "—" if v is None else f"{v:.1f}"
+    lines = ["### Benchmark gate "
+             + ("❌ FAILED" if failures else "✅ green")
+             + f" (threshold {threshold}x)", "",
+             "| table | entry | baseline us | fresh us | ratio | verdict |",
+             "|---|---|---:|---:|---:|---|"]
+    for table, entry, old, new, ratio, verdict in rows:
+        lines.append(f"| {table} | {entry} | {us(old)} | {us(new)} | "
+                     + ("—" if ratio is None else f"{ratio:.2f}x")
+                     + f" | {verdict} |")
+    with open(path, "a") as f:
+        f.write("\n".join(lines) + "\n\n")
 
 
 def main() -> None:
@@ -99,9 +135,13 @@ def main() -> None:
                     help="refresh the committed baselines instead of gating")
     args = ap.parse_args()
     failures = 0
+    rows: list = []
     for path in args.fresh:
         failures += compare_one(path, args.baseline_dir, args.threshold,
-                                args.update)
+                                args.update, rows_out=rows)
+    summary = os.environ.get("GITHUB_STEP_SUMMARY")
+    if summary and rows:
+        write_step_summary(rows, args.threshold, failures, summary)
     if failures:
         print(f"{failures} benchmark regression(s) above "
               f"{args.threshold}x — failing the gate", file=sys.stderr)

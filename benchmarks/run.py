@@ -660,7 +660,9 @@ def chaos(sf: float = 0.01, rates=(0.0, 0.05, 0.2), seed: int = 123):
     for rate in rates:
         plan = faults.FaultPlan(
             seed, {"kernel": rate, "upload": rate, "build": rate})
-        srv = QueryServer(pdb, mode="ref", morsel_bytes=budget)
+        from repro.sql.result_cache import ResultCache
+        srv = QueryServer(pdb, mode="ref", morsel_bytes=budget,
+                          result_cache=ResultCache())
         lat_us, ok, typed_err, shed = {}, 0, 0, 0
         with faults.active(plan):
             for name, p in qs.items():
@@ -686,6 +688,25 @@ def chaos(sf: float = 0.01, rates=(0.0, 0.05, 0.2), seed: int = 123):
         assert ok + typed_err + shed == len(qs)     # all terminated
         if rate == 0.0:
             assert ok == len(qs), "fault-free run must be 100% available"
+        # cache correctness under pressure: replay the same queries
+        # fault-free — answers may now come from the result cache
+        # (unless mid-run pressure cleared it: the governor wipes the
+        # grids on every MemoryPressure).  Served-from-cache or fresh,
+        # every answer must stay bit-identical to the oracle, and every
+        # hit must say so on the QueryResult.
+        cache_served = 0
+        for name, p in qs.items():
+            try:
+                rid = srv.submit(p, strategy="fused")
+            except RS.MemoryPressure:
+                continue                # still shedding: nothing to check
+            r = srv.run()[rid]
+            if r.error is None:
+                assert np.array_equal(np.asarray(r.result), want[name]), \
+                    f"{name}: cached replay diverged at rate {rate}"
+                if r.cache_hit:
+                    assert r.strategy == "cached"
+                    cache_served += 1
         lats = sorted(lat_us.values())
         p99 = lats[min(len(lats) - 1, int(np.ceil(0.99 * len(lats))) - 1)]
         avail = ok / len(qs)
@@ -697,6 +718,7 @@ def chaos(sf: float = 0.01, rates=(0.0, 0.05, 0.2), seed: int = 123):
              f"retries={srv.stats.get('retries', 0)};"
              f"breaker_skips={srv.stats.get('breaker_skips', 0)};"
              f"pressure_events={srv.stats.get('pressure_events', 0)};"
+             f"cache_served_replay={cache_served};"
              f"all_terminated=True",
              extra={
                  "sf": sf, "seed": seed, "fault_rate": rate,
@@ -708,7 +730,157 @@ def chaos(sf: float = 0.01, rates=(0.0, 0.05, 0.2), seed: int = 123):
                  "server_stats": {k: v for k, v in srv.stats.items()
                                   if isinstance(v, (int, float))},
                  "morsel_budget": budget,
+                 "cache_served_replay": cache_served,
+                 "result_cache": srv.result_cache.stats(),
              })
+
+
+def serving(sf: float = 0.01, seed: int = 321, n_requests: int = 36):
+    """Continuous serving under open-loop Poisson load: the 13 SSB
+    queries plus their narrowed subsumption variants submitted to the
+    ``ServingLoop`` on a seeded arrival schedule at three rates (0.5x /
+    1.5x / 3x the measured solo-fused capacity), vs two baselines on
+    the *same* schedule: solo-fused (submit+run one request at a time,
+    the pre-PR-4 service) and the batch wave (whole workload handed
+    over at t=0 — the PR 4 best case serving cannot exceed).
+
+    Asserted per rate before anything is emitted: EVERY response —
+    executed, exact cache hit, or subsumption-served — is bit-identical
+    to the numpy oracle; p99 end-to-end latency holds the configured
+    SLO; and at the highest rate the serving loop's qps beats the
+    solo-fused baseline's (the wave former + result cache must pay for
+    themselves exactly when the queue is deepest).
+
+    Rows report mean end-to-end latency (the gated figure) with
+    p50/p99, qps for all three services, and the cache/wave counters."""
+    from repro.sql import serving as SV
+    from repro.sql.server import QueryServer
+    slo_s = 2.0
+    db = ssb.generate(sf=sf, seed=7)
+    qs = engine.ssb_queries()
+    variants = engine.ssb_narrowed_variants(qs)
+    pool = list(qs.items()) + [(n, p) for n, (_, p) in variants.items()]
+    want = {n: np.asarray(engine.run_query_oracle(db, p)) for n, p in pool}
+    workload = [pool[i % len(pool)] for i in range(n_requests)]
+
+    # solo-fused capacity, measured warm (first pass pays the JIT)
+    cap_srv = QueryServer(db, mode="ref")
+    for _ in range(2):
+        t0 = time.perf_counter()
+        for _, p in pool:
+            rid = cap_srv.submit(p, strategy="fused")
+            r = cap_srv.run()[rid]
+            assert r.error is None
+    t_solo = (time.perf_counter() - t0) / len(pool)
+    cap = 1.0 / t_solo
+    anchor = [p for _, p in pool]
+
+    def replay(submit_fn, schedule):
+        """Drive one service over the arrival schedule; returns
+        (per-request results, wall seconds first-arrival -> last
+        completion).  submit_fn(name, plan) -> (result, latency_s)."""
+        t0 = time.monotonic()
+        out = []
+        for t_arr, (name, p) in zip(schedule, workload):
+            now = time.monotonic()
+            if t0 + t_arr > now:
+                time.sleep(t0 + t_arr - now)
+            out.append((name,) + submit_fn(name, p))
+        return out, time.monotonic() - t0
+
+    qps_hi = {}
+    for k, (label, mult) in enumerate(
+            [("load0.5x", 0.5), ("load1.5x", 1.5), ("load3x", 3.0)]):
+        schedule = SV.poisson_arrivals(mult * cap, n_requests, seed + k)
+        # --- continuous serving loop (pool-anchored waves; prewarm
+        # compiles the 4 pow2-bucket executables so the measured pass
+        # never sees a novel shape regardless of wave composition) ---
+        loop = SV.ServingLoop(db, mode="ref", slo_s=slo_s, max_batch=8,
+                              warm_pool=anchor)
+        loop.prewarm()
+        with loop:
+            t0 = time.monotonic()
+            tickets = []
+            for t_arr, (name, p) in zip(schedule, workload):
+                now = time.monotonic()
+                if t0 + t_arr > now:
+                    time.sleep(t0 + t_arr - now)
+                tickets.append((name, loop.submit(p, strategy="auto")))
+            served = [(name, tk.wait(timeout=120), tk)
+                      for name, tk in tickets]
+            serving_wall = time.monotonic() - t0
+        exact = subs = 0
+        for name, r, _ in served:
+            assert r.error is None, f"{name}: {r.error}"
+            assert np.array_equal(np.asarray(r.result), want[name]), \
+                f"{name}: serving answer diverged from the oracle"
+            exact += bool(r.cache_hit and not r.subsumption_hit)
+            subs += bool(r.subsumption_hit)
+        lats = np.array([tk.latency_s for _, _, tk in served])
+        p50, p99 = (float(np.percentile(lats, q)) for q in (50, 99))
+        assert p99 <= slo_s, \
+            f"{label}: p99 {p99:.3f}s blew the {slo_s}s SLO"
+        qps = n_requests / serving_wall
+
+        # --- solo-fused baseline, same schedule (serial open loop:
+        # queueing shows up as lateness against the schedule) ---
+        solo_srv = QueryServer(db, mode="ref")
+
+        def solo_submit(name, p, _srv=solo_srv):
+            t_in = time.monotonic()
+            rid = _srv.submit(p, strategy="fused")
+            r = _srv.run()[rid]
+            assert r.error is None, f"{name}: {r.error}"
+            assert np.array_equal(np.asarray(r.result), want[name])
+            return r, time.monotonic() - t_in
+        solo_served, solo_wall = replay(solo_submit, schedule)
+        solo_lats = np.array([lat for _, _, lat in solo_served])
+        qps_solo = n_requests / solo_wall
+        qps_hi[label] = (qps, qps_solo)
+
+        emit(f"serving.{label}", float(lats.mean() * 1e6),
+             f"qps={qps:.1f};solo_qps={qps_solo:.1f};"
+             f"p50_us={p50 * 1e6:.0f};p99_us={p99 * 1e6:.0f};"
+             f"slo_s={slo_s};rate_qps={mult * cap:.1f};"
+             f"exact_hits={exact};subsume_hits={subs};"
+             f"shared_waves={loop.server.stats.get('shared_waves', 0)};"
+             f"solo_p99_us={float(np.percentile(solo_lats, 99)) * 1e6:.0f}",
+             extra={
+                 "sf": sf, "seed": seed + k, "n_requests": n_requests,
+                 "rate_qps": mult * cap, "slo_s": slo_s,
+                 "qps": qps, "qps_solo": qps_solo,
+                 "p50_us": p50 * 1e6, "p99_us": p99 * 1e6,
+                 "solo_mean_us": float(solo_lats.mean() * 1e6),
+                 "solo_p99_us": float(np.percentile(solo_lats, 99)) * 1e6,
+                 "exact_hits": exact, "subsume_hits": subs,
+                 "dispatch_reasons": dict(loop.former.dispatch_reasons),
+                 "result_cache": loop.server.result_cache.stats(),
+                 "server_stats": {k2: v for k2, v in
+                                  loop.server.stats.items()
+                                  if isinstance(v, (int, float))},
+             })
+
+    hi_qps, hi_solo = qps_hi["load3x"]
+    assert hi_qps > hi_solo, \
+        (f"serving qps {hi_qps:.1f} must beat solo-fused "
+         f"{hi_solo:.1f} at the highest arrival rate")
+
+    # --- batch-wave upper bound: the whole workload at t=0, one run ---
+    bsrv = QueryServer(db, mode="ref", max_batch=8, anchor_plans=anchor)
+    t0 = time.perf_counter()
+    rids = {bsrv.submit(p, strategy="shared"): name
+            for name, p in workload}
+    batch_results = bsrv.run()
+    batch_wall = time.perf_counter() - t0
+    for rid, name in rids.items():
+        r = batch_results[rid]
+        assert r.error is None and np.array_equal(
+            np.asarray(r.result), want[name])
+    emit("serving.batch_wave", batch_wall / n_requests * 1e6,
+         f"qps={n_requests / batch_wall:.1f};n={n_requests};"
+         f"waves={bsrv.stats.get('shared_waves', 0)}",
+         extra={"sf": sf, "n_requests": n_requests,
+                "qps": n_requests / batch_wall})
 
 
 def table3_cost():
@@ -736,6 +908,7 @@ ALL = {
     "scaleout": scaleout,
     "scaleup": scaleup,
     "chaos": chaos,
+    "serving": serving,
     "table3": table3_cost,
 }
 

@@ -595,9 +595,21 @@ def shared_params(plans: List[P.Plan], db: ssb.Database,
                   cache: Optional[HT.HashTableCache] = None,
                   pad_to: Optional[int] = None,
                   prebuilt: Optional[Dict[Tuple, Tuple]] = None,
-                  fact=None):
+                  fact=None,
+                  anchor: Optional[List[P.Plan]] = None):
     """Lower a group of shareable plans over one fact table to the
     stacked parameter arrays of ``ops.multi_spja``.
+
+    ``anchor`` widens the lowered *footprint* (union predicate columns,
+    probe streams, measure columns, group span) to cover the given plan
+    pool without adding members: anchor-only columns get all-pass
+    bounds, anchor-only joins get ``use``/``mult`` zero for every real
+    member.  A serving loop that anchors every wave on its known query
+    pool maps ANY member subset onto one executable per pow2 member
+    bucket — fixed shapes bought with inert lanes, exactly the
+    LM-server padding trade.  Callers pass a pre-filtered anchor
+    (:func:`anchor_for`); ``None`` lowers the wave-only footprint and
+    is bit-identical to the unanchored path.
 
     Returns ``(fact, args, kwargs, n_groups)`` where ``args`` are the
     positional arguments of the kernel and ``kwargs`` its stream
@@ -617,7 +629,19 @@ def shared_params(plans: List[P.Plan], db: ssb.Database,
         fact = getattr(db, table)
     q_n = len(plans)
     q_pad = max(q_n, pad_to or q_n)
-    col_ix, join_nodes, mcol_ix = shared_footprint(plans)
+    foot = list(plans) + list(anchor or [])
+    col_ix, join_nodes, mcol_ix = shared_footprint(foot)
+    if anchor:
+        # canonical stream order: footprint maps insert wave members
+        # first, so two waves over the same anchored union would still
+        # lower their streams in different positions — different static
+        # width tuples and packed-stream shapes, hence one executable
+        # per member ORDER instead of one per pow2 bucket.  Sorting
+        # makes the whole parameterization membership-invariant.
+        col_ix = {c: i for i, c in enumerate(sorted(col_ix))}
+        join_nodes = sorted(join_nodes,
+                            key=lambda j: repr(shared_join_key(j)))
+        mcol_ix = {c: i for i, c in enumerate(sorted(mcol_ix))}
     join_ix = {shared_join_key(j): ji for ji, j in enumerate(join_nodes)}
 
     # per-member bounds over the union predicate columns, intersected
@@ -680,7 +704,7 @@ def shared_params(plans: List[P.Plan], db: ssb.Database,
 
     q_valid = np.zeros(q_pad, np.int32)
     q_valid[:q_n] = 1
-    n_groups = max(plan.n_groups for plan in plans)
+    n_groups = max(plan.n_groups for plan in foot)
     pred_streams = [ST.column_stream(fact, c) for c in col_ix]
     args = ([s[0] for s in pred_streams], jnp.asarray(bounds),
             join_keys, join_tables, jnp.asarray(mults), jnp.asarray(use),
@@ -689,6 +713,21 @@ def shared_params(plans: List[P.Plan], db: ssb.Database,
                   key_widths=key_widths, key_refs=key_refs,
                   m_widths=m_widths, m_refs=m_refs, n_rows=fact.n_rows)
     return fact, args, kwargs, n_groups
+
+
+def anchor_for(plans: List[P.Plan],
+               pool: Optional[List[P.Plan]]) -> Optional[List[P.Plan]]:
+    """Filter a footprint-anchor pool down to the plans that could
+    legally share this wave's scan — same fact table, shareable — so an
+    anchored lowering never widens the footprint with streams the
+    kernel could not load.  Returns ``None`` when nothing survives (the
+    unanchored path)."""
+    if not pool:
+        return None
+    table = plans[0].scan.table
+    kept = [p for p in pool
+            if p.scan.table == table and shareability(p) is None]
+    return kept or None
 
 
 def _shared_prebuilt(plans: List[P.Plan], db,
@@ -713,17 +752,23 @@ def execute_shared_morsels(plans: List[P.Plan], db: ssb.Database,
                            cache: Optional[HT.HashTableCache] = None,
                            pad_to: Optional[int] = None,
                            prebuilt: Optional[Dict[Tuple, Tuple]] = None,
-                           morsel_bytes: int = MS.DEFAULT_MORSEL_BYTES
+                           morsel_bytes: int = MS.DEFAULT_MORSEL_BYTES,
+                           anchor: Optional[List[P.Plan]] = None
                            ) -> Tuple[List[np.ndarray], MS.MorselReport]:
     """:func:`execute_shared` as a fold over the morsel stream: the wave
     streams each morsel ONCE (one ``multi_spja`` launch per morsel, so
     the shared-scan win multiplies with the out-of-core bound), the
     per-morsel ``(Q, n_groups)`` partial grids tree-merge exactly, and
     the dim tables build once up front.  Returns ``(results, report)``
-    with each member's ``(n_groups,)`` f32 result in submission order."""
+    with each member's ``(n_groups,)`` f32 result in submission order.
+    ``anchor`` (a plan pool, see :func:`shared_params`) pins the lowered
+    footprint so any member subset reuses one executable per pow2
+    member bucket."""
     validate_wave(plans)
-    col_ix, join_nodes, mcol_ix = shared_footprint(plans)
-    tables = _shared_prebuilt(plans, db, cache, prebuilt)
+    anchor = anchor_for(plans, anchor)
+    foot = list(plans) + list(anchor or [])
+    col_ix, join_nodes, mcol_ix = shared_footprint(foot)
+    tables = _shared_prebuilt(foot, db, cache, prebuilt)
     fact = getattr(db, plans[0].scan.table)
     cols = list(col_ix)
     cols += [j.fact_col for j in join_nodes if j.fact_col not in cols]
@@ -738,7 +783,7 @@ def execute_shared_morsels(plans: List[P.Plan], db: ssb.Database,
     def run(m):
         _, args, kwargs, n_groups = shared_params(
             plans, db, cache=None, pad_to=pad_to, prebuilt=tables,
-            fact=m.table)
+            fact=m.table, anchor=anchor)
         LAUNCH_STATS["probe"] += 1      # one whole-wave launch per morsel
         FLT.maybe_fault("kernel")
         return np.asarray(ops.multi_spja(*args, n_groups=n_groups,
@@ -776,7 +821,8 @@ def execute_shared_sharded(plans: List[P.Plan], db,
                            cache: Optional[HT.HashTableCache] = None,
                            pad_to: Optional[int] = None,
                            prebuilt: Optional[Dict[Tuple, Tuple]] = None,
-                           morsel_bytes: int = MS.DEFAULT_MORSEL_BYTES
+                           morsel_bytes: int = MS.DEFAULT_MORSEL_BYTES,
+                           anchor: Optional[List[P.Plan]] = None
                            ) -> Tuple[List[np.ndarray], List[float],
                                       MS.MorselReport]:
     """Shared-scan wave over a sharded fact table: PR 4's wave formation
@@ -796,7 +842,7 @@ def execute_shared_sharded(plans: List[P.Plan], db,
         t0 = time.perf_counter()
         results, report = execute_shared_morsels(
             plans, base, mode=mode, tile=tile, cache=cache, pad_to=pad_to,
-            prebuilt=prebuilt, morsel_bytes=morsel_bytes)
+            prebuilt=prebuilt, morsel_bytes=morsel_bytes, anchor=anchor)
         return results, [time.perf_counter() - t0], report
     tables = _shared_prebuilt(plans, db, cache, prebuilt)
     partials, times = [], []
@@ -805,7 +851,8 @@ def execute_shared_sharded(plans: List[P.Plan], db,
         t0 = time.perf_counter()
         shard_results, rep = execute_shared_morsels(
             plans, shard, mode=mode, tile=tile, cache=None,
-            pad_to=pad_to, prebuilt=tables, morsel_bytes=morsel_bytes)
+            pad_to=pad_to, prebuilt=tables, morsel_bytes=morsel_bytes,
+            anchor=anchor)
         partials.append(np.stack(
             [np.pad(r, (0, max(p.n_groups for p in plans) - len(r)))
              for r in shard_results]))

@@ -18,7 +18,7 @@ benchmarks) keep working against the IR.
 from __future__ import annotations
 
 from types import SimpleNamespace
-from typing import Dict, Optional, Sequence
+from typing import Dict, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -33,8 +33,9 @@ from repro.sql.ssb import Database, datekey
 
 __all__ = [
     "EMPTY", "np_hash", "np_build", "next_pow2", "HashTableCache",
-    "ssb_queries", "run_query", "run_query_oracle", "order_by",
-    "build_join_tables", "Plan", "QueryBuilder",
+    "ssb_queries", "ssb_narrowed_variants", "run_query",
+    "run_query_oracle", "order_by", "build_join_tables", "Plan",
+    "QueryBuilder",
 ]
 
 
@@ -174,6 +175,41 @@ def ssb_queries() -> Dict[str, Plan]:
         .measure("lo_revenue", "lo_supplycost", "sub")
         .group_by(800).build())
     return q
+
+
+def ssb_narrowed_variants(qs: Optional[Dict[str, Plan]] = None
+                          ) -> Dict[str, Tuple[str, Plan]]:
+    """Narrowed SSB variants: each differs from its parent query only
+    by a *strictly stronger* filter on one group-key join — the shapes
+    the result cache (``repro.sql.result_cache``) can answer from the
+    parent's cached grid by predicate subsumption.  Returns
+    ``{variant_name: (parent_name, plan)}``; the serving benchmark and
+    the subsumption-soundness tests drive both from this one list."""
+    import copy
+    if qs is None:
+        qs = ssb_queries()
+
+    def narrowed(name, parent, join_ix, new_filter):
+        v = copy.deepcopy(qs[parent])
+        v.name = name
+        v.joins[join_ix].filter = new_filter
+        return name, (parent, v)
+
+    return dict([
+        # q2.1's date join is unfiltered (TruePred) -> any year range
+        narrowed("q2.1n", "q2.1", 2, RangePred("d_year", 1993, 1996)),
+        # q2.2 brands 260..267 -> inner slice
+        narrowed("q2.2n", "q2.2", 1, RangePred("p_brand1", 261, 265)),
+        # q3.1 years 1992..1997 -> two of them
+        narrowed("q3.1n", "q3.1", 2, InPred("d_year", (1994, 1995))),
+        # q3.3 customer cities {UKI1, UKI5} -> just UKI5 (flag payload)
+        narrowed("q3.3n", "q3.3", 0, EqPred("c_city", ssb.CITY_UKI5)),
+        # q4.1's date join is unfiltered (all years) -> a 3-year slice.
+        # (q4.2 is NOT usable here: its s_region build side is empty at
+        # the small scale factors the tests/benchmarks run, so its grid
+        # layout never decomposes and narrowing it can only miss.)
+        narrowed("q4.1n", "q4.1", 3, RangePred("d_year", 1993, 1995)),
+    ])
 
 
 # ---------------------------------------------------------------------------

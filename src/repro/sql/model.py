@@ -459,6 +459,46 @@ def predict_shared(plans, db: ssb.Database,
     return out
 
 
+def predict_marginal(plans, db: ssb.Database,
+                     hw: Optional[Hardware] = None,
+                     n_shards: Optional[int] = None,
+                     morsel_bytes: Optional[float] = None,
+                     candidate: Optional[P.Plan] = None
+                     ) -> Dict[str, float]:
+    """Marginal economics of one more member riding an open wave — the
+    serving loop's hold-or-dispatch predicate.
+
+    ``plans`` is the wave as currently formed; ``candidate`` the next
+    arrival it might wait for (default: the last member, the best
+    stand-in for a self-similar workload).  Returns:
+
+    * ``shared`` — predicted seconds of the wave as formed;
+    * ``shared_plus`` — the wave with the candidate aboard;
+    * ``marginal_cost`` — what admitting the candidate adds to every
+      member's wave time (``max(shared_plus - shared, 0)``; a duplicate
+      of an existing member dedups away and costs nothing);
+    * ``solo`` — the candidate's per-plan argmin (``choose``), the scan
+      it would otherwise pay alone;
+    * ``gain`` — ``solo - marginal_cost``: the shared-scan saving that
+      must pay for the wave's added queueing delay.  The wave former
+      holds the wave open only while ``gain`` exceeds the expected wait
+      it imposes on the members already aboard."""
+    if not plans:
+        raise ValueError("predict_marginal needs at least one plan")
+    hw = hw or default_hardware()
+    cand = plans[-1] if candidate is None else candidate
+    base = predict_shared(plans, db, hw, n_shards=n_shards,
+                          morsel_bytes=morsel_bytes)["shared"]
+    plus = predict_shared(list(plans) + [cand], db, hw, n_shards=n_shards,
+                          morsel_bytes=morsel_bytes)["shared"]
+    solo = choose(cand, db, hw, n_shards=n_shards,
+                  morsel_bytes=morsel_bytes).predicted_s
+    marginal = max(plus - base, 0.0)
+    return {"shared": base, "shared_plus": plus,
+            "marginal_cost": marginal, "solo": solo,
+            "gain": solo - marginal}
+
+
 def scanned_bytes_shared(plans, fact) -> Tuple[int, int]:
     """(encoded, plain) bytes ONE shared pass over the wave's union
     streams moves — the per-member ``bytes_scanned`` report for shared

@@ -335,7 +335,7 @@ class ResourceGovernor:
             return True
         return False
 
-    def on_pressure(self, db=None, cache=None) -> None:
+    def on_pressure(self, db=None, cache=None, result_cache=None) -> None:
         """React to one pressure event (allocation failure / over budget)."""
         self.pressure_events += 1
         self.consecutive += 1
@@ -355,6 +355,12 @@ class ResourceGovernor:
                     self.evictions += 1
         if cache is not None and hasattr(cache, "evict_cold"):
             self.evictions += cache.evict_cold()
+        # finished aggregate grids are the cheapest state to rebuild —
+        # under pressure the whole result cache goes, not just cold
+        # entries (a stale-but-kept grid would also be the one cache
+        # whose wrong answer nobody re-verifies)
+        if result_cache is not None and hasattr(result_cache, "clear"):
+            self.evictions += result_cache.clear()
 
     def on_success(self) -> None:
         """A request completed cleanly; decay the consecutive counter."""

@@ -1,0 +1,245 @@
+"""Result/subsumption cache (repro.sql.result_cache).
+
+Soundness is the whole game: a cached aggregate grid may answer a new
+query only when the answer is *bit-identical* to executing it fresh.
+The deterministic sweep here (hypothesis is not available in this
+environment) drives every SSB query and every narrowed variant from
+``engine.ssb_narrowed_variants`` against the numpy oracle: exact
+repeats hit, strictly-narrower group-key filters are served by
+re-masking the parent's grid on host, and every rule that guards the
+re-mask (mult-0 filter-only joins, widened bounds, changed fact
+filters, non-subset builds, delta ingests) turns the lookup into a
+miss rather than a wrong answer.
+"""
+import copy
+
+import numpy as np
+
+from repro.sql import engine, ssb
+from repro.sql import result_cache as RC
+from repro.sql import storage as ST
+from repro.sql import plan as PL
+
+DB = ssb.generate(sf=0.005, seed=11)
+QUERIES = engine.ssb_queries()
+VARIANTS = engine.ssb_narrowed_variants(QUERIES)
+
+
+def oracle(db, plan):
+    return np.asarray(engine.run_query_oracle(db, plan))
+
+
+def warm_cache(db=DB, queries=QUERIES):
+    rc = RC.ResultCache()
+    for plan in queries.values():
+        assert rc.insert(db, plan, oracle(db, plan))
+    return rc
+
+
+# ---------------------------------------------------------------------------
+# keys
+# ---------------------------------------------------------------------------
+
+
+def _filter_nodes(plan):
+    return [n for n in plan.chain if isinstance(n, PL.Filter)]
+
+
+def test_canonical_key_ignores_name_and_filter_order():
+    q = QUERIES["q1.1"]
+    renamed = copy.deepcopy(q)
+    renamed.name = "whatever"
+    fnodes = _filter_nodes(renamed)
+    allp = [p for n in fnodes for p in n.preds]
+    assert len(allp) >= 2, "q1.1 is expected to carry several filters"
+    for n in fnodes:
+        n.preds[:] = []
+    fnodes[0].preds[:] = list(reversed(allp))
+    assert RC.canonical_key(q) == RC.canonical_key(renamed)
+    # a different bound is a different plan
+    changed = copy.deepcopy(q)
+    node = _filter_nodes(changed)[0]
+    p = node.preds[0]
+    node.preds[0] = PL.RangePred(p.col, p.lo, p.hi - 1)
+    assert RC.canonical_key(q) != RC.canonical_key(changed)
+
+
+def test_structure_key_ignores_join_filters_only():
+    parent = QUERIES["q2.1"]
+    _, narrowed = VARIANTS["q2.1n"]
+    assert RC.structure_key(parent) == RC.structure_key(narrowed)
+    assert RC.canonical_key(parent) != RC.canonical_key(narrowed)
+
+
+# ---------------------------------------------------------------------------
+# exact hits
+# ---------------------------------------------------------------------------
+
+
+def test_exact_hit_every_ssb_query():
+    rc = warm_cache()
+    for name, plan in QUERIES.items():
+        hit = rc.lookup(DB, plan)
+        assert hit is not None, name
+        grid, kind = hit
+        assert kind == "exact"
+        np.testing.assert_array_equal(grid, oracle(DB, plan))
+
+
+def test_returned_grid_is_isolated_from_the_cache():
+    rc = RC.ResultCache()
+    plan = QUERIES["q2.1"]
+    rc.insert(DB, plan, oracle(DB, plan))
+    grid, _ = rc.lookup(DB, plan)
+    grid[:] = -1                        # caller scribbles on its copy
+    again, _ = rc.lookup(DB, plan)
+    np.testing.assert_array_equal(again, oracle(DB, plan))
+
+
+def test_insert_rejects_malformed_grids():
+    rc = RC.ResultCache()
+    plan = QUERIES["q2.1"]
+    good = oracle(DB, plan)
+    assert not rc.insert(DB, plan, good[:-1])           # wrong length
+    assert not rc.insert(DB, plan, good.reshape(1, -1))  # wrong rank
+    assert len(rc) == 0
+
+
+# ---------------------------------------------------------------------------
+# subsumption: the deterministic soundness sweep
+# ---------------------------------------------------------------------------
+
+
+def test_subsumption_serves_every_variant_bit_identically():
+    # the full cache (all 13 parents resident) must serve every
+    # narrowed variant from its parent's grid, bit-identical to running
+    # the variant fresh
+    rc = warm_cache()
+    assert VARIANTS, "variant list must not be empty"
+    for name, (parent, narrowed) in VARIANTS.items():
+        hit = rc.lookup(DB, narrowed)
+        assert hit is not None, f"{name} should subsume under {parent}"
+        grid, kind = hit
+        assert kind == "subsume", name
+        np.testing.assert_array_equal(grid, oracle(DB, narrowed),
+                                      err_msg=name)
+    stats = rc.stats()
+    assert stats["subsume_hits"] == len(VARIANTS)
+
+
+def test_subsumption_only_parent_cached():
+    # one parent at a time (no exact entry for the variant anywhere)
+    for name, (parent, narrowed) in VARIANTS.items():
+        rc = RC.ResultCache()
+        rc.insert(DB, QUERIES[parent], oracle(DB, QUERIES[parent]))
+        hit = rc.lookup(DB, narrowed)
+        assert hit is not None and hit[1] == "subsume", name
+        np.testing.assert_array_equal(hit[0], oracle(DB, narrowed),
+                                      err_msg=name)
+
+
+def test_widened_filter_misses():
+    # roles reversed: the cache holds the NARROW grid, the query wants
+    # the wider parent — must execute fresh, never un-mask a grid.
+    # The guard compares build *masks*, not predicate text: a variant
+    # whose "widening" re-admits no build rows at this scale factor is
+    # semantically the same query, and serving it from the narrow grid
+    # is a legitimate (bit-identical) hit — so those are asserted for
+    # identity instead, and only real widenings are required to miss.
+    exercised = 0
+    for name, (parent, narrowed) in VARIANTS.items():
+        pq = QUERIES[parent]
+        widens = any(
+            bool(np.any(PL.pred_mask(jn.filter, getattr(DB, jn.dim))
+                        & ~PL.pred_mask(jc.filter, getattr(DB, jc.dim))))
+            for jc, jn in zip(narrowed.joins, pq.joins))
+        rc = RC.ResultCache()
+        rc.insert(DB, narrowed, oracle(DB, narrowed))
+        hit = rc.lookup(DB, pq)
+        if widens:
+            exercised += 1
+            assert hit is None, name
+        elif hit is not None:
+            np.testing.assert_array_equal(hit[0], oracle(DB, pq),
+                                          err_msg=name)
+    assert exercised >= 3, "widening sweep must exercise several variants"
+
+
+def test_filter_only_join_never_subsumes():
+    # q2.1's supplier join has mult 0 (pure filter, no group
+    # contribution): the grid cannot be re-masked by group id, so
+    # narrowing that filter must miss even though one nation is a
+    # strict subset of the region the parent keeps
+    parent = QUERIES["q2.1"]
+    narrowed = copy.deepcopy(parent)
+    narrowed.name = "q2.1f"
+    zero = [j for j in narrowed.joins if j.mult == 0]
+    assert zero, "q2.1 is expected to carry a mult-0 join"
+    zero[0].filter = PL.EqPred("s_nation", ssb.NATION_US)
+    rc = RC.ResultCache()
+    rc.insert(DB, parent, oracle(DB, parent))
+    assert rc.lookup(DB, narrowed) is None
+
+
+def test_changed_fact_filter_misses():
+    parent = QUERIES["q1.1"]
+    other = copy.deepcopy(parent)
+    other.name = "q1.1f"
+    node = _filter_nodes(other)[0]
+    p = node.preds[0]
+    node.preds[0] = PL.RangePred(p.col, p.lo, p.hi - 1)
+    rc = RC.ResultCache()
+    rc.insert(DB, parent, oracle(DB, parent))
+    hit = rc.lookup(DB, other)
+    # a different fact filter is a different scan: no exact key match,
+    # and the structure key (which includes fact filters) blocks the
+    # subsumption path too
+    assert hit is None
+
+
+# ---------------------------------------------------------------------------
+# invalidation + eviction
+# ---------------------------------------------------------------------------
+
+
+def test_delta_ingest_invalidates_everything():
+    db = ssb.generate(sf=0.005, seed=23)
+    rc = RC.ResultCache()
+    plan = QUERIES["q2.1"]
+    rc.insert(db, plan, oracle(db, plan))
+    assert rc.lookup(db, plan) is not None
+    rng = np.random.default_rng(0)
+    ST.append_rows(db.lineorder,
+                   {c: rng.integers(1, 50, 8).astype(np.int32)
+                    for c in db.lineorder.columns})
+    # every cached grid scanned the pre-delta fact: all gone
+    assert rc.lookup(db, plan) is None
+    assert len(rc) == 0
+    assert rc.stats()["invalidations"] == 1
+
+
+def test_different_database_object_invalidates():
+    db2 = ssb.generate(sf=0.005, seed=29)
+    rc = RC.ResultCache()
+    plan = QUERIES["q2.1"]
+    rc.insert(DB, plan, oracle(DB, plan))
+    assert rc.lookup(db2, plan) is None     # rebinds, never cross-serves
+    assert rc.lookup(DB, plan) is None      # old binding was dropped too
+
+
+def test_lru_eviction_caps_entries():
+    rc = RC.ResultCache(max_entries=2)
+    names = ["q1.1", "q1.2", "q1.3"]
+    for n in names:
+        rc.insert(DB, QUERIES[n], oracle(DB, QUERIES[n]))
+    assert len(rc) == 2
+    assert rc.lookup(DB, QUERIES["q1.1"]) is None       # oldest out
+    assert rc.lookup(DB, QUERIES["q1.3"]) is not None
+    assert rc.stats()["evictions"] == 1
+
+
+def test_clear_reports_count():
+    rc = warm_cache()
+    n = len(rc)
+    assert rc.clear() == n == len(QUERIES)
+    assert len(rc) == 0
