@@ -32,6 +32,11 @@ class Hardware:
     # partition-at-a-time loop's O(2^bits) dispatches against the fused
     # single-launch probe.
     launch_overhead_s: float = 0.0
+    # measured per-partition byte budget for the partitioned join's
+    # radix depth (repro.sql.tune sweeps part_bits and expresses the
+    # winner as the budget that reproduces it).  None -> the static
+    # model default (repro.sql.model.PART_BUDGET_BYTES / cache_size).
+    part_budget_bytes: Optional[float] = None
 
     @property
     def interconnect_gbps(self) -> Optional[float]:

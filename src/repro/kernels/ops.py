@@ -160,32 +160,52 @@ def part_probe(keys, rowids, groups, offs, counts, htk, htv, mult,
 _LSB_IDX_BITS = 22          # probe sides up to 2^22 rows ride one int32
 
 
-def _lsb_partition_multi(keys, vals, bits: int):
-    """Stable low-bit shuffle for the jitted host path: ``bits`` 1-bit
-    LSB passes over a single packed (bucket << idx_bits | position)
-    int32, one cumsum + one scatter each, then one gather per column.
-    Equivalent to ``ref.partition_multi(..., start_bit=0)`` (tested
-    against it) but ~4x faster than XLA's stable sort on CPU — the
-    shuffle is the shared cost of every partitioned join, so it decides
-    how much of the fused kernel's dispatch win survives end to end."""
+def _lsb_partition_multi(keys, vals, bits: int, digit: int = 1):
+    """Stable low-bit shuffle for the jitted host path: LSD passes of
+    ``digit`` bits each over a single packed (bucket << idx_bits |
+    position) int32 — a counting sort of 2^digit buckets (one cumsum per
+    bucket) + one scatter per pass, then one gather per column.
+    Equivalent to ``ref.partition_multi(..., start_bit=0)`` for every
+    digit width (tested against it) but ~4x faster than XLA's stable
+    sort on CPU — the shuffle is the shared cost of every partitioned
+    join, so it decides how much of the fused kernel's dispatch win
+    survives end to end.
+
+    ``digit`` trades cumsums for scatters: a d-bit pass costs 2^d
+    cumsums but covers d bits with ONE scatter, so wider digits halve
+    the scatter traffic.  The empirical winner is hardware-specific
+    (scatter-vs-scan throughput), which is why ``repro.sql.tune`` sweeps
+    it; ``digit=1`` is byte-for-byte the pre-tuner pass sequence."""
     n = keys.shape[0]
     if n > (1 << _LSB_IDX_BITS):        # fall back to the sort-based oracle
         return _ref.partition_multi(keys, vals, 0, bits)
     iota = jnp.arange(n, dtype=jnp.int32)
     comb = ((keys & ((1 << bits) - 1)) << _LSB_IDX_BITS) | iota
-    for s in range(bits):
-        bit = (comb >> (_LSB_IDX_BITS + s)) & 1
-        c0 = jnp.cumsum(1 - bit)
-        pos = jnp.where(bit == 0, c0 - 1, c0[-1] + iota - c0)
+    s = 0
+    while s < bits:
+        d = min(max(digit, 1), bits - s)
+        if d == 1:
+            bit = (comb >> (_LSB_IDX_BITS + s)) & 1
+            c0 = jnp.cumsum(1 - bit)
+            pos = jnp.where(bit == 0, c0 - 1, c0[-1] + iota - c0)
+        else:
+            dig = (comb >> (_LSB_IDX_BITS + s)) & ((1 << d) - 1)
+            pos = jnp.zeros(n, jnp.int32)
+            base = jnp.int32(0)
+            for b in range(1 << d):
+                c = jnp.cumsum((dig == b).astype(jnp.int32))
+                pos = jnp.where(dig == b, base + c - 1, pos)
+                base = base + c[-1]
         comb = jnp.zeros_like(comb).at[pos].set(comb)
+        s += d
     idx = comb & ((1 << _LSB_IDX_BITS) - 1)
     return keys[idx], tuple(v[idx] for v in vals)
 
 
 @functools.partial(jax.jit, static_argnames=("bits", "kernel", "tile",
-                                             "width"))
+                                             "width", "digit"))
 def _part_join_jit(col, rowids, groups, htk, htv, mult, ref, *, bits: int,
-                   kernel: bool, tile: int, width: int):
+                   kernel: bool, tile: int, width: int, digit: int):
     """The whole partitioned join step traced as ONE executable:
     FK-column gather (+ in-register bit-unpack when the column is
     packed) -> multi-payload radix shuffle -> device-side boundary
@@ -205,7 +225,8 @@ def _part_join_jit(col, rowids, groups, htk, htv, mult, ref, *, bits: int,
         offs = (jnp.cumsum(counts) - counts).astype(jnp.int32)
         return _pp.part_probe(outk, orow, ogrp, offs, counts, htk, htv,
                               mult, tile=tile)
-    outk, (orow, ogrp) = _lsb_partition_multi(keys, (rowids, groups), bits)
+    outk, (orow, ogrp) = _lsb_partition_multi(keys, (rowids, groups), bits,
+                                              digit)
     # boundaries by binary search: the shuffled keys' buckets are already
     # ascending, so 2^bits searchsorteds beat a scatter-add histogram
     buckets = outk & jnp.int32((1 << bits) - 1)
@@ -219,7 +240,7 @@ def _part_join_jit(col, rowids, groups, htk, htv, mult, ref, *, bits: int,
 
 def part_join(col, rowids, groups, htk, htv, mult, bits: int,
               mode: str = "auto", tile: int = DEFAULT_TILE,
-              width: int = 32, ref=0):
+              width: int = 32, ref=0, digit: int = 1):
     """Fused radix-partitioned join: gather the live rows' FK keys from
     ``col``, partition them by the key's low ``bits`` bits (rowid +
     running group id ride the shuffle), then probe every partition
@@ -235,7 +256,11 @@ def part_join(col, rowids, groups, htk, htv, mult, bits: int,
     The probe side is pow2-padded BEFORE the shuffle so XLA compiles
     O(log n) shapes across query cardinalities; pad rows carry
     ``rowid = -1`` (the probe's dead-row sentinel) so wherever the
-    shuffle buckets them they can never contribute a match."""
+    shuffle buckets them they can never contribute a match.
+
+    ``digit`` is the host shuffle's LSD pass width
+    (:func:`_lsb_partition_multi`); the kernel path partitions in one
+    ``bits``-wide pass and ignores it."""
     n = rowids.shape[0]
     if n == 0:
         z = jnp.zeros((0,), jnp.int32)
@@ -246,7 +271,8 @@ def part_join(col, rowids, groups, htk, htv, mult, bits: int,
     return _part_join_jit(col, rowids, groups, htk, htv,
                           jnp.asarray(mult, jnp.int32),
                           jnp.asarray(ref, jnp.int32), bits=bits,
-                          kernel=_use_kernel(mode), tile=tile, width=width)
+                          kernel=_use_kernel(mode), tile=tile, width=width,
+                          digit=digit)
 
 
 def radix_sort(keys, vals, mode: str = "auto", r: int = 8,

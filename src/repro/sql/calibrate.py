@@ -162,13 +162,31 @@ def _measure_interconnect(elems: int = 1 << 20) -> Optional[float]:
 # ---------------------------------------------------------------------------
 
 
-def cache_path(backend: Optional[str] = None) -> str:
-    """Per-backend calibration cache file.  Overridable for tests/CI via
-    ``REPRO_CALIB_CACHE`` (a directory)."""
-    backend = backend or jax.default_backend()
-    base = os.environ.get("REPRO_CALIB_CACHE") or os.path.join(
+def cache_dir() -> str:
+    """Directory holding calibration + tuning caches.  Overridable for
+    tests/CI via ``REPRO_CALIB_CACHE``."""
+    return os.environ.get("REPRO_CALIB_CACHE") or os.path.join(
         os.path.expanduser("~"), ".cache", "repro")
-    return os.path.join(base, f"calibration-{backend}.json")
+
+
+def backend_fingerprint(backend: Optional[str] = None) -> str:
+    """Cache-key suffix identifying what was measured: backend name +
+    jax version + device kind.  A driver/library upgrade or a different
+    accelerator model changes the fingerprint, so stale measurements are
+    re-taken instead of silently served (the old flat
+    ``calibration-{backend}.json`` key collided across all of those)."""
+    import re
+    backend = backend or jax.default_backend()
+    kind = jax.devices()[0].device_kind if jax.devices() else "unknown"
+    kind = re.sub(r"[^A-Za-z0-9._-]+", "-", kind).strip("-").lower()
+    return f"{backend}-jax{jax.__version__}-{kind}"
+
+
+def cache_path(backend: Optional[str] = None) -> str:
+    """Per-(backend, jax version, device kind) calibration cache file.
+    Overridable for tests/CI via ``REPRO_CALIB_CACHE`` (a directory)."""
+    return os.path.join(cache_dir(),
+                        f"calibration-{backend_fingerprint(backend)}.json")
 
 
 # in-process memo over the disk cache: ``model.default_hardware()`` sits

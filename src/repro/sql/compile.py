@@ -88,6 +88,7 @@ from jax.sharding import PartitionSpec
 
 from repro.kernels import ops
 from repro.kernels.common import DEFAULT_TILE
+from repro.sql import tune as TN
 from repro.sql import faults as FLT
 from repro.sql import hashtable as HT
 from repro.sql import morsel as MS
@@ -116,6 +117,55 @@ def reset_launch_stats() -> Dict[str, int]:
     for k in LAUNCH_STATS:
         LAUNCH_STATS[k] = 0
     return prev
+
+
+# per-family record of the launch configuration the last execution
+# actually used (tile, radix width, partition depth, and where each came
+# from: an explicit ``tile=`` argument, the tune store, or the shipped
+# default) — ``CompiledQuery.execute`` snapshots it onto the query so
+# ``QueryResult`` can report what ran, mirroring LAUNCH_STATS' pattern.
+LAUNCH_CONFIG: Dict[str, Dict] = {}
+
+
+def reset_launch_config() -> Dict[str, Dict]:
+    """Clear ``LAUNCH_CONFIG`` and return the previous record."""
+    prev = dict(LAUNCH_CONFIG)
+    LAUNCH_CONFIG.clear()
+    return prev
+
+
+def snapshot_launch_config() -> Dict[str, Dict]:
+    """Deep-enough copy of the current per-family launch record."""
+    return {k: dict(v) for k, v in LAUNCH_CONFIG.items()}
+
+
+def _tile_or_default(tile: Optional[int]) -> int:
+    """Tile for call sites with no tuned family (monolithic probe,
+    project, group_sum): explicit wins, else the shipped default."""
+    return DEFAULT_TILE if tile is None else int(tile)
+
+
+def _launch(family: str, tile: Optional[int], width: int = 32,
+            **extra) -> int:
+    """Resolve + record one kernel family's launch tile.  An explicit
+    ``tile=`` argument always wins (tests and A/B sweeps stay
+    deterministic); ``None`` consults the tune store's winner for this
+    (family, packed-width bucket) and falls back to ``DEFAULT_TILE`` on
+    a cold store — byte-for-byte the pre-tuner launch.  The resolved
+    configuration (with any ``extra`` knobs: radix width, partition
+    depth) lands in ``LAUNCH_CONFIG`` for result reporting."""
+    if tile is not None:
+        t, src = int(tile), "explicit"
+    else:
+        store = TN.cached_store()
+        cfg = store.get(family, width) if store is not None else None
+        if cfg is not None:
+            t, src = cfg.tile, "tuned"
+        else:
+            t, src = DEFAULT_TILE, "default"
+    LAUNCH_CONFIG[family] = {"tile": t, "width": width, "source": src,
+                             **extra}
+    return t
 
 
 # ---------------------------------------------------------------------------
@@ -233,7 +283,8 @@ def _measure_streams(fact, proj):
     return m1, m2, widths, refs
 
 
-def _execute_fused(plan: P.Plan, db: ssb.Database, mode: str, tile: int,
+def _execute_fused(plan: P.Plan, db: ssb.Database, mode: str,
+                   tile: Optional[int],
                    cache: Optional[HT.HashTableCache],
                    fact=None,
                    prebuilt: Optional[List[jnp.ndarray]] = None
@@ -269,7 +320,8 @@ def _execute_fused(plan: P.Plan, db: ssb.Database, mode: str, tile: int,
     FLT.maybe_fault("kernel")
     out = ops.spja(pred_cols, pred_bounds, join_keys, join_tables, mults,
                    m1, m2, measure_op=proj.op, n_groups=plan.n_groups,
-                   mode=mode, tile=tile, pred_widths=pred_widths,
+                   mode=mode, tile=_launch("spja", tile),
+                   pred_widths=pred_widths,
                    key_widths=key_widths, key_refs=key_refs,
                    m_widths=m_widths, m_refs=m_refs, n_rows=fact.n_rows)
     return np.asarray(out)
@@ -293,7 +345,8 @@ def _fused_scan_cols(plan: P.Plan) -> List[str]:
     return cols
 
 
-def _fused_morsels(plan: P.Plan, db: ssb.Database, mode: str, tile: int,
+def _fused_morsels(plan: P.Plan, db: ssb.Database, mode: str,
+                   tile: Optional[int],
                    cache: Optional[HT.HashTableCache], morsel_bytes: int,
                    fact=None) -> Tuple[np.ndarray, MS.MorselReport]:
     """The fused lowering as a fold over the morsel stream: dim hash
@@ -330,7 +383,7 @@ def _fused_morsels(plan: P.Plan, db: ssb.Database, mode: str, tile: int,
 # ---------------------------------------------------------------------------
 
 
-def _execute_sharded(plan: P.Plan, db, mode: str, tile: int,
+def _execute_sharded(plan: P.Plan, db, mode: str, tile: Optional[int],
                      cache: Optional[HT.HashTableCache],
                      morsel_bytes: int = MS.DEFAULT_MORSEL_BYTES
                      ) -> Tuple[np.ndarray, List[float], int,
@@ -371,7 +424,7 @@ def _execute_sharded(plan: P.Plan, db, mode: str, tile: int,
     return SH.tree_merge(partials), times, db.n_shards, report
 
 
-def _execute_fused_map(plan: P.Plan, sdb, mode: str, tile: int,
+def _execute_fused_map(plan: P.Plan, sdb, mode: str, tile: Optional[int],
                        cache: Optional[HT.HashTableCache],
                        morsel_bytes: int = MS.DEFAULT_MORSEL_BYTES
                        ) -> Tuple[np.ndarray, List[float], int,
@@ -392,6 +445,7 @@ def _execute_fused_map(plan: P.Plan, sdb, mode: str, tile: int,
     partial grids sum on the host.  A single window is byte-for-byte
     the pre-refactor whole-shard launch (memoized stacked streams)."""
     mesh = sdb.mesh
+    tile = _launch("spja", tile)    # resolve once, outside shard_fn
     base_fact = getattr(sdb.base, sdb.fact)
     scan_cols = _fused_scan_cols(plan)
     # per-shard bytes-per-row of the scanned streams + validity mask
@@ -748,7 +802,7 @@ def _shared_prebuilt(plans: List[P.Plan], db,
 
 
 def execute_shared_morsels(plans: List[P.Plan], db: ssb.Database,
-                           mode: str = "auto", tile: int = DEFAULT_TILE,
+                           mode: str = "auto", tile: Optional[int] = None,
                            cache: Optional[HT.HashTableCache] = None,
                            pad_to: Optional[int] = None,
                            prebuilt: Optional[Dict[Tuple, Tuple]] = None,
@@ -765,6 +819,8 @@ def execute_shared_morsels(plans: List[P.Plan], db: ssb.Database,
     footprint so any member subset reuses one executable per pow2
     member bucket."""
     validate_wave(plans)
+    reset_launch_config()
+    tile = _launch("multi_spja", tile)
     anchor = anchor_for(plans, anchor)
     foot = list(plans) + list(anchor or [])
     col_ix, join_nodes, mcol_ix = shared_footprint(foot)
@@ -796,7 +852,7 @@ def execute_shared_morsels(plans: List[P.Plan], db: ssb.Database,
 
 
 def execute_shared(plans: List[P.Plan], db: ssb.Database,
-                   mode: str = "auto", tile: int = DEFAULT_TILE,
+                   mode: str = "auto", tile: Optional[int] = None,
                    cache: Optional[HT.HashTableCache] = None,
                    pad_to: Optional[int] = None,
                    prebuilt: Optional[Dict[Tuple, Tuple]] = None
@@ -817,7 +873,7 @@ def execute_shared(plans: List[P.Plan], db: ssb.Database,
 
 
 def execute_shared_sharded(plans: List[P.Plan], db,
-                           mode: str = "auto", tile: int = DEFAULT_TILE,
+                           mode: str = "auto", tile: Optional[int] = None,
                            cache: Optional[HT.HashTableCache] = None,
                            pad_to: Optional[int] = None,
                            prebuilt: Optional[Dict[Tuple, Tuple]] = None,
@@ -880,7 +936,7 @@ def _probe_whole(node: P.HashJoin, fact, db, rowids, group, mode, tile,
     FLT.maybe_fault("kernel")
     payload, sel, cnt = _probe_join_jit(
         keys, jnp.arange(rowids.shape[0], dtype=jnp.int32),
-        htk, htv, mode=mode, tile=tile)
+        htk, htv, mode=mode, tile=_tile_or_default(tile))
     cnt = int(cnt)
     sel = sel[:cnt]
     return rowids[sel], group[sel] + payload[:cnt] * jnp.int32(node.mult)
@@ -928,9 +984,12 @@ def _probe_part_fused(node: P.HashJoin, fact, db, rowids, group, mode,
     col, width, colref = ST.column_stream(fact, node.fact_col)
     LAUNCH_STATS["partition"] += 1      # the shuffle pass inside part_join
     LAUNCH_STATS["probe"] += 1          # the single fused probe launch
+    digit = TN.tuned_digit()            # host shuffle's tuned pass width
     outr, outg, cnt = ops.part_join(
         col, rowids, group, packed.htk, packed.htv, node.mult, bits,
-        mode=mode, tile=tile, width=width, ref=colref)
+        mode=mode, tile=_launch("part_probe", tile, bits=bits,
+                                digit=digit),
+        width=width, ref=colref, digit=digit)
     LAUNCH_STATS["host_syncs"] += 1
     cnt = int(cnt)                      # the one device->host sync
     return outr[:cnt], outg[:cnt]
@@ -957,7 +1016,8 @@ def _probe_part_loop(node: P.HashJoin, fact, db, rowids, group, mode,
     keys = ST.take(fact, node.fact_col, rowids)
     LAUNCH_STATS["partition"] += 1
     outk, (orow, ogrp) = ops.radix_partition_multi(
-        keys, (rowids, group), 0, bits, mode=mode, tile=tile)
+        keys, (rowids, group), 0, bits,
+        mode=mode, tile=_launch("partition_multi", tile, bits=bits))
     LAUNCH_STATS["host_syncs"] += 3
     outk_h = np.asarray(outk)
     orow_h = np.asarray(orow)
@@ -979,7 +1039,7 @@ def _probe_part_loop(node: P.HashJoin, fact, db, rowids, group, mode,
         LAUNCH_STATS["probe"] += 1
         payload, sel, cnt = _probe_join_jit(
             jnp.asarray(pk), jnp.arange(n_pad, dtype=jnp.int32),
-            htk, htv, mode=mode, tile=tile)
+            htk, htv, mode=mode, tile=_tile_or_default(tile))
         LAUNCH_STATS["host_syncs"] += 3
         cnt = int(cnt)
         if cnt == 0:
@@ -1004,7 +1064,8 @@ _JOIN_LOWERINGS = {
 }
 
 
-def _execute_chain(plan: P.Plan, db: ssb.Database, mode: str, tile: int,
+def _execute_chain(plan: P.Plan, db: ssb.Database, mode: str,
+                   tile: Optional[int],
                    cache: Optional[HT.HashTableCache],
                    join_mode: str = "opat", fact=None,
                    defer_order: bool = False,
@@ -1051,7 +1112,7 @@ def _execute_chain(plan: P.Plan, db: ssb.Database, mode: str, tile: int,
                         words, phys, _ = ST.column_stream(fact, col)
                         out, cnt = ops.select_scan_packed(
                             words, rowids, lo2, hi2, phys, mode=mode,
-                            tile=tile)
+                            tile=_launch("select_scan", tile, width=phys))
                         out = out[:int(cnt)]
                         group = group[out]  # identity rowids: value==pos
                         rowids = out
@@ -1063,7 +1124,8 @@ def _execute_chain(plan: P.Plan, db: ssb.Database, mode: str, tile: int,
                     # the fused path avoids
                     sel, cnt = ops.select_scan(
                         x, jnp.arange(rowids.shape[0], dtype=jnp.int32),
-                        lo, hi, mode=mode, tile=tile)
+                        lo, hi, mode=mode,
+                        tile=_launch("select_scan", tile))
                     sel = sel[:int(cnt)]
                     rowids = rowids[sel]
                     group = group[sel]
@@ -1085,7 +1147,8 @@ def _execute_chain(plan: P.Plan, db: ssb.Database, mode: str, tile: int,
             elif node.op == "sub":
                 m2 = ST.take(fact, node.m2, rowids).astype(jnp.float32)
                 m = m if empty else ops.project(m, m2, 1.0, -1.0,
-                                                mode=mode, tile=tile)
+                                                mode=mode,
+                                                tile=_tile_or_default(tile))
             measure = m
         elif isinstance(node, P.GroupAgg):
             if partial_agg:
@@ -1098,13 +1161,16 @@ def _execute_chain(plan: P.Plan, db: ssb.Database, mode: str, tile: int,
             if empty:
                 return np.zeros(node.n_groups, np.float32)
             out = ops.group_sum(group, measure, node.n_groups,
-                                mode=mode, tile=tile)
+                                mode=mode, tile=_tile_or_default(tile))
             return np.asarray(out)
         elif isinstance(node, P.OrderBy):
             if defer_order or empty:
                 break
             keys = ST.take(fact, node.key_col, rowids)
-            _, rowids = ops.radix_sort(keys, rowids, mode=mode, tile=tile)
+            r = TN.tuned_r()
+            _, rowids = ops.radix_sort(keys, rowids, mode=mode, r=r,
+                                       tile=_launch("radix_sort", tile,
+                                                    r=r))
         else:
             raise TypeError(f"{plan.name}: cannot lower node {node!r}")
 
@@ -1139,7 +1205,8 @@ def _chain_scan_cols(plan: P.Plan) -> Optional[List[str]]:
     return cols
 
 
-def _chain_morsels(plan: P.Plan, db: ssb.Database, mode: str, tile: int,
+def _chain_morsels(plan: P.Plan, db: ssb.Database, mode: str,
+                   tile: Optional[int],
                    cache: Optional[HT.HashTableCache], join_mode: str,
                    morsel_bytes: int
                    ) -> Tuple[np.ndarray, MS.MorselReport]:
@@ -1193,8 +1260,10 @@ def _chain_morsels(plan: P.Plan, db: ssb.Database, mode: str, tile: int,
     if order_node is None or len(rowids) == 0:
         return rowids, report
     keys = np.concatenate([p[1] for p in pieces])
+    r = TN.tuned_r()
     _, out = ops.radix_sort(jnp.asarray(keys), jnp.asarray(rowids),
-                            mode=mode, tile=tile)
+                            mode=mode, r=r,
+                            tile=_launch("radix_sort", tile, r=r))
     return np.asarray(out), report
 
 
@@ -1241,15 +1310,31 @@ class CompiledQuery:
     shard_times_s: Optional[List[float]] = field(default=None, repr=False)
     n_morsels: Optional[int] = None
     peak_resident_bytes: Optional[int] = None
+    # per-family launch configuration the last execute actually used
+    # (tile / radix width / partition depth + source: explicit argument,
+    # tune store, or shipped default) — snapshot of LAUNCH_CONFIG
+    launch_config: Optional[Dict[str, Dict]] = field(default=None,
+                                                     repr=False)
 
     def _note(self, report: MS.MorselReport) -> None:
         self.n_morsels = report.n_morsels
         self.peak_resident_bytes = report.peak_resident_bytes
 
     def execute(self, db: ssb.Database, mode: str = "auto",
-                tile: int = DEFAULT_TILE,
+                tile: Optional[int] = None,
                 cache: Optional[HT.HashTableCache] = None,
                 morsel_bytes: int = MS.DEFAULT_MORSEL_BYTES) -> np.ndarray:
+        """``tile=None`` launches every kernel at its tuned (or default)
+        configuration; an explicit tile pins every family to it."""
+        reset_launch_config()
+        try:
+            return self._execute(db, mode, tile, cache, morsel_bytes)
+        finally:
+            self.launch_config = snapshot_launch_config()
+
+    def _execute(self, db: ssb.Database, mode: str, tile: Optional[int],
+                 cache: Optional[HT.HashTableCache],
+                 morsel_bytes: int) -> np.ndarray:
         strategy = self.strategy
         if strategy == "auto":
             from repro.sql import model as M

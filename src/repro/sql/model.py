@@ -94,12 +94,15 @@ SAMPLE_STRIDE_TARGET = 1 << 16          # fact rows sampled for selectivity
 def default_hardware() -> Hardware:
     """The Hardware ``auto``/fig8 predict with: the measured-bandwidth
     calibration when one is cached on disk for this backend
-    (``repro.sql.calibrate``), else the static constants.  Loading the
-    cache is a one-time cheap JSON read — calibration itself only runs
-    when something (fig8, the calibrate CLI) asks for it explicitly."""
-    from repro.sql import calibrate
+    (``repro.sql.calibrate``), else the static constants, with the
+    autotuner's feedback (``repro.sql.tune``: effective scan bandwidth
+    at the best tile, measured partitioned-join byte budget) folded on
+    top when a tuning cache exists.  Loading the caches is a one-time
+    cheap JSON read — neither calibration nor the sweep runs unless
+    something (fig8, the CLIs) asks explicitly."""
+    from repro.sql import calibrate, tune
     base = TPU_V5E if jax.default_backend() == "tpu" else HOST
-    return calibrate.cached_hardware(base) or base
+    return tune.tuned_hardware(calibrate.cached_hardware(base) or base)
 
 
 def ht_bytes(n_build: int) -> float:
@@ -115,9 +118,14 @@ def part_bits(n_build: int, hw: Optional[Hardware] = None) -> int:
     partitions; *whether* that is worth doing is the model comparison's
     job, not a silent fallback).  The execute path and the cost model
     both call this, so the model prices exactly the partitioning that
-    would run."""
+    would run.  A tuned hardware carries the *measured* per-partition
+    budget (``repro.sql.tune``'s part_bits sweep expressed as bytes),
+    which then overrides the static heuristic."""
     hw = hw or default_hardware()
-    budget = min(PART_BUDGET_BYTES, int(hw.cache_size) // 4)
+    if hw.part_budget_bytes:
+        budget = int(hw.part_budget_bytes)
+    else:
+        budget = min(PART_BUDGET_BYTES, int(hw.cache_size) // 4)
     ratio = ht_bytes(n_build) / max(budget, 1)
     bits = int(np.ceil(np.log2(ratio))) if ratio > 1.0 else 0
     return int(np.clip(bits, 1, MAX_PART_BITS))

@@ -90,7 +90,6 @@ from typing import Dict, List, Optional, Tuple, Union
 
 import numpy as np
 
-from repro.kernels.common import DEFAULT_TILE
 from repro.sql import compile as C
 from repro.sql import resilience as RS
 from repro.sql import result_cache as RC
@@ -149,6 +148,12 @@ class QueryResult:
     #   the morsel stream guarantees (<= 2 x the server's morsel budget)
     cache_hit: bool = False             # answered from the result cache
     #   (strategy == "cached": no scan, no kernel, no hash-table build)
+    launch_config: Optional[Dict[str, Dict]] = None  # per-kernel-family
+    #   launch configuration the execution actually used (tile, radix
+    #   width, partition depth, and whether each came from an explicit
+    #   tile argument, the tune store, or the shipped default) —
+    #   compile.LAUNCH_CONFIG's snapshot; None for cached/ref answers
+    #   (no kernel launched)
     subsumption_hit: bool = False       # the cache hit was a *narrower*
     #   query answered by masking a containing cached grid — implies
     #   cache_hit; benchmarks assert these answers against the oracle
@@ -172,7 +177,7 @@ class QueryServer:
     DEFAULT_ACC_BUDGET = 1 << 21
 
     def __init__(self, db: ssb.Database, mode: str = "ref",
-                 tile: int = DEFAULT_TILE, max_batch: int = 8,
+                 tile: Optional[int] = None, max_batch: int = 8,
                  acc_budget_bytes: int = DEFAULT_ACC_BUDGET,
                  morsel_bytes: int = C.MS.DEFAULT_MORSEL_BYTES,
                  resident_budget_bytes: Optional[int] = None,
@@ -182,6 +187,9 @@ class QueryServer:
                  anchor_plans: Optional[List[Plan]] = None):
         self.db = db
         self.mode = mode
+        # None = every kernel family launches at its tuned configuration
+        # (repro.sql.tune; DEFAULT_TILE on a cold store); an explicit
+        # tile pins every family — tests and A/B sweeps stay deterministic
         self.tile = tile
         self.max_batch = max_batch
         self.acc_budget_bytes = acc_budget_bytes
@@ -494,6 +502,7 @@ class QueryServer:
         dc = SH.shard_count(self.db) if sharded else None
         shard_times: Optional[List[float]] = None
         report: Optional[C.MS.MorselReport] = None
+        wave_config: Optional[Dict[str, Dict]] = None
 
         def member_result(req, result, error, dt):
             self.stats["queries"] += 1
@@ -518,7 +527,8 @@ class QueryServer:
                 device_count=dc, shard_times_s=shard_times,
                 n_morsels=None if report is None else report.n_morsels,
                 peak_resident_bytes=(None if report is None
-                                     else report.peak_resident_bytes))
+                                     else report.peak_resident_bytes),
+                launch_config=wave_config)
 
         # pow2 member-count buckets (like the LM server's length buckets):
         # padded slots are inert but not free, so a small wave must not
@@ -538,6 +548,7 @@ class QueryServer:
                     tile=self.tile, cache=self.cache, pad_to=pad_to,
                     prebuilt=prebuilt, morsel_bytes=self.morsel_bytes,
                     anchor=self.anchor_plans)
+            wave_config = C.snapshot_launch_config()
         except Exception as e:          # wave fault: members retry solo
             err = RS.classify_error(e, during="execute")
             if isinstance(err, RS.MemoryPressure):
@@ -661,7 +672,9 @@ class QueryServer:
                 shard_times_s=None if cq is None else cq.shard_times_s,
                 n_morsels=None if cq is None else cq.n_morsels,
                 peak_resident_bytes=(None if cq is None
-                                     else cq.peak_resident_bytes))
+                                     else cq.peak_resident_bytes),
+                launch_config=(None if cq is None
+                               else cq.launch_config))
 
         ladder = RS.ladder_for(req.strategy)
         predictions: Optional[Dict[str, float]] = None

@@ -360,6 +360,9 @@ class ServingLoop:
         """Compile every executable the anchored serving path can form
         — one per pow2 member bucket up to ``max_batch`` — by running
         throwaway waves drawn from ``warm_pool`` through the server.
+        The server's default ``tile=None`` means each bucket compiles at
+        its TUNED launch configuration (``repro.sql.tune``), so the
+        first real request hits a warm executable with the right tile.
         The result cache is detached for the duration (prewarm must not
         pre-answer real traffic) and the wave results are discarded.
         Returns the number of buckets warmed; 0 without a pool.  Call
